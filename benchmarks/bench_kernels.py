@@ -1,0 +1,48 @@
+"""Compute-layer micro-benchmarks on CPU wall-clock: the XLA blockwise
+(flash-style) attention versus the naive full-logit attention, and the
+scanned SSD versus the sequential recurrence.  (Pallas kernels are validated
+in interpret mode — their perf story is the TPU roofline, not CPU time.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.models.attention import causal_mask, dot_product_attention
+from repro.models.blockwise import flash_attention
+from repro.models.mamba2 import ssd_chunked, ssd_reference
+
+
+def run():
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B, S, H, Hkv, D = 1, 1024, 8, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    pos = jnp.arange(S)
+
+    f_block = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True))
+    f_naive = jax.jit(lambda q, k, v: dot_product_attention(
+        q, k, v, mask=causal_mask(pos, pos)[None, None, None]))
+    _, t_block = timed(lambda: f_block(q, k, v).block_until_ready())
+    _, t_naive = timed(lambda: f_naive(q, k, v).block_until_ready())
+    emit("attention_blockwise_1k", t_block, f"naive={t_naive:.0f}us")
+
+    b, l, h, p, g, n = 1, 2048, 8, 64, 1, 64
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, l, g, n))
+    cm = jax.random.normal(ks[4], (b, l, g, n))
+    f_chunk = jax.jit(lambda *t: ssd_chunked(*t, chunk=256)[0])
+    f_seq = jax.jit(lambda *t: ssd_reference(*t)[0])
+    bm_h = jnp.repeat(bm, h // g, 2)
+    cm_h = jnp.repeat(cm, h // g, 2)
+    _, t_chunk = timed(lambda: f_chunk(x, dt, a, bm, cm).block_until_ready())
+    _, t_seq = timed(lambda: f_seq(x, dt, a, bm_h, cm_h).block_until_ready())
+    emit("ssd_chunked_2k", t_chunk,
+         f"sequential={t_seq:.0f}us speedup={t_seq/t_chunk:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

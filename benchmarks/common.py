@@ -1,0 +1,28 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """The run.py CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_artifact(name: str, payload: dict):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    fn(*args, **kw)  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6  # microseconds

@@ -1,0 +1,26 @@
+"""Inject the generated roofline tables into EXPERIMENTS.md placeholders."""
+import re
+import sys
+
+from benchmarks.roofline_report import table
+
+MARKERS = {
+    "<!-- ROOFLINE_BASELINE_SP -->": ("pod16x16", ""),
+    "<!-- ROOFLINE_OPT_SP -->": ("pod16x16", "__opt"),
+}
+
+
+def main(path="EXPERIMENTS.md"):
+    src = open(path).read()
+    for marker, (mesh, suffix) in MARKERS.items():
+        t = table(mesh, suffix)
+        block = f"{marker}\n{t}\n<!-- /generated -->"
+        # replace marker (+ any previously generated block)
+        pat = re.escape(marker) + r"(?:\n.*?<!-- /generated -->)?"
+        src = re.sub(pat, block, src, flags=re.S)
+    open(path, "w").write(src)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

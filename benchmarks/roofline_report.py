@@ -1,0 +1,85 @@
+"""Aggregate the dry-run artifacts into the roofline table
+(EXPERIMENTS.md §Roofline): per (arch x shape x mesh) the three terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and a one-line lever."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ARTIFACTS, emit
+
+LEVERS = {
+    ("memory", "train"): "flash-attention custom VJP removes the O(S^2) "
+                         "backward residual traffic",
+    ("memory", "prefill"): "fused flash kernel keeps tiles in VMEM "
+                           "(one HBM pass over KV)",
+    ("memory", "decode"): "KV-cache is the floor: quantise cache to int8 / "
+                          "shard heads wider",
+    ("collective", "train"): "shard-aware layout: avoid row-parallel "
+                             "fallback allreduces; overlap grad reduce",
+    ("collective", "prefill"): "reorder TP collectives; all-gather KV once "
+                               "per layer instead of per block",
+    ("collective", "decode"): "decode is latency-bound: fuse the per-layer "
+                              "allreduce pair into one",
+    ("compute", "train"): "block-skip causal tiles (Pallas) to cut masked "
+                          "FLOPs; MXU-align tile shapes",
+    ("compute", "prefill"): "causal block skipping halves attention FLOPs",
+    ("compute", "decode"): "compute floor reached: batch requests wider",
+}
+
+
+def load_records(mesh: str = None, suffix: str = ""):
+    """suffix='' -> baseline records only; suffix='__opt' -> that variant."""
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ARTIFACTS, "*__*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        tag = r.get("tag", "")
+        if mesh and not tag.endswith(f"__{mesh}{suffix}"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(mesh: str = "pod16x16", suffix: str = "") -> str:
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "GiB/dev | useful FLOPs | lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    kind_of = {"train_4k": "train", "prefill_32k": "prefill",
+               "decode_32k": "decode", "long_500k": "decode"}
+    for r in load_records(mesh, suffix):
+        if r["status"] == "SKIP":
+            rows.append(f"| {r['tag'].split('__')[0]} | "
+                        f"{r['tag'].split('__')[1]} | — | — | — | SKIP | — | — "
+                        f"| {r['reason'][:60]} |")
+            continue
+        ro = r["roofline"]
+        lever = LEVERS.get((ro["dominant"], kind_of[r["shape"]]), "")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.3f} | "
+            f"{ro['memory_s']:.3f} | {ro['collective_s']:.3f} | "
+            f"**{ro['dominant']}** | {r['per_device_bytes']/2**30:.1f} | "
+            f"{ro['useful_flops_ratio']*100:.0f}% | {lever} |")
+    return "\n".join(rows)
+
+
+def run():
+    recs = load_records("pod16x16")
+    ok = [r for r in recs if r["status"] == "OK"]
+    skip = [r for r in recs if r["status"] == "SKIP"]
+    emit("roofline_report", 0.0,
+         f"single-pod pairs: {len(ok)} OK / {len(skip)} SKIP "
+         f"(see EXPERIMENTS.md §Roofline)")
+    mp = load_records("pod2x16x16")
+    if mp:
+        ok_mp = [r for r in mp if r["status"] == "OK"]
+        emit("roofline_report_multipod", 0.0,
+             f"multi-pod pairs: {len(ok_mp)} OK / "
+             f"{len([r for r in mp if r['status'] == 'SKIP'])} SKIP")
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,46 @@
+"""Benchmark harness — one entry per paper table/figure plus the roofline
+report.  Prints ``name,us_per_call,derived`` CSV (the repo contract).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig3 fig4  # subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+BENCHES = {
+    # paper artefacts
+    "fig3": ("benchmarks.bench_bound_sweep", "Fig. 3 bound-vs-block-size sweep"),
+    "fig4": ("benchmarks.bench_training", "Fig. 4 training curves + 3.8% claim"),
+    "pipeline": ("benchmarks.bench_pipeline_vs_sequential",
+                 "pipelined vs sequential (motivating claim)"),
+    # framework layers
+    "kernels": ("benchmarks.bench_kernels", "compute-layer micro-bench"),
+    "streaming_llm": ("benchmarks.bench_streaming_llm",
+                      "beyond-paper: schedule on LLM pretraining"),
+    "extensions": ("benchmarks.bench_extensions",
+                   "paper Sec.-6 extensions: Th1 MC, noisy channel, multi-device"),
+    # roofline (reads dry-run artifacts)
+    "roofline": ("benchmarks.roofline_report", "roofline aggregation"),
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = []
+    for key in wanted:
+        mod_name, _desc = BENCHES[key]
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception:
+            failures.append(key)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

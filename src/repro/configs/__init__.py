@@ -1,0 +1,31 @@
+from repro.configs.base import (
+    ArchConfig,
+    InputShape,
+    INPUT_SHAPES,
+    MLAConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    list_archs,
+    reduced,
+    register,
+)
+
+ASSIGNED_ARCHS = [
+    "llama3.2-1b",
+    "mamba2-780m",
+    "internvl2-2b",
+    "deepseek-moe-16b",
+    "gemma2-9b",
+    "whisper-tiny",
+    "zamba2-1.2b",
+    "minicpm3-4b",
+    "mixtral-8x7b",
+    "yi-34b",
+]
+
+__all__ = [
+    "ArchConfig", "InputShape", "INPUT_SHAPES", "MLAConfig", "MoEConfig",
+    "SSMConfig", "get_config", "list_archs", "reduced", "register",
+    "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,348 @@
+"""Architecture & input-shape config system.
+
+Every assigned architecture is a frozen :class:`ArchConfig` registered under its
+public id (``--arch <id>``).  ``reduced()`` derives the CPU smoke-test variant
+(2 layers, d_model<=512, <=4 experts) from the same family definition, so smoke
+tests exercise the identical code path as the full config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3 style)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block parameters."""
+
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 256
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 1408
+    num_shared_experts: int = 0
+    # layers [0, first_dense_layers) use a dense FFN of size first_dense_d_ff
+    first_dense_layers: int = 0
+    first_dense_d_ff: int = 0
+    router_aux_loss_coef: float = 0.01
+    router_jitter: float = 0.0
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | ssm | moe | vlm | audio | hybrid
+    source: str  # citation bracket from the assignment
+
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: Optional[int] = None  # default: d_model // num_heads
+    d_ff: int = 512
+    vocab_size: int = 1024
+
+    # attention variants -----------------------------------------------------
+    attention_type: str = "gqa"  # gqa | mla | none
+    sliding_window: Optional[int] = None  # SWA window (mixtral / gemma2 local)
+    local_global_period: int = 0  # gemma2: layer i is local iff i % period != period-1
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    # Perf (§Perf H2/H3): pad the q-head axis to this count with dead
+    # (masked, zero-gradient) head slots so heads divide the 16-way model
+    # axis.  Function and trained parameters are EXACTLY the unpadded
+    # architecture; padding is a sharding-layout trick.  GQA archs pad
+    # per-group (padded_heads must be num_kv_heads * ceil-grouped).
+    padded_heads: Optional[int] = None
+    rope_theta: float = 10_000.0
+    # long-context decode strategy: "full" | "window" | "window_global" | "ssm"
+    long_context_variant: str = "full"
+
+    # block layout -----------------------------------------------------------
+    # "attn" = attention+MLP block, "mamba" = mamba2 block.
+    # hybrid archs interleave: shared attention every `attn_every` mamba blocks.
+    block_kind: str = "attn"  # attn | mamba | hybrid
+    attn_every: int = 0  # hybrid: 1 shared attn block per `attn_every` mamba blocks
+
+    # sub-configs --------------------------------------------------------------
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    moe: Optional[MoEConfig] = None
+
+    # encoder/decoder (whisper) -----------------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_frames: int = 1500  # stub frontend output length
+
+    # modality stub frontends ---------------------------------------------------
+    modality: str = "text"  # text | vision | audio
+    num_patches: int = 0  # vlm: patch-embedding count prepended to the text
+
+    norm_eps: float = 1e-5
+    grad_accum: int = 1  # microbatch accumulation steps for train_4k
+    tie_embeddings: bool = False
+    scale_embed: bool = False  # gemma-style sqrt(d_model) embedding scale
+    dtype: str = "bfloat16"
+
+    # paper-core schedule defaults (normalised units, see core/protocol.py)
+    tau_p: float = 1.0
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def q_heads_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    def supports_shape(self, shape: InputShape) -> Tuple[bool, str]:
+        """Whether this arch runs the given input shape (with skip reason)."""
+        if shape.name == "long_500k":
+            if self.long_context_variant == "full":
+                return False, (
+                    "pure full-attention arch: 500k decode requires a sub-quadratic "
+                    "variant we do not fake (see DESIGN.md §6)"
+                )
+        return True, ""
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS = 6*N*D)."""
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k experts only)."""
+        return _param_count(self, active_only=True)
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    if cfg.attention_type == "mla":
+        m = cfg.mla
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        p = d * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * qk_head
+        p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+        p += m.kv_lora_rank * cfg.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+        p += cfg.num_heads * m.v_head_dim * d
+        return p
+    hd = cfg.head_dim
+    p = d * cfg.num_heads * hd  # q
+    p += 2 * d * cfg.num_kv_heads * hd  # k, v
+    p += cfg.num_heads * hd * d  # o
+    return p
+
+
+def _mlp_params(d_model: int, d_ff: int) -> int:
+    return 3 * d_model * d_ff  # gated (SwiGLU-style): gate, up, down
+
+
+def _mamba_params(cfg: ArchConfig) -> int:
+    s = cfg.ssm
+    d, di = cfg.d_model, s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = di + 2 * s.n_groups * s.state_dim
+    p = d * (2 * di + 2 * s.n_groups * s.state_dim + nh)  # in_proj(z,x,B,C,dt)
+    p += conv_dim * s.conv_width  # depthwise conv
+    p += 2 * nh  # A_log, D
+    p += di * d  # out_proj
+    return p
+
+
+def _layer_kinds(cfg: ArchConfig) -> list:
+    """Per-layer kind list: 'attn' / 'mamba' / 'moe' / 'dense_first'."""
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.block_kind == "mamba":
+            kinds.append("mamba")
+        elif cfg.block_kind == "hybrid":
+            # one shared attention block per attn_every mamba blocks
+            kinds.append("hybrid_attn" if (i % cfg.attn_every == 0) else "mamba")
+        elif cfg.moe is not None:
+            kinds.append("dense_first" if i < cfg.moe.first_dense_layers else "moe")
+        else:
+            kinds.append("attn")
+    return kinds
+
+
+def _param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    d = cfg.d_model
+    total = cfg.vocab_size * d  # embed
+    if not cfg.tie_embeddings:
+        total += cfg.vocab_size * d  # lm head
+    for kind in _layer_kinds(cfg):
+        if kind == "mamba":
+            total += _mamba_params(cfg) + d  # + norm
+        elif kind == "hybrid_attn":
+            total += _attn_params(cfg) + _mlp_params(d, cfg.d_ff) + 2 * d
+        elif kind == "moe":
+            m = cfg.moe
+            total += _attn_params(cfg) + 2 * d
+            total += d * m.num_experts  # router
+            n_routed = m.top_k if active_only else m.num_experts
+            total += n_routed * _mlp_params(d, m.d_ff_expert)
+            total += m.num_shared_experts * _mlp_params(d, m.d_ff_expert)
+        elif kind == "dense_first":
+            total += _attn_params(cfg) + _mlp_params(d, cfg.moe.first_dense_d_ff) + 2 * d
+        else:
+            total += _attn_params(cfg) + _mlp_params(d, cfg.d_ff) + 2 * d
+    if cfg.is_encoder_decoder:
+        # encoder self-attn+mlp layers + decoder cross-attn additions
+        enc = cfg.encoder_layers * (_attn_params(cfg) + _mlp_params(d, cfg.d_ff) + 2 * d)
+        cross = cfg.num_layers * (_attn_params(cfg) + d)
+        total += enc + cross
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        _load_all()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def list_archs() -> list:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_ARCH_MODULES = [
+    "llama3_2_1b",
+    "mamba2_780m",
+    "internvl2_2b",
+    "deepseek_moe_16b",
+    "gemma2_9b",
+    "whisper_tiny",
+    "zamba2_1_2b",
+    "minicpm3_4b",
+    "mixtral_8x7b",
+    "yi_34b",
+    "edge_ridge",
+]
+
+
+def _load_all() -> None:
+    import importlib
+
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+# ---------------------------------------------------------------------------
+# Reduced (smoke) variants
+# ---------------------------------------------------------------------------
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """Smoke-test variant: 2 layers, d_model<=512, <=4 experts, tiny vocab."""
+    num_layers = 2
+    d_model = min(cfg.d_model, 256)
+    num_heads = min(cfg.num_heads, 4)
+    num_kv_heads = max(1, min(cfg.num_kv_heads, num_heads)) if num_heads else 0
+    # keep the GQA ratio representative where possible
+    if 0 < cfg.num_kv_heads < cfg.num_heads:
+        num_kv_heads = max(1, num_heads // 2)
+    updates = dict(
+        name=cfg.name + "-smoke",
+        num_layers=num_layers,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv_heads,
+        head_dim=max(16, d_model // num_heads) if num_heads else 32,
+        d_ff=min(cfg.d_ff, 512) or 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else None,
+        local_global_period=min(cfg.local_global_period, 2) if cfg.local_global_period else 0,
+        padded_heads=None,
+        encoder_layers=min(cfg.encoder_layers, 2),
+        encoder_frames=min(cfg.encoder_frames, 32),
+        num_patches=min(cfg.num_patches, 16) if cfg.num_patches else 0,
+        attn_every=min(cfg.attn_every, 2) if cfg.attn_every else 0,
+        dtype="float32",
+    )
+    if cfg.mla is not None:
+        updates["mla"] = MLAConfig(
+            q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=16,
+            qk_rope_head_dim=16, v_head_dim=16,
+        )
+    if cfg.ssm is not None:
+        updates["ssm"] = dataclasses.replace(
+            cfg.ssm, state_dim=min(cfg.ssm.state_dim, 16), head_dim=32, chunk_size=16
+        )
+    if cfg.moe is not None:
+        updates["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff_expert=min(cfg.moe.d_ff_expert, 128),
+            capacity_factor=8.0,  # dropless at smoke scale (parity tests)
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1),
+            first_dense_d_ff=min(cfg.moe.first_dense_d_ff, 256),
+        )
+    return replace(cfg, **updates)

@@ -1,0 +1,25 @@
+"""deepseek-moe-16b [moe] — 2 shared + 64 routed top-6, fine-grained [arXiv:2401.06066]."""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+DEEPSEEK_MOE_16B = register(ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    source="arXiv:2401.06066",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,   # MHA
+    head_dim=128,
+    d_ff=1408,         # per-expert FFN dim (fine-grained)
+    vocab_size=102_400,
+    moe=MoEConfig(
+        num_experts=64,
+        top_k=6,
+        d_ff_expert=1408,
+        num_shared_experts=2,
+        first_dense_layers=1,
+        first_dense_d_ff=10_944,
+    ),
+    long_context_variant="full",  # long_500k SKIP
+    grad_accum=8,
+))

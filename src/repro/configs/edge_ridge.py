@@ -1,0 +1,41 @@
+"""edge-ridge — the paper's own experiment config (§5).
+
+Ridge regression on an 8-feature housing-style dataset, N=18576, trained at the
+edge under the pipelined streaming protocol.  This is not one of the 10 assigned
+transformer architectures; it is the faithful-reproduction target.
+"""
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig, register
+
+
+@dataclass(frozen=True)
+class EdgeRidgeParams:
+    n_features: int = 8
+    n_samples: int = 18_576
+    lam: float = 0.05          # ridge coefficient (paper: lambda = 0.05)
+    alpha: float = 1e-4        # SGD stepsize (paper Fig. 3/4)
+    tau_p: float = 1.0         # one SGD update per sample-transmission time
+    T_factor: float = 1.5      # T = 1.5 * N (paper Fig. 3)
+    # paper's reported constants for the Corollary-1 bound
+    L: float = 1.908
+    c: float = 0.061
+    M: float = 1.0
+    M_G: float = 1.0
+
+
+EDGE_RIDGE_PARAMS = EdgeRidgeParams()
+
+EDGE_RIDGE = register(ArchConfig(
+    name="edge-ridge",
+    family="paper",
+    source="Skatchkovsky & Simeone 2019, Sec. 5",
+    num_layers=0,
+    d_model=8,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=0,
+    attention_type="none",
+    dtype="float32",
+))

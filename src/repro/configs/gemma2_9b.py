@@ -1,0 +1,24 @@
+"""gemma2-9b [dense] — local+global alternating, logit softcap [arXiv:2408.00118]."""
+from repro.configs.base import ArchConfig, register
+
+GEMMA2_9B = register(ArchConfig(
+    name="gemma2-9b",
+    family="dense",
+    source="arXiv:2408.00118",
+    num_layers=42,
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=14_336,
+    vocab_size=256_000,
+    sliding_window=4096,
+    local_global_period=2,      # local, global, local, global, ...
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+    scale_embed=True,
+    # long_500k RUNS with the documented window+sink variant for global layers
+    long_context_variant="window_global",
+    grad_accum=8,
+))

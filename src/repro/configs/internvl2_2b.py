@@ -1,0 +1,24 @@
+"""internvl2-2b [vlm] — InternViT + InternLM2 [arXiv:2404.16821].
+
+The ViT + MLP projector frontend is a STUB per the assignment: input_specs()
+supplies precomputed patch embeddings of shape (batch, num_patches, d_model).
+"""
+from repro.configs.base import ArchConfig, register
+
+INTERNVL2_2B = register(ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    source="arXiv:2404.16821",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92_553,
+    modality="vision",
+    num_patches=256,  # InternVL2 pixel-shuffled ViT tokens per tile
+    rope_theta=1_000_000.0,
+    long_context_variant="full",  # long_500k SKIP
+    grad_accum=2,
+))

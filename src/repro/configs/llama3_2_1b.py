@@ -1,0 +1,19 @@
+"""llama3.2-1b [dense] — small llama3 [hf:meta-llama/Llama-3.2-1B]."""
+from repro.configs.base import ArchConfig, register
+
+LLAMA3_2_1B = register(ArchConfig(
+    name="llama3.2-1b",
+    family="dense",
+    source="hf:meta-llama/Llama-3.2-1B",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    long_context_variant="full",  # long_500k SKIP (pure full attention)
+    grad_accum=2,
+))

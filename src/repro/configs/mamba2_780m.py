@@ -1,0 +1,21 @@
+"""mamba2-780m [ssm] — SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+MAMBA2_780M = register(ArchConfig(
+    name="mamba2-780m",
+    family="ssm",
+    source="arXiv:2405.21060",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,           # attention-free
+    num_kv_heads=0,
+    head_dim=64,
+    d_ff=0,
+    vocab_size=50_280,
+    attention_type="none",
+    block_kind="mamba",
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4, chunk_size=256),
+    long_context_variant="ssm",  # O(1) decode state: runs long_500k
+    tie_embeddings=True,
+    grad_accum=2,
+))

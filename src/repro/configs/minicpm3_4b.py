@@ -1,0 +1,26 @@
+"""minicpm3-4b [dense] — MLA [hf:openbmb/MiniCPM3-4B]."""
+from repro.configs.base import ArchConfig, MLAConfig, register
+
+MINICPM3_4B = register(ArchConfig(
+    name="minicpm3-4b",
+    family="dense",
+    source="hf:openbmb/MiniCPM3-4B",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73_448,
+    attention_type="mla",
+    padded_heads=48,   # 40 -> 48 so heads divide the 16-way model axis (§Perf H2)
+    mla=MLAConfig(
+        q_lora_rank=768,
+        kv_lora_rank=256,
+        qk_nope_head_dim=64,
+        qk_rope_head_dim=32,
+        v_head_dim=64,
+    ),
+    long_context_variant="full",  # long_500k SKIP (MLA compresses the cache but
+                                  # the softmax is still full-length)
+    grad_accum=16,
+))

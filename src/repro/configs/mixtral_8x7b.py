@@ -1,0 +1,21 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, SWA [arXiv:2401.04088]."""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+MIXTRAL_8X7B = register(ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    source="arXiv:2401.04088",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=32_000,
+    sliding_window=4096,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=14_336),
+    rope_theta=1_000_000.0,
+    # SWA rolling KV cache => sub-quadratic decode: runs long_500k
+    long_context_variant="window",
+    grad_accum=16,
+))

@@ -1,0 +1,26 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+input_specs() supplies precomputed frame embeddings (batch, frames, d_model).
+"""
+from repro.configs.base import ArchConfig, register
+
+WHISPER_TINY = register(ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=4,            # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51_865,
+    is_encoder_decoder=True,
+    encoder_frames=1500,
+    modality="audio",
+    tie_embeddings=True,
+    long_context_variant="full",  # long_500k SKIP (decoder ctx is arch-capped)
+    grad_accum=8,
+))

@@ -1,0 +1,19 @@
+"""yi-34b [dense] — llama-arch GQA [arXiv:2403.04652]."""
+from repro.configs.base import ArchConfig, register
+
+YI_34B = register(ArchConfig(
+    name="yi-34b",
+    family="dense",
+    source="arXiv:2403.04652",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20_480,
+    vocab_size=64_000,
+    rope_theta=5_000_000.0,
+    padded_heads=64,   # 8 kv groups of 7 -> padded to 8 (see §Perf H3)
+    long_context_variant="full",  # long_500k SKIP
+    grad_accum=16,
+))

@@ -1,0 +1,23 @@
+"""zamba2-1.2b [hybrid] — Mamba2 + shared attn blocks [arXiv:2411.15242]."""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+ZAMBA2_1_2B = register(ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,   # shared attention block is MHA
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32_000,
+    block_kind="hybrid",
+    attn_every=6,      # one shared (tied-weight) attention block per 6 mamba blocks
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk_size=256),
+    # hybrid decode: SSM state + shared-attn rolling window -> runs long_500k
+    long_context_variant="ssm",
+    sliding_window=4096,  # shared attention uses a rolling window in long decode
+    tie_embeddings=True,
+    grad_accum=8,
+))

@@ -1,0 +1,18 @@
+"""The paper's contribution: pipelined communication/computation scheduling
+for latency-constrained edge learning (protocol, bounds, planner, trainers)."""
+from repro.core.bounds import BoundConstants, calibrate_from_gram, corollary1_bound, theorem1_bound
+from repro.core.pipeline import (StreamResult, average_final_loss,
+                                 ridge_loss_full, run_pipelined_sgd)
+from repro.core.planner import Plan, default_grid, optimize_block_size
+from repro.core.protocol import BlockSchedule, boundary_n_c
+from repro.core.streaming import StreamBuffer, make_buffer, receive_block, sample
+from repro.core.stream_trainer import StreamingTrainState, run_streaming_training
+
+__all__ = [
+    "BoundConstants", "calibrate_from_gram", "corollary1_bound", "theorem1_bound",
+    "StreamResult", "average_final_loss", "ridge_loss_full", "run_pipelined_sgd",
+    "Plan", "default_grid", "optimize_block_size",
+    "BlockSchedule", "boundary_n_c",
+    "StreamBuffer", "make_buffer", "receive_block", "sample",
+    "StreamingTrainState", "run_streaming_training",
+]

@@ -1,0 +1,128 @@
+"""Optimality-gap bounds: Theorem 1 (eqs. 12-13) and Corollary 1 (eqs. 14-15).
+
+The Corollary-1 evaluator is closed-form (geometric sums) and vectorised
+over ``n_c`` grids — this is what the planner minimises, exactly as the
+paper proposes (Sec. 4: "a generally looser bound that can be directly
+evaluated numerically without running any Monte Carlo simulations").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BoundConstants:
+    """Assumption constants (A1)-(A4) + stepsize."""
+    L: float        # smoothness (A2)
+    c: float        # P-L constant (A3)
+    M: float        # gradient-variance floor (A4)
+    M_G: float      # M_V + 1 in the notation of [9]; paper uses M_G
+    D: float        # iterate-set diameter (A1)
+    alpha: float    # SGD stepsize, must satisfy 0 < alpha <= 2/(L*M_G)
+
+    @property
+    def gamma(self) -> float:
+        """gamma = alpha (1 - alpha L M_G / 2)   (eq. 11)."""
+        return self.alpha * (1.0 - 0.5 * self.alpha * self.L * self.M_G)
+
+    @property
+    def variance_floor(self) -> float:
+        """alpha^2 L M / (2 gamma c) — the asymptotic bias of SGD."""
+        return self.alpha ** 2 * self.L * self.M / (2.0 * self.gamma * self.c)
+
+    @property
+    def init_gap(self) -> float:
+        """L D^2 / 2 — the Corollary-1 bound on any per-block initial error."""
+        return self.L * self.D ** 2 / 2.0
+
+    def validate(self):
+        assert 0 < self.alpha <= 2.0 / (self.L * self.M_G), (
+            f"stepsize violates (10): alpha={self.alpha}, "
+            f"2/(L M_G)={2.0 / (self.L * self.M_G)}")
+        assert self.gamma > 0
+
+
+def _geom_sum(r: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """sum_{l=1}^{k} r^l, elementwise, k may be 0 (-> 0). Stable closed form."""
+    r = np.asarray(r, np.float64)
+    k = np.asarray(k, np.float64)
+    out = np.where(np.abs(1.0 - r) < 1e-15, k, r * (1.0 - r ** k) / (1.0 - r))
+    return np.where(k <= 0, 0.0, out)
+
+
+def corollary1_bound(n_c, *, N: int, T: float, n_o: float, tau_p: float,
+                     consts: BoundConstants) -> np.ndarray:
+    """Eq. (14) / (15), vectorised over n_c.
+
+    Returns the upper bound on E[L(w_T) - L(w*)] for each block size.
+    """
+    n_c = np.asarray(n_c, np.float64)
+    dur = n_c + n_o
+    B_d = N / n_c
+    B = np.floor(T / dur)                 # whole blocks that fit
+    n_p = np.floor(dur / tau_p)           # SGD updates per block
+    full = T > B_d * dur                  # regime (b)
+
+    sigma = consts.variance_floor         # alpha^2 L M / (2 gamma c)
+    e0 = consts.init_gap                  # L D^2 / 2
+    r = np.clip(1.0 - consts.gamma * consts.c, 0.0, 1.0)
+    rp = r ** n_p                         # per-block contraction
+
+    # ---- regime (a): T <= B_d (n_c + n_o)   (eq. 14) -----------------------
+    frac = np.clip((B - 1.0) / B_d, 0.0, 1.0)
+    # sum_{l=1}^{B-1} rp^l  (closed form)
+    s_a = _geom_sum(rp, np.maximum(B - 1.0, 0.0))
+    bound_a = sigma * frac + (1.0 - frac) * e0 + (e0 - sigma) * s_a / B_d
+
+    # ---- regime (b): T > B_d (n_c + n_o)    (eq. 15) -----------------------
+    tau_l = np.maximum(T - B_d * dur, 0.0)
+    n_l = np.floor(tau_l / tau_p)
+    # sum_{l=0}^{B_d - 1} rp^l = 1 + sum_{l=1}^{B_d-1} rp^l
+    s_b = 1.0 + _geom_sum(rp, np.maximum(np.ceil(B_d) - 1.0, 0.0))
+    bound_b = sigma + (r ** n_l) * (e0 - sigma) * s_b / B_d
+
+    return np.where(full, bound_b, bound_a)
+
+
+def theorem1_bound(per_block_gap: np.ndarray, delta_gap_B: float, *,
+                   N: int, T: float, n_c: int, n_o: float, tau_p: float,
+                   consts: BoundConstants) -> float:
+    """Eq. (12)/(13) given *empirical* per-block quantities.
+
+    per_block_gap[b] = E_b[ L_b(w_b^{n_p}) - L_b(w*) ] for blocks b=1..B-1
+    (or 1..B_d in regime (b)); delta_gap_B = E[ dL_B(w) - dL_B(w*) ]
+    for the not-yet-received remainder (regime (a) only).
+    """
+    from repro.core.protocol import BlockSchedule
+
+    plan = BlockSchedule(N=N, n_c=n_c, n_o=n_o, T=T, tau_p=tau_p)
+    sigma = consts.variance_floor
+    r = 1.0 - consts.gamma * consts.c
+    n_p = plan.n_p
+    B_d = plan.B_d
+
+    if not plan.full_transfer:  # eq. (12)
+        B = plan.B
+        frac = (B - 1.0) / B_d
+        tail = sum((r ** (l * n_p)) * (per_block_gap[B - 1 - l] - sigma)
+                   for l in range(1, B))
+        return sigma * frac + (1.0 - frac) * delta_gap_B + tail / B_d
+    # eq. (13)
+    n_l = plan.n_l
+    Bd_i = int(np.ceil(B_d))
+    tail = sum((r ** (l * n_p)) * (per_block_gap[Bd_i - 1 - l] - sigma)
+               for l in range(0, Bd_i))
+    return sigma + (r ** n_l) * tail / B_d
+
+
+def calibrate_from_gram(X: np.ndarray, lam: float = 0.0):
+    """(L, c) from the data Gramian — the paper (Sec. 4) sets L and c to the
+    largest/smallest eigenvalues of the Gramian of the training features."""
+    n = X.shape[0]
+    gram = (X.T @ X) / n
+    eigs = np.linalg.eigvalsh(gram)
+    L = float(eigs[-1]) + lam / n
+    c = float(eigs[0]) + lam / n
+    return L, c

@@ -1,0 +1,67 @@
+"""Block-size planner: minimise the Corollary-1 bound over n_c.
+
+This is the paper's practical recipe: evaluate the Monte-Carlo-free bound
+(14)-(15) on a grid of block sizes and pick the minimiser n_c-tilde.  The
+planner also reports the regime boundary (the dots in Fig. 3) and supports
+calibrating (L, c) from a data Gramian and (tau_p, n_o) from measured
+step/transfer times of a real mesh — the TPU binding described in
+DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.bounds import BoundConstants, corollary1_bound
+from repro.core.protocol import BlockSchedule, boundary_n_c
+
+
+@dataclass(frozen=True)
+class Plan:
+    n_c: int                 # optimised block size (n_c-tilde)
+    bound_value: float       # Corollary-1 bound at the optimum
+    full_transfer: bool      # whether the optimum delivers the whole set
+    boundary: float          # n_c where T = B_d (n_c + n_o)
+    grid: np.ndarray         # evaluated n_c grid
+    bound_grid: np.ndarray   # bound value per grid point
+    schedule: BlockSchedule
+
+
+def default_grid(N: int) -> np.ndarray:
+    """Log-spaced integer grid 1..N (dense enough for a smooth Fig. 3)."""
+    g = np.unique(np.round(np.logspace(0, np.log10(N), 400)).astype(np.int64))
+    return g[g >= 1]
+
+
+def optimize_block_size(*, N: int, T: float, n_o: float, tau_p: float,
+                        consts: BoundConstants,
+                        grid: Optional[Sequence[int]] = None) -> Plan:
+    consts.validate()
+    grid = np.asarray(grid if grid is not None else default_grid(N))
+    vals = corollary1_bound(grid, N=N, T=T, n_o=n_o, tau_p=tau_p, consts=consts)
+    i = int(np.argmin(vals))
+    n_c = int(grid[i])
+    sched = BlockSchedule(N=N, n_c=n_c, n_o=n_o, T=T, tau_p=tau_p)
+    return Plan(
+        n_c=n_c,
+        bound_value=float(vals[i]),
+        full_transfer=sched.full_transfer,
+        boundary=boundary_n_c(N, T, n_o),
+        grid=grid,
+        bound_grid=vals,
+        schedule=sched,
+    )
+
+
+def calibrate_tau_p(step_time_s: float, sample_tx_time_s: float) -> float:
+    """Normalise a measured train-step time to sample-transmission units
+    (how the planner binds to a real mesh: step time from the roofline
+    model or a profile, transfer time from link bandwidth)."""
+    return step_time_s / sample_tx_time_s
+
+
+def calibrate_n_o(fixed_transfer_cost_s: float, sample_tx_time_s: float) -> float:
+    """Per-transfer fixed cost (dispatch/collective setup) in sample units."""
+    return fixed_transfer_cost_s / sample_tx_time_s

@@ -1,0 +1,106 @@
+"""Block/timeline arithmetic of the paper's pipelined protocol (Sec. 2, Fig. 2).
+
+All times are normalised to the transmission time of one data sample.  One
+SGD update costs ``tau_p``.  A block carries ``n_c`` samples plus an overhead
+``n_o`` (pilots/meta-data), so a block lasts ``n_c + n_o``.
+
+Two regimes (Fig. 2):
+  (a) T <= B_d (n_c + n_o): only a fraction of the dataset arrives;
+  (b) T  > B_d (n_c + n_o): the full set arrives, leaving a tail block B_l
+      of duration tau_l = T - B_d (n_c + n_o) for training on all data.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class BlockSchedule:
+    N: int          # dataset size (samples)
+    n_c: int        # samples per block
+    n_o: float      # per-block overhead (normalised time)
+    T: float        # deadline (normalised time)
+    tau_p: float    # time per SGD update
+
+    # ---- protocol quantities (paper notation) -----------------------------
+    @property
+    def block_duration(self) -> float:
+        return self.n_c + self.n_o
+
+    @property
+    def B_d(self) -> float:
+        """Blocks sufficient to deliver the entire dataset."""
+        return self.N / self.n_c
+
+    @property
+    def full_transfer(self) -> bool:
+        """Regime (b): whole dataset delivered before T.
+
+        Uses the DELIVERED count (ceil-block semantics) so the flag is
+        consistent with the simulation even when n_c does not divide N;
+        the paper's continuous B_d = N/n_c criterion is kept in the bound
+        evaluator (bounds.corollary1_bound) exactly as published."""
+        return self.available_at(self.T) >= self.N
+
+    @property
+    def B(self) -> int:
+        """Number of (whole) blocks that fit in T (regime (a) count)."""
+        return int(self.T // self.block_duration)
+
+    @property
+    def tau_l(self) -> float:
+        """Tail-block duration (regime (b) only)."""
+        return max(self.T - self.B_d * self.block_duration, 0.0)
+
+    @property
+    def n_p(self) -> int:
+        """SGD updates per regular block."""
+        return max(int(self.block_duration // self.tau_p), 0)
+
+    @property
+    def n_l(self) -> int:
+        """SGD updates in the tail block."""
+        return int(self.tau_l // self.tau_p)
+
+    @property
+    def delivered_fraction(self) -> float:
+        """Fraction of the dataset available to the learner at time T."""
+        if self.full_transfer:
+            return 1.0
+        return min(max(self.B - 1, 0) / self.B_d, 1.0)
+
+    # ---- simulation helpers -------------------------------------------------
+    @property
+    def total_updates(self) -> int:
+        """SGD updates that fit in [0, T]."""
+        return int(self.T // self.tau_p)
+
+    def available_at(self, t: float) -> int:
+        """Samples available at the edge at (normalised) time t.
+
+        Block b (1-indexed) occupies [ (b-1)*dur, b*dur ); its samples become
+        available at the END of the block, i.e. from b*dur onwards.
+        """
+        blocks_done = int(t // self.block_duration)
+        return min(blocks_done * self.n_c, self.N)
+
+    def updates_timeline(self):
+        """Array of 'samples available' for each update step j=0..total-1
+        (the j-th update runs during [j*tau_p, (j+1)*tau_p))."""
+        import numpy as np
+
+        t = np.arange(self.total_updates, dtype=np.float64) * self.tau_p
+        blocks_done = np.floor(t / self.block_duration).astype(np.int64)
+        return np.minimum(blocks_done * self.n_c, self.N)
+
+
+def boundary_n_c(N: int, T: float, n_o: float) -> float:
+    """n_c at which T == B_d (n_c + n_o) — the regime boundary (Fig. 3 dots).
+
+    B_d (n_c + n_o) = N (1 + n_o / n_c) = T  =>  n_c = N n_o / (T - N).
+    Returns +inf when T <= N (the whole set can never be delivered).
+    """
+    if T <= N:
+        return math.inf
+    return N * n_o / (T - N)

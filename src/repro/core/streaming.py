@@ -1,0 +1,45 @@
+"""On-device streaming buffer: the edge node's growing dataset prefix.
+
+A fixed-size device tensor plus an ``available`` counter.  ``receive_block``
+appends a block (dynamic_update_slice — in the distributed runtime this is
+the host-feed/pod-axis transfer XLA overlaps with compute); ``sample`` draws
+i.i.d. uniform indices from the available prefix, exactly the paper's
+sampling model (Sec. 2: xi_b^j ~ Uniform(X_tilde_b)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class StreamBuffer(NamedTuple):
+    x: jnp.ndarray          # (N, ...) sample payloads (zeros beyond prefix)
+    y: jnp.ndarray          # (N, ...) labels
+    available: jnp.ndarray  # () int32 — prefix length visible to the sampler
+
+
+def make_buffer(n: int, x_shape: Tuple[int, ...], y_shape: Tuple[int, ...] = (),
+                dtype=jnp.float32) -> StreamBuffer:
+    return StreamBuffer(
+        x=jnp.zeros((n,) + tuple(x_shape), dtype),
+        y=jnp.zeros((n,) + tuple(y_shape), dtype),
+        available=jnp.zeros((), jnp.int32),
+    )
+
+
+def receive_block(buf: StreamBuffer, block_x, block_y) -> StreamBuffer:
+    """Append a block at the current prefix end."""
+    start = buf.available
+    x = jax.lax.dynamic_update_slice(buf.x, block_x.astype(buf.x.dtype),
+                                     (start,) + (0,) * (buf.x.ndim - 1))
+    y = jax.lax.dynamic_update_slice(buf.y, block_y.astype(buf.y.dtype),
+                                     (start,) + (0,) * (buf.y.ndim - 1))
+    return StreamBuffer(x=x, y=y, available=start + block_x.shape[0])
+
+
+def sample(buf: StreamBuffer, key, batch: int):
+    """i.i.d. uniform draws from the available prefix (with replacement)."""
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.available, 1))
+    return jnp.take(buf.x, idx, axis=0), jnp.take(buf.y, idx, axis=0)

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (SyntheticTokens, make_regression_dataset,
+                                  token_batches)
+from repro.data.stream import BlockStreamer
+
+__all__ = ["SyntheticTokens", "make_regression_dataset", "token_batches",
+           "BlockStreamer"]

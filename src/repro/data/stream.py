@@ -1,0 +1,53 @@
+"""Host-side block streamer — the device side of the paper's protocol.
+
+Models the device->edge link of Fig. 1/2: the dataset lives on the "device"
+(host); each block ``b`` delivers ``n_c`` new samples (chosen uniformly at
+random from the not-yet-sent remainder, exactly as in Sec. 2) after a
+block time of ``n_c + n_o`` normalised units.  The edge trainer consumes
+blocks while training on what has already arrived.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class BlockStreamer:
+    n_samples: int
+    n_c: int
+    n_o: float
+    seed: int = 0
+    _perm: np.ndarray = field(init=False, repr=False)
+    _sent: int = field(init=False, default=0)
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # uniform random selection without replacement == a random permutation
+        # consumed prefix-first
+        self._perm = rng.permutation(self.n_samples)
+
+    @property
+    def block_duration(self) -> float:
+        return self.n_c + self.n_o
+
+    @property
+    def n_blocks_total(self) -> int:
+        return -(-self.n_samples // self.n_c)
+
+    def next_block(self) -> Optional[np.ndarray]:
+        """Indices delivered by the next block (None when exhausted)."""
+        if self._sent >= self.n_samples:
+            return None
+        idx = self._perm[self._sent: self._sent + self.n_c]
+        self._sent += len(idx)
+        return idx
+
+    @property
+    def delivered(self) -> int:
+        return self._sent
+
+    def reset(self):
+        self._sent = 0

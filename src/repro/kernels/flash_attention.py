@@ -1,0 +1,120 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv dimension is
+innermost and sequential on TPU, so the running-softmax statistics live in
+VMEM scratch across kv steps.  Whole kv blocks strictly in the causal future
+are skipped with ``pl.when`` (the FLOPs the pure-XLA blockwise path cannot
+elide).  GQA is handled by the k/v index_map (q head -> kv head = h // group).
+
+BlockSpec VMEM tiling: q tile (q_block, head_dim), k/v tiles
+(kv_block, head_dim); defaults 512x128 keep the working set
+(2*512*128 + 2*512*128 + 512*512) * 4B  ~ 2.1 MB well under the ~16 MB VMEM
+budget of a TPU v5e core while keeping the MXU contraction dims at 128+.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                      scale: float, q_block: int, kv_block: int,
+                      causal: bool, window, softcap, num_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * q_block
+    k_start = ik * kv_block
+
+    # whole-block skip: block fully in the causal future, or fully outside
+    # the sliding window
+    run = jnp.asarray(True)
+    if causal:
+        run &= k_start <= q_start + q_block - 1
+    if window is not None:
+        # newest query is q_start + q_block - 1; oldest useful key is
+        # q_newest - window + 1; skip blocks entirely older than that
+        run &= k_start + kv_block - 1 >= q_start - window + 1
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (qb, d)
+        k = k_ref[0, 0].astype(jnp.float32)             # (kb, d)
+        v = v_ref[0, 0].astype(jnp.float32)             # (kb, dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (qb, kb)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        mask = jnp.ones((q_block, kv_block), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                              # (qb, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                           # (qb, kb)
+        corr = jnp.exp(m_prev - m_new)                   # (qb, 1)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = corr * acc_scr[...] + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "q_block",
+                     "kv_block", "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,
+                        softcap=None, scale=None, q_block: int = 512,
+                        kv_block: int = 512, interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = float(scale) if scale is not None else d ** -0.5
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s)
+    assert s % q_block == 0 and s % kv_block == 0, (s, q_block, kv_block)
+    nq, nk = s // q_block, s // kv_block
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=scale, q_block=q_block, kv_block=kv_block,
+        causal=causal, window=window, softcap=softcap, num_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, kv_block, d), lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, d), lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D).  Naive softmax attention."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a, b, c):
+    """Sequential SSM recurrence (oracle for the SSD kernel).
+
+    x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, H, N).
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a[None, :])                     # (B, H)
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", bt, xt * dtt[..., None])
+        y = jnp.einsum("bhn,bhpn->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (x, dt, b, c))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final

@@ -1,0 +1,278 @@
+"""While-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each ``while`` (scan) body ONCE — with
+scan-over-layers models that under-reports FLOPs/bytes by orders of
+magnitude.  This module parses the optimized (SPMD-partitioned, per-device)
+HLO text and multiplies loop-body costs by the compiler-known trip count
+(``backend_config={"known_trip_count":{"n":...}}``), recursively.
+
+Counted per op:
+  * dot: 2 * prod(result_dims) * contracted_size FLOPs, + result/operand bytes
+  * fusion: result + operand bytes (HBM traffic model: every materialised
+    buffer written once, read once per consumer); dots inside fused
+    computations contribute FLOPs
+  * all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute: ICI bytes (ring multipliers), + HBM bytes
+  * while: trip_count x body + trip_count x cond
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_OP_MULTIPLIER = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\((.*?)\)\s*->")
+_CALLED_RE = re.compile(r"(?:calls|body|condition|to_apply)=(%[\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_OPNAME_RE = re.compile(r"^\s*(?:\(|\w+\[[^\]]*\][^\s]*\s+)?([\w\-]+)\(")
+
+
+def shape_info(type_str: str):
+    """(total_bytes, dims_list_of_first_array) from an HLO type string."""
+    total = 0
+    first_dims: Optional[List[int]] = None
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dt]
+        if first_dims is None:
+            first_dims = d
+    return total, (first_dims or [])
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    result_bytes: int
+    operands: List[str]
+    line: str
+    called: List[str] = field(default_factory=list)
+    trip: int = 1
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        self.coll_bytes += other.coll_bytes * times
+        for k, v in other.coll_by_op.items():
+            self.coll_by_op[k] = self.coll_by_op.get(k, 0.0) + v * times
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + int(v * times)
+
+
+_SKIP_KINDS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "iota", "partition-id", "replica-id",
+    "reshape",
+}
+
+
+def _split_operands(line: str) -> List[str]:
+    """Operand names from 'op(%a, %b, ...)' (first paren group)."""
+    i = line.find("(")
+    if i < 0:
+        return []
+    depth, j = 0, i
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    inner = line[i + 1:j]
+    return re.findall(r"%[\w\.\-]+", inner)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[Op]] = {}
+        self.shapes: Dict[str, str] = {}  # op name -> result type string
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr and line.rstrip().endswith("{"):
+                cur = hdr.group(1)
+                self.comps[cur] = []
+                continue
+            if cur is None:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            # result type = prefix of rhs up to the op name.  Tuple types may
+            # contain nested parens and /*index=N*/ comments — match parens.
+            if rhs.startswith("("):
+                depth = 0
+                end = 0
+                for i, ch in enumerate(rhs):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            end = i + 1
+                            break
+                rtype = rhs[:end]
+                rest = rhs[end:].lstrip()
+            else:
+                sp = rhs.find(" ")
+                if sp < 0:
+                    continue
+                rtype = rhs[:sp]
+                rest = rhs[sp + 1:].lstrip()
+            kp = re.match(r"([\w\-]+)\(", rest)
+            if not kp:
+                continue
+            kind = kp.group(1)
+            rbytes, _ = shape_info(rtype)
+            op = Op(name=name, kind=kind, result_type=rtype,
+                    result_bytes=rbytes,
+                    operands=_split_operands(rest[len(kind):]),
+                    line=rhs)
+            for c in _CALLED_RE.finditer(rhs):
+                op.called.append(c.group(1))
+            tm = _TRIP_RE.search(rhs)
+            if tm:
+                op.trip = int(tm.group(1))
+            self.comps[cur].append(op)
+            self.shapes[name] = rtype
+
+    # -- cost ---------------------------------------------------------------
+
+    def _operand_bytes(self, op: Op) -> int:
+        total = 0
+        for o in op.operands:
+            t = self.shapes.get(o)
+            # tuple-typed operands (while-carry params) are not read wholesale;
+            # the get-tuple-element projections account for actual reads
+            if t and not t.startswith("("):
+                total += shape_info(t)[0]
+        return total
+
+    def _dot_flops(self, op: Op) -> float:
+        _, rdims = shape_info(op.result_type)
+        out = 1
+        for d in rdims:
+            out *= d
+        # contracted size from lhs shape + lhs_contracting_dims
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+        if not cm or not op.operands:
+            return 2.0 * out  # inner dim unknown; floor
+        lhs_t = self.shapes.get(op.operands[0], "")
+        _, ldims = shape_info(lhs_t)
+        csize = 1
+        for idx in cm.group(1).split(","):
+            if idx != "" and int(idx) < len(ldims):
+                csize *= ldims[int(idx)]
+        return 2.0 * out * csize
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        total = Cost()
+        self._memo[name] = total  # guard (no recursion cycles in HLO)
+        for op in self.comps.get(name, []):
+            k = op.kind
+            if k in _SKIP_KINDS:
+                continue
+            if k == "while":
+                body_cost = Cost()
+                for c in op.called:
+                    body_cost.add(self.comp_cost(c))
+                total.add(body_cost, times=op.trip)
+                continue
+            if k in ("call", "conditional", "async-start"):
+                for c in op.called:
+                    total.add(self.comp_cost(c))
+                total.bytes += op.result_bytes
+                continue
+            if k == "fusion":
+                total.bytes += op.result_bytes + self._operand_bytes(op)
+                for c in op.called:  # count dot flops inside fusions
+                    inner = self.comp_cost(c)
+                    total.flops += inner.flops
+                continue
+            if k == "dot":
+                total.flops += self._dot_flops(op)
+                total.bytes += op.result_bytes + self._operand_bytes(op)
+                continue
+            base = k.replace("-start", "")
+            if base in _OP_MULTIPLIER and not k.endswith("-done"):
+                b = op.result_bytes
+                if base == "all-gather":
+                    # result includes the gathered axis; ICI moves result bytes
+                    pass
+                w = b * _OP_MULTIPLIER[base]
+                total.coll_bytes += w
+                total.coll_by_op[base] = total.coll_by_op.get(base, 0.0) + w
+                total.coll_count[base] = total.coll_count.get(base, 0) + 1
+                total.bytes += b + self._operand_bytes(op)
+                continue
+            if k in ("copy", "copy-start", "transpose", "broadcast", "convert",
+                     "slice", "dynamic-slice", "dynamic-update-slice", "pad",
+                     "concatenate", "reduce", "sort", "scatter", "gather",
+                     "select-and-scatter", "reverse", "cholesky",
+                     "triangular-solve", "custom-call", "rng", "exp", "add",
+                     "multiply", "subtract", "divide", "tanh", "select",
+                     "maximum", "minimum", "compare", "clamp"):
+                total.bytes += op.result_bytes + self._operand_bytes(op)
+                continue
+            # default: count result bytes
+            total.bytes += op.result_bytes
+        return total
+
+    def entry_cost(self) -> Cost:
+        # ENTRY computation is the one not called by any other
+        called = set()
+        for ops in self.comps.values():
+            for op in ops:
+                called.update(op.called)
+        entries = [n for n in self.comps if n not in called]
+        total = Cost()
+        # XLA text has exactly one entry; fall back to summing roots
+        for e in entries[-1:] if entries else list(self.comps)[-1:]:
+            total.add(self.comp_cost(e))
+        return total
+
+
+def analyze_hlo(text: str) -> Cost:
+    return HloModule(text).entry_cost()

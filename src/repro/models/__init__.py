@@ -1,0 +1,10 @@
+from repro.models.model import (abstract_cache, abstract_opt_state,
+                                abstract_params, init_params, input_specs,
+                                make_batch, make_decode_step, make_grad_fn,
+                                make_prefill_step, make_train_step)
+
+__all__ = [
+    "abstract_cache", "abstract_opt_state", "abstract_params", "init_params",
+    "input_specs", "make_batch", "make_decode_step", "make_grad_fn",
+    "make_prefill_step", "make_train_step",
+]

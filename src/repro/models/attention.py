@@ -1,0 +1,249 @@
+"""Attention variants: GQA, MLA, sliding-window, local/global, softcap.
+
+One core ``dot_product_attention`` (pure jnp, GQA via an explicit group axis)
+used by both the training/prefill path (full sequence) and the decode path
+(one query token against a KV cache).  The Pallas flash-attention kernel in
+``repro.kernels`` implements the same contract for the TPU fast path
+(``attn_impl='pallas'``); the jnp path is what the CPU dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, softcap, truncated_normal
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def causal_mask(q_pos, k_pos):
+    """q_pos: (Q,), k_pos: (K,) -> bool (Q, K); True = attend."""
+    return q_pos[:, None] >= k_pos[None, :]
+
+
+def window_mask(q_pos, k_pos, window: int):
+    return (q_pos[:, None] >= k_pos[None, :]) & (q_pos[:, None] - k_pos[None, :] < window)
+
+
+def window_sink_mask(q_pos, k_pos, window: int, sink: int):
+    """Rolling window plus always-attended sink prefix (StreamingLLM-style)."""
+    return window_mask(q_pos, k_pos, window) | (
+        (k_pos[None, :] < sink) & (q_pos[:, None] >= k_pos[None, :])
+    )
+
+
+# ---------------------------------------------------------------------------
+# Core attention
+# ---------------------------------------------------------------------------
+
+
+def dot_product_attention(q, k, v, mask=None, logit_softcap=None, scale=None):
+    """q: (B, Q, Hq, D), k/v: (B, K, Hkv, D[v]); GQA via head grouping.
+
+    mask: bool broadcastable to (B, 1, 1, Q, K) with True = attend.
+    """
+    b, qlen, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, qlen, hkv, group, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if logit_softcap:
+        logits = softcap(logits, logit_softcap)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, qlen, hq, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (llama/gemma/mixtral/yi/internvl family)
+# ---------------------------------------------------------------------------
+
+
+def q_head_layout(cfg: ArchConfig):
+    """(padded_head_count, group_padded, group_real) for the q-head axis.
+
+    With ``cfg.padded_heads`` set, q heads are stored kv-major with dead
+    slots at the end of each group: slot = kv * group_pad + g, real iff
+    g < group_real.  The head mask keeps the function identical to the
+    unpadded architecture (dead slots get zero output and zero gradient).
+    """
+    h = cfg.num_heads
+    if not cfg.padded_heads or cfg.padded_heads == h:
+        return h, None
+    hp = cfg.padded_heads
+    if cfg.attention_type == "mla" or cfg.num_kv_heads in (0, h):
+        mask = jnp.arange(hp) < h
+    else:
+        gp = hp // cfg.num_kv_heads
+        gr = h // cfg.num_kv_heads
+        mask = (jnp.arange(hp) % gp) < gr
+    return hp, mask
+
+
+def init_gqa(key, cfg: ArchConfig, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    hp, _ = q_head_layout(cfg)
+    s = d ** -0.5
+    return {
+        "wq": truncated_normal(kq, (d, hp, hd), s, dtype),
+        "wk": truncated_normal(kk, (d, cfg.num_kv_heads, hd), s, dtype),
+        "wv": truncated_normal(kv, (d, cfg.num_kv_heads, hd), s, dtype),
+        "wo": truncated_normal(ko, (hp, hd, d), (cfg.num_heads * hd) ** -0.5, dtype),
+    }
+
+
+def gqa_project_qkv(params, x, positions, cfg: ArchConfig):
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(params, x, positions, cfg: ArchConfig, *, mask):
+    """Full-sequence (train/prefill) GQA attention."""
+    q, k, v = gqa_project_qkv(params, x, positions, cfg)
+    out = dot_product_attention(q, k, v, mask=mask,
+                                logit_softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), (k, v)
+
+
+def gqa_decode(params, x, cache_k, cache_v, pos, cfg: ArchConfig, *,
+               window: Optional[int] = None, sink: int = 0, ring_index=None):
+    """One-token decode against a KV cache.
+
+    cache_k/v: (B, S, Hkv, D).  ``pos``: scalar current position.
+    For rolling-window caches, ``ring_index`` is the slot to overwrite and
+    key positions are reconstructed from the stored position buffer by the
+    caller; here we take an explicit ``k_pos`` vector instead.
+    """
+    b, s = cache_k.shape[0], cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    slot = ring_index if ring_index is not None else pos
+    cache_k = cache_k.at[:, slot].set(k_new[:, 0])
+    cache_v = cache_v.at[:, slot].set(v_new[:, 0])
+
+    # valid-key mask: slots written so far (ring caches are always full by
+    # construction of the dry-run decode shapes)
+    k_idx = jnp.arange(s)
+    if ring_index is not None:
+        valid = jnp.ones((s,), bool)  # ring cache: every slot holds a live key
+    else:
+        valid = k_idx <= pos
+    mask = valid[None, None, None, None, :]
+    out = dot_product_attention(q, cache_k, cache_v, mask=mask,
+                                logit_softcap=cfg.attn_logit_softcap)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+
+def apply_head_mask(out, cfg: ArchConfig):
+    """Zero the dead padded q-head slots (out: (..., H_pad, Dv))."""
+    _, mask = q_head_layout(cfg)
+    if mask is None:
+        return out
+    return out * mask[..., :, None].astype(out.dtype)
+
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    m = cfg.mla
+    keys = jax.random.split(key, 6)
+    d, _ = cfg.d_model, cfg.num_heads
+    h, _mask = q_head_layout(cfg)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    s = d ** -0.5
+    return {
+        "wq_a": truncated_normal(keys[0], (d, m.q_lora_rank), s, dtype),
+        "wq_b": truncated_normal(keys[1], (m.q_lora_rank, h, qk_head),
+                                 m.q_lora_rank ** -0.5, dtype),
+        "wkv_a": truncated_normal(keys[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), s, dtype),
+        "wkv_b": truncated_normal(
+            keys[3], (m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim),
+            m.kv_lora_rank ** -0.5, dtype),
+        "wo": truncated_normal(keys[4], (h, m.v_head_dim, d), (h * m.v_head_dim) ** -0.5, dtype),
+        "q_norm_scale": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "kv_norm_scale": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+    }
+
+
+def _mla_qkv_from_latent(params, cq_norm, latent_kv, k_rope, q_positions,
+                         k_positions, cfg: ArchConfig):
+    """Expand per-head q, k, v from the (normalised) latents."""
+    m = cfg.mla
+    q = jnp.einsum("bsr,rhe->bshe", cq_norm, params["wq_b"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, q_positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    kv = jnp.einsum("bsr,rhe->bshe", latent_kv, params["wkv_b"])
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], k_positions, cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (m.qk_rope_head_dim,))
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return q, k, v
+
+
+def _rms(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def mla_attention(params, x, positions, cfg: ArchConfig, *, mask):
+    m = cfg.mla
+    cq = _rms(x @ params["wq_a"], params["q_norm_scale"], cfg.norm_eps)
+    ckv = x @ params["wkv_a"]
+    latent_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    latent_kv = _rms(latent_kv, params["kv_norm_scale"], cfg.norm_eps)
+    q, k, v = _mla_qkv_from_latent(params, cq, latent_kv, k_rope,
+                                   positions, positions, cfg)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = dot_product_attention(q, k, v, mask=mask, scale=scale)
+    out = apply_head_mask(out, cfg)
+    attn_out = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    # MLA cache = compressed latent + shared rope key (this is the point of MLA)
+    return attn_out, (latent_kv, k_rope)
+
+
+def mla_decode(params, x, cache_latent, cache_krope, pos, cfg: ArchConfig):
+    """cache_latent: (B, S, kv_lora_rank); cache_krope: (B, S, rope_dim)."""
+    m = cfg.mla
+    b, s = cache_latent.shape[0], cache_latent.shape[1]
+    cq = _rms(x @ params["wq_a"], params["q_norm_scale"], cfg.norm_eps)
+    ckv = x @ params["wkv_a"]
+    latent_new, krope_new = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    latent_new = _rms(latent_new, params["kv_norm_scale"], cfg.norm_eps)
+    cache_latent = cache_latent.at[:, pos].set(latent_new[:, 0])
+    cache_krope = cache_krope.at[:, pos].set(krope_new[:, 0])
+
+    q_positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    k_positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q, k, v = _mla_qkv_from_latent(params, cq, cache_latent, cache_krope,
+                                   q_positions, k_positions, cfg)
+    valid = (jnp.arange(s) <= pos)[None, None, None, None, :]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = dot_product_attention(q, k, v, mask=valid, scale=scale)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), cache_latent, cache_krope

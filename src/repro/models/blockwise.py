@@ -1,0 +1,171 @@
+"""Blockwise (flash-style) attention in pure JAX.
+
+Never materialises the (Q, K) logit matrix: outer ``lax.scan`` over query
+blocks, inner ``lax.scan`` over key/value blocks with running-softmax
+statistics.  This is the XLA path used by every train/prefill forward; the
+Pallas kernel in ``repro.kernels.flash_attention`` implements the same
+contract with VMEM tiling for TPU.
+
+For sliding-window attention the inner scan is replaced by a single
+``dynamic_slice`` of the (window + q_block)-wide key stripe per query block —
+compute is proportional to the window, not the sequence.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def _block_mask(q_pos, k_pos, *, causal, window, sink):
+    """q_pos: (qb,), k_pos: (kb,) -> bool (qb, kb), True = attend."""
+    qp, kp = q_pos[:, None], k_pos[None, :]
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        in_window = qp - kp < window
+        if sink:
+            in_window |= kp < sink
+        mask &= in_window
+    mask &= kp >= 0  # padding slots carry k_pos = -1
+    return mask
+
+
+def _attend_block(q, k, v, mask, softcap, scale, m, l, acc):
+    """One (q_block, k_block) tile of running-softmax attention.
+
+    q: (B, qb, Hkv, G, D); k/v: (B, kb, Hkv, D); mask: (qb, kb);
+    m, l: (B, Hkv, G, qb); acc: (B, Hkv, G, qb, Dv).
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = corr * l + jnp.sum(p, axis=-1)
+    acc_new = corr[..., None] * acc + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, *, q_pos=None, k_pos=None, causal=True,
+                    window: Optional[int] = None, sink: int = 0,
+                    logit_softcap: Optional[float] = None, scale=None,
+                    q_block: int = 512, k_block: int = 512):
+    """q: (B, Q, H, D); k, v: (B, K, Hkv, Dk/Dv) -> (B, Q, H, Dv)."""
+    b, qlen, h, d = q.shape
+    klen, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    q_block = min(q_block, qlen)
+    k_block = min(k_block, klen)
+
+    if q_pos is None:
+        q_pos = jnp.arange(qlen, dtype=jnp.int32)
+    if k_pos is None:
+        k_pos = jnp.arange(klen, dtype=jnp.int32)
+
+    # pad to block multiples (padding keys get k_pos = -1 => masked)
+    qpad = (-qlen) % q_block
+    kpad = (-klen) % k_block
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, qpad), constant_values=0)
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, kpad), constant_values=-1)
+
+    nq, nk = q.shape[1] // q_block, k.shape[1] // k_block
+    qb = q.reshape(b, nq, q_block, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(nq, q_block)
+    kb = k.reshape(b, nk, k_block, hkv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, k_block, hkv, dv).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nk, k_block)
+
+    if window is not None and klen > 2 * (window + k_block):
+        out = _windowed(qb, qp, k, v, k_pos, window=window, sink=sink,
+                        softcap=logit_softcap, scale=scale)
+    else:
+        out = _full(qb, qp, kb, vb, kp, causal=causal, window=window, sink=sink,
+                    softcap=logit_softcap, scale=scale)
+    # out: (nq, B, qb, Hkv, G, Dv)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_block, h, dv)
+    return out[:, :qlen]
+
+
+def _full(qb, qp, kb, vb, kp, *, causal, window, sink, softcap, scale):
+    """Scan q blocks (outer) x kv blocks (inner), masked."""
+    nq, b, q_block, hkv, g, d = qb.shape
+    dv = vb.shape[-1]
+
+    def q_step(_, xq):
+        qi, qpi = xq
+
+        def kv_step(carry, xkv):
+            m, l, acc = carry
+            ki, vi, kpi = xkv
+            mask = _block_mask(qpi, kpi, causal=causal, window=window, sink=sink)
+            return _attend_block(qi, ki, vi, mask, softcap, scale, m, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, Hkv, G, qb, Dv) -> (B, qb, Hkv, G, Dv)
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, qp))
+    return outs.astype(vb.dtype)
+
+
+def _windowed(qb, qp, k, v, k_pos, *, window, sink, softcap, scale):
+    """Sliding-window: one dynamic_slice stripe of keys per query block."""
+    nq, b, q_block, hkv, g, d = qb.shape
+    dv = v.shape[-1]
+    stripe = window + q_block  # enough to cover [q_start - window, q_end)
+    # pad front so the stripe slice never goes out of bounds
+    k = jnp.pad(k, ((0, 0), (stripe, 0), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (stripe, 0), (0, 0), (0, 0)))
+    k_pos = jnp.pad(k_pos, (stripe, 0), constant_values=-1)
+
+    sink_k = k[:, stripe:stripe + sink] if sink else None
+    sink_v = v[:, stripe:stripe + sink] if sink else None
+    sink_pos = k_pos[stripe:stripe + sink] if sink else None
+
+    def q_step(_, xq):
+        qi, qpi, qidx = xq
+        start = qidx * q_block + q_block  # == (q_end - window) + padding offset
+        ki = jax.lax.dynamic_slice_in_dim(k, start, stripe, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(v, start, stripe, axis=1)
+        kpi = jax.lax.dynamic_slice_in_dim(k_pos, start, stripe, axis=0)
+
+        m0 = jnp.full((b, hkv, g, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, dv), jnp.float32)
+        mask = _block_mask(qpi, kpi, causal=True, window=window, sink=0)
+        m, l, acc = _attend_block(qi, ki, vi, mask, softcap, scale, m0, l0, a0)
+        if sink:
+            # sink keys NOT already covered by the window stripe (avoid double
+            # attending for early query blocks where the stripe reaches pos 0)
+            smask = ((qpi[:, None] >= sink_pos[None, :])
+                     & (sink_pos[None, :] >= 0)
+                     & (qpi[:, None] - sink_pos[None, :] >= window))
+            m, l, acc = _attend_block(qi, sink_k, sink_v, smask, softcap, scale,
+                                      m, l, acc)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    idx = jnp.arange(nq, dtype=jnp.int32)
+    _, outs = jax.lax.scan(q_step, None, (qb, qp, idx))
+    return outs.astype(v.dtype)

@@ -1,0 +1,401 @@
+"""Single-token decode (serve) path with KV / SSM caches.
+
+Cache layouts (stacked over layers, scanned):
+  dense/vlm:  {"k","v": (L, B, Sc, Hkv, hd), "k_pos": (Sc,)}
+  mla:        {"latent": (L, B, Sc, rank), "krope": (L, B, Sc, rope), "k_pos"}
+  moe:        dense layout (+ dense_first caches for DeepSeekMoE)
+  ssm:        {"conv_x","conv_B","conv_C","ssm": (L, B, ...)}
+  hybrid:     mamba caches (n_mamba, ...) + attn caches (n_attn, ...)
+  audio:      self cache (L, ...) + precomputed cross K/V (L, B, F, H, hd)
+
+Ring caches (sliding-window / window+sink long-context decode) keep
+``sink`` absolute slots followed by a ``window``-slot ring; ``k_pos`` stores
+the absolute position held by each slot (-1 = empty).  Keys are rotated
+(RoPE) at write time with their absolute position, so only masking needs
+``k_pos`` at read time.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models import moe as moe_mod
+from repro.models.layers import embed, mlp, rmsnorm, unembed
+from repro.models.transformer import lm_head_table
+
+NEG_INF = -2.0 ** 30
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def cache_length(cfg: ArchConfig, shape: InputShape) -> Tuple[int, int]:
+    """(cache_slots, sink) for attention caches under this input shape."""
+    if shape.name == "long_500k" and cfg.long_context_variant in ("window", "window_global", "ssm"):
+        if cfg.sliding_window is None:
+            return 0, 0
+        sink = 128 if cfg.long_context_variant == "window_global" else 0
+        return cfg.sliding_window + sink, sink
+    return shape.seq_len, 0
+
+
+def init_cache(cfg: ArchConfig, shape: InputShape, batch: int = None):
+    """Zeros cache pytree for a decode step at context length shape.seq_len."""
+    b = batch if batch is not None else shape.global_batch
+    dtype = jnp.dtype(cfg.dtype)
+    sc, sink = cache_length(cfg, shape)
+    kpos = _initial_kpos(sc, sink, shape.seq_len)
+
+    def attn_kv(n_layers, heads):
+        return {
+            "k": jnp.zeros((n_layers, b, sc, heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((n_layers, b, sc, heads, cfg.head_dim), dtype),
+        }
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.attention_type == "mla":
+            m = cfg.mla
+            return {
+                "latent": jnp.zeros((cfg.num_layers, b, sc, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((cfg.num_layers, b, sc, m.qk_rope_head_dim), dtype),
+                "k_pos": kpos,
+            }
+        return dict(attn_kv(cfg.num_layers, cfg.num_kv_heads), k_pos=kpos)
+    if cfg.family == "moe":
+        c = dict(attn_kv(cfg.num_layers - cfg.moe.first_dense_layers,
+                         cfg.num_kv_heads), k_pos=kpos)
+        if cfg.moe.first_dense_layers:
+            c["dense_first"] = attn_kv(cfg.moe.first_dense_layers, cfg.num_kv_heads)
+        return c
+    if cfg.family == "ssm":
+        per = mamba2.init_mamba_cache(cfg, b, dtype)
+        return {"mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), per)}
+    if cfg.family == "hybrid":
+        from repro.models.transformer import _hybrid_layout
+        n_attn, n_mamba, *_ = _hybrid_layout(cfg)
+        per = mamba2.init_mamba_cache(cfg, b, dtype)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_mamba,) + a.shape), per),
+            **attn_kv(n_attn, cfg.num_kv_heads),
+            "k_pos": kpos,
+        }
+    if cfg.family == "audio":
+        c = dict(attn_kv(cfg.num_layers, cfg.num_kv_heads), k_pos=kpos)
+        c["cross_k"] = jnp.zeros(
+            (cfg.num_layers, b, cfg.encoder_frames, cfg.num_kv_heads, cfg.head_dim), dtype)
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+    raise ValueError(cfg.family)
+
+
+def _initial_kpos(sc: int, sink: int, context: int):
+    """k_pos for a cache that already holds ``context`` tokens."""
+    if sc == 0:
+        return None
+    if sc >= context:  # full cache
+        return jnp.where(jnp.arange(sc) < context, jnp.arange(sc), -1).astype(jnp.int32)
+    # ring: slots [0, sink) hold positions 0..sink; ring part holds the last
+    # (sc - sink) positions in rotated order
+    window = sc - sink
+    ring_slot = jnp.arange(window)
+    # position p occupies slot sink + (p - sink) % window
+    newest = context - 1
+    pos = newest - ((sink + (newest - sink) % window) - (sink + ring_slot)) % window
+    pos_ring = jnp.where(pos >= sink, pos, -1)
+    return jnp.concatenate([jnp.arange(sink), pos_ring]).astype(jnp.int32)
+
+
+def _ring_slot(pos, sc: int, sink: int, context_is_ring: bool):
+    if not context_is_ring:
+        return pos
+    window = sc - sink
+    return jnp.where(pos < sink, pos, sink + (pos - sink) % window)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode attention
+# ---------------------------------------------------------------------------
+
+
+def _decode_attend(q, k, v, k_pos, pos, *, window, sink, softcap, scale=None):
+    """q: (B, 1, H, D); k/v: (B, Sc, Hkv, D); k_pos: (Sc,)."""
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    if window is not None:
+        in_win = (pos - k_pos < window)
+        if sink:
+            in_win |= k_pos < sink
+        valid &= in_win
+    mask = valid[None, None, None, None, :]
+    return attn.dot_product_attention(q, k, v, mask=mask, logit_softcap=softcap,
+                                      scale=scale)
+
+
+def _gqa_decode_layer(lp, x, ck, cv, k_pos, pos, slot, cfg, *, window, sink):
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhe->bshe", h, lp["attn"]["wq"])
+    kn = jnp.einsum("bsd,dhe->bshe", h, lp["attn"]["wk"])
+    vn = jnp.einsum("bsd,dhe->bshe", h, lp["attn"]["wv"])
+    q = attn.apply_rope(q, positions, cfg.rope_theta)
+    kn = attn.apply_rope(kn, positions, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_index_in_dim(ck, kn[:, 0], slot, axis=1)
+    cv = jax.lax.dynamic_update_index_in_dim(cv, vn[:, 0], slot, axis=1)
+    out = _decode_attend(q, ck, cv, k_pos, pos, window=window, sink=sink,
+                         softcap=cfg.attn_logit_softcap)
+    out = attn.apply_head_mask(out, cfg)
+    x = x + jnp.einsum("bshe,hed->bsd", out, lp["attn"]["wo"])
+    return x, ck, cv
+
+
+def _mla_decode_layer(lp, x, clat, ckr, k_pos, pos, slot, cfg):
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    m = cfg.mla
+    ap = lp["attn"]
+    cq = attn._rms(h @ ap["wq_a"], ap["q_norm_scale"], cfg.norm_eps)
+    ckv = h @ ap["wkv_a"]
+    lat_new, kr_new = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    lat_new = attn._rms(lat_new, ap["kv_norm_scale"], cfg.norm_eps)
+    clat = jax.lax.dynamic_update_index_in_dim(clat, lat_new[:, 0], slot, axis=1)
+    ckr = jax.lax.dynamic_update_index_in_dim(ckr, kr_new[:, 0], slot, axis=1)
+
+    b, sc = clat.shape[0], clat.shape[1]
+    q_positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    k_positions = jnp.broadcast_to(jnp.maximum(k_pos, 0)[None], (b, sc))
+    q, k, v = attn._mla_qkv_from_latent(ap, cq, clat, ckr, q_positions,
+                                        k_positions, cfg)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = _decode_attend(q, k, v, k_pos, pos, window=None, sink=0,
+                         softcap=None, scale=scale)
+    out = attn.apply_head_mask(out, cfg)
+    x = x + jnp.einsum("bshe,hed->bsd", out, ap["wo"])
+    return x, clat, ckr
+
+
+# ---------------------------------------------------------------------------
+# decode_step per family
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig, shape: InputShape):
+    """One-token decode.  batch = {"token": (B, 1) int32, "pos": () int32}.
+
+    Returns (logits (B, vocab), new_cache).
+    """
+    token, pos = batch["token"], batch["pos"]
+    x = embed(params["embed"], token)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    sc, sink = cache_length(cfg, shape)
+    is_ring = sc < shape.seq_len and sc > 0
+    window = cfg.sliding_window if (cfg.sliding_window and
+                                    (is_ring or cfg.family == "moe"
+                                     or cfg.local_global_period > 1)) else None
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.attention_type == "mla":
+            x, cache = _decode_mla_stack(params, cache, x, pos, sc, sink, is_ring, cfg)
+        else:
+            x, cache = _decode_dense_stack(params, cache, x, pos, sc, sink,
+                                           is_ring, window, cfg)
+    elif cfg.family == "moe":
+        x, cache = _decode_moe_stack(params, cache, x, pos, sc, sink, is_ring,
+                                     window, cfg)
+    elif cfg.family == "ssm":
+        x, cache = _decode_ssm_stack(params, cache, x, cfg)
+    elif cfg.family == "hybrid":
+        x, cache = _decode_hybrid_stack(params, cache, x, pos, sc, sink,
+                                        is_ring, window, cfg)
+    elif cfg.family == "audio":
+        x, cache = _decode_audio_stack(params, cache, x, pos, sc, sink, cfg)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(lm_head_table(params, cfg), x[:, 0], cfg.final_logit_softcap)
+    return logits, cache
+
+
+def _decode_dense_stack(params, cache, x, pos, sc, sink, is_ring, window, cfg):
+    slot = _ring_slot(pos, sc, sink, is_ring)
+    k_pos = cache["k_pos"].at[slot].set(pos)
+    period = cfg.local_global_period
+
+    if period > 1:
+        groups = cfg.num_layers // period
+        ck = cache["k"].reshape((groups, period) + cache["k"].shape[1:])
+        cv = cache["v"].reshape((groups, period) + cache["v"].shape[1:])
+
+        def body(h, xs):
+            gp, gk, gv = xs
+            ks, vs = [], []
+            for i in range(period):
+                lp = jax.tree.map(lambda a: a[i], gp)
+                local = i % period != period - 1
+                # local layers: always sliding window.  global layers: full
+                # attention, except the long_500k window+sink ring variant.
+                w = cfg.sliding_window if (local or is_ring) else None
+                snk = sink if (not local and is_ring) else 0
+                h, nk, nv = _gqa_decode_layer(lp, h, gk[i], gv[i], k_pos, pos,
+                                              slot, cfg, window=w, sink=snk)
+                h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+                ks.append(nk)
+                vs.append(nv)
+            return h, (jnp.stack(ks), jnp.stack(vs))
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], ck, cv))
+        cache = dict(cache, k=nk.reshape(cache["k"].shape),
+                     v=nv.reshape(cache["v"].shape), k_pos=k_pos)
+        return x, cache
+
+    def body(h, xs):
+        lp, lk, lv = xs
+        h, nk, nv = _gqa_decode_layer(lp, h, lk, lv, k_pos, pos, slot, cfg,
+                                      window=window, sink=sink)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    return x, dict(cache, k=nk, v=nv, k_pos=k_pos)
+
+
+def _decode_mla_stack(params, cache, x, pos, sc, sink, is_ring, cfg):
+    slot = pos  # MLA decode is full-cache only (long_500k skipped)
+    k_pos = cache["k_pos"].at[slot].set(pos)
+
+    def body(h, xs):
+        lp, lat, kr = xs
+        h, nlat, nkr = _mla_decode_layer(lp, h, lat, kr, k_pos, pos, slot, cfg)
+        h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, (nlat, nkr)
+
+    x, (nlat, nkr) = jax.lax.scan(
+        body, x, (params["layers"], cache["latent"], cache["krope"]))
+    return x, dict(cache, latent=nlat, krope=nkr, k_pos=k_pos)
+
+
+def _decode_moe_stack(params, cache, x, pos, sc, sink, is_ring, window, cfg):
+    slot = _ring_slot(pos, sc, sink, is_ring)
+    k_pos = cache["k_pos"].at[slot].set(pos)
+
+    if "dense_first" in params:
+        df = cache["dense_first"]
+        nks, nvs = [], []
+        for i in range(cfg.moe.first_dense_layers):
+            lp = jax.tree.map(lambda a: a[i], params["dense_first"])
+            x, nk, nv = _gqa_decode_layer(lp, x, df["k"][i], df["v"][i], k_pos,
+                                          pos, slot, cfg, window=window, sink=sink)
+            x = x + mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            nks.append(nk)
+            nvs.append(nv)
+        cache = dict(cache, dense_first={"k": jnp.stack(nks), "v": jnp.stack(nvs)})
+
+    def body(h, xs):
+        lp, lk, lv = xs
+        h, nk, nv = _gqa_decode_layer(lp, h, lk, lv, k_pos, pos, slot, cfg,
+                                      window=window, sink=sink)
+        y, _ = moe_mod.moe_ffn(lp["moe"], rmsnorm(lp["ln2"], h, cfg.norm_eps), cfg)
+        return h + y, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    return x, dict(cache, k=nk, v=nv, k_pos=k_pos)
+
+
+def _decode_ssm_stack(params, cache, x, cfg):
+    def body(h, xs):
+        lp, mc = xs
+        hn = rmsnorm(lp["ln"], h, cfg.norm_eps)
+        y, nmc = mamba2.mamba_decode(lp["mamba"], hn, mc, cfg)
+        return h + y, nmc
+
+    x, new_mamba = jax.lax.scan(body, x, (params["layers"], cache["mamba"]))
+    return x, dict(cache, mamba=new_mamba)
+
+
+def _decode_hybrid_stack(params, cache, x, pos, sc, sink, is_ring, window, cfg):
+    from repro.models.transformer import _hybrid_layout
+    n_attn, n_mamba, groups, per_group, tail = _hybrid_layout(cfg)
+    slot = _ring_slot(pos, sc, sink, is_ring)
+    k_pos = cache["k_pos"].at[slot].set(pos)
+    shared = params["shared_attn"]
+    w = cfg.sliding_window if is_ring else None
+
+    mg = jax.tree.map(
+        lambda a: a[: groups * per_group].reshape((groups, per_group) + a.shape[1:]),
+        params["mamba_groups"])
+    mc_flat = jax.tree.map(lambda a: a[: groups * per_group], cache["mamba"])
+    mc = jax.tree.map(
+        lambda a: a.reshape((groups, per_group) + a.shape[1:]), mc_flat)
+
+    def group_body(h, xs):
+        gp, gmc, gk, gv = xs
+        h, nk, nv = _gqa_decode_layer(shared, h, gk, gv, k_pos, pos, slot, cfg,
+                                      window=w, sink=sink)
+        h = h + mlp(shared["mlp"], rmsnorm(shared["ln2"], h, cfg.norm_eps))
+
+        def inner(hh, ys):
+            lp, lmc = ys
+            hn = rmsnorm(lp["ln"], hh, cfg.norm_eps)
+            y, nmc = mamba2.mamba_decode(lp["mamba"], hn, lmc, cfg)
+            return hh + y, nmc
+
+        h, nmc = jax.lax.scan(inner, h, (gp, gmc))
+        return h, (nmc, nk, nv)
+
+    gk = cache["k"][:groups]
+    gv = cache["v"][:groups]
+    x, (nmc, nk, nv) = jax.lax.scan(group_body, x, (mg, mc, gk, gv))
+    new_mamba = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), nmc)
+    new_k, new_v = nk, nv
+
+    if tail:
+        x, tk, tv = _gqa_decode_layer(shared, x, cache["k"][groups],
+                                      cache["v"][groups], k_pos, pos, slot, cfg,
+                                      window=w, sink=sink)
+        x = x + mlp(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps))
+        new_k = jnp.concatenate([new_k, tk[None]])
+        new_v = jnp.concatenate([new_v, tv[None]])
+        tails = []
+        for i in range(tail):
+            lp = jax.tree.map(lambda a: a[i], params["mamba_tail"])
+            lmc = jax.tree.map(lambda a: a[groups * per_group + i], cache["mamba"])
+            hn = rmsnorm(lp["ln"], x, cfg.norm_eps)
+            y, nmc_t = mamba2.mamba_decode(lp["mamba"], hn, lmc, cfg)
+            x = x + y
+            tails.append(nmc_t)
+        tail_stacked = jax.tree.map(lambda *a: jnp.stack(a), *tails)
+        new_mamba = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                                 new_mamba, tail_stacked)
+
+    return x, dict(cache, mamba=new_mamba, k=new_k, v=new_v, k_pos=k_pos)
+
+
+def _decode_audio_stack(params, cache, x, pos, sc, sink, cfg):
+    slot = pos
+    k_pos = cache["k_pos"].at[slot].set(pos)
+
+    def body(h, xs):
+        lp, lk, lv, xk, xv = xs
+        h, nk, nv = _gqa_decode_layer(lp, h, lk, lv, k_pos, pos, slot, cfg,
+                                      window=None, sink=0)
+        # cross attention against precomputed encoder K/V
+        hn = rmsnorm(lp["ln_cross"], h, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhe->bshe", hn, lp["cross"]["wq"])
+        out = attn.dot_product_attention(q, xk, xv)
+        h = h + jnp.einsum("bshe,hed->bsd", out, lp["cross"]["wo"])
+        h = h + mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    return x, dict(cache, k=nk, v=nv, k_pos=k_pos)

@@ -1,0 +1,104 @@
+"""Shared building blocks: norms, rotary embeddings, gated MLP, embeddings.
+
+Plain functional JAX: each module is an ``init_*`` returning a pytree of
+arrays plus an ``apply`` function.  No framework dependency — pytrees shard
+cleanly under ``jax.jit`` + ``NamedSharding`` and stack cleanly for
+scan-over-layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "gate": truncated_normal(kg, (d_model, d_ff), s_in, dtype),
+        "up": truncated_normal(ku, (d_model, d_ff), s_in, dtype),
+        "down": truncated_normal(kd, (d_ff, d_model), s_out, dtype),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int, dtype):
+    return {"table": truncated_normal(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(table, x, final_softcap=None):
+    """table: (vocab, d_model) — tied or untied lm head."""
+    logits = x @ table.T
+    if final_softcap:
+        logits = softcap(logits, final_softcap)
+    return logits

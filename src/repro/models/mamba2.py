@@ -1,0 +1,263 @@
+"""Mamba2 block — SSD (state-space duality) formulation [arXiv:2405.21060].
+
+Chunked SSD: within-chunk attention-like term + inter-chunk state recurrence
+(``jax.lax.scan`` over chunks — linear in sequence length, O(1) decode state).
+``repro.kernels.ssd_scan`` provides the Pallas TPU kernel for the intra-chunk
+term; this module's jnp implementation is the oracle and the dry-run path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rmsnorm, truncated_normal
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ArchConfig, dtype):
+    """Projections are kept separate (z/x/B/C/dt and per-stream convs) so each
+    tensor shards cleanly on the ``model`` axis without crossing concat
+    boundaries (see DESIGN.md §4)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.state_dim
+    keys = jax.random.split(key, 9)
+    sc = d ** -0.5
+    return {
+        "z_proj": truncated_normal(keys[0], (d, di), sc, dtype),
+        "x_proj": truncated_normal(keys[1], (d, di), sc, dtype),
+        "B_proj": truncated_normal(keys[2], (d, gn), sc, dtype),
+        "C_proj": truncated_normal(keys[3], (d, gn), sc, dtype),
+        "dt_proj": truncated_normal(keys[4], (d, nh), sc, dtype),
+        "conv_x_w": truncated_normal(keys[5], (s.conv_width, di), 0.1, dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_B_w": truncated_normal(keys[6], (s.conv_width, gn), 0.1, dtype),
+        "conv_B_b": jnp.zeros((gn,), dtype),
+        "conv_C_w": truncated_normal(keys[7], (s.conv_width, gn), 0.1, dtype),
+        "conv_C_b": jnp.zeros((gn,), dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": truncated_normal(keys[8], (di, d), di ** -0.5, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core (jnp oracle; Pallas kernel mirrors this contract)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD linear-attention dual form, chunked.
+
+    x: (b, l, h, p)   inputs (dt weighting happens here: xbar = x * dt)
+    dt: (b, l, h)     positive step sizes
+    A: (h,)           negative decay rates
+    B, C: (b, l, g, n) input/output projections (g groups broadcast to heads)
+    Returns y: (b, l, h, p), final_state: (b, h, p, n).
+
+    Implemented as a single ``lax.scan`` over chunks (the inter-chunk state
+    recurrence is sequential anyway) with a rematerialised body, so only ONE
+    chunk's quadratic (chunk x chunk x heads) intermediates are ever alive —
+    the all-chunks formulation materialised (b, nc, chunk, chunk, h) decay
+    tensors, tens of GB at production shapes.  Mirrors the Pallas kernel's
+    structure (repro.kernels.ssd_scan).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    hpg = h // g
+
+    dA = dt * A[None, None, :]                    # (b, l, h) log decay
+    xbar = x * dt[..., None]
+
+    def chunked(t, extra):  # (b, l, ...) -> (nc, b, chunk, ...)
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + extra), 1, 0)
+
+    xs = (chunked(xbar, (h, p)), chunked(dA, (h,)),
+          chunked(B, (g, n)), chunked(C, (g, n)))
+
+    qpos = jnp.arange(chunk)
+    causal = qpos[:, None] >= qpos[None, :]
+
+    def body(state, inp):
+        xbar_c, dA_c, B_c, C_c = inp              # (b, chunk, ...)
+        B_h = jnp.repeat(B_c, hpg, axis=2)        # (b, chunk, h, n)
+        C_h = jnp.repeat(C_c, hpg, axis=2)
+        cum = jnp.cumsum(dA_c, axis=1)            # (b, chunk, h)
+        total = cum[:, -1]                        # (b, h)
+
+        # intra-chunk: M[t, s] = exp(cum_t - cum_s) (C_t . B_s), s <= t
+        decay = cum[:, :, None, :] - cum[:, None, :, :]   # (b, t, s, h)
+        decay = jnp.where(causal[None, :, :, None], decay, -jnp.inf)
+        CB = jnp.einsum("bthn,bshn->btsh", C_h, B_h)
+        y_intra = jnp.einsum("btsh,bshp->bthp", CB * jnp.exp(decay), xbar_c)
+
+        # inter-chunk: y_inter[t] = exp(cum_t) * C_t . state
+        y_inter = jnp.einsum("bth,bthn,bhpn->bthp", jnp.exp(cum), C_h, state)
+
+        # state update
+        w = jnp.exp(total[:, None, :] - cum)      # (b, chunk, h)
+        new_state = state * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bqh,bqhn,bqhp->bhpn", w, B_h, xbar_c)
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(jax.checkpoint(body), init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, h, p)
+    return y, final
+
+
+def ssd_reference(x, dt, A, B, C):
+    """O(L^2)-free sequential oracle: plain recurrence (for tests)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hpg = h // g
+    B_h = jnp.repeat(B, hpg, axis=2)
+    C_h = jnp.repeat(C, hpg, axis=2)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        a = jnp.exp(dtt * A[None, :])  # (b,h)
+        state = state * a[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", Bt, (xt * dtt[..., None]).astype(state.dtype))
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, state)
+        return state, y
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B_h, 1, 0), jnp.moveaxis(C_h, 1, 0))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# Full block: train / prefill
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, L, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out + b
+
+
+def mamba_block(params, x, cfg: ArchConfig, *, use_kernel: bool = False):
+    """x: (B, L, d_model) -> (B, L, d_model), cache (ssm state + conv tails)."""
+    s = cfg.ssm
+    nh = s.n_heads(cfg.d_model)
+    w = s.conv_width
+
+    z = x @ params["z_proj"]
+    xs_raw = x @ params["x_proj"]
+    B_raw = x @ params["B_proj"]
+    C_raw = x @ params["C_proj"]
+    dt = x @ params["dt_proj"]
+    xs = jax.nn.silu(_causal_conv(xs_raw, params["conv_x_w"], params["conv_x_b"]))
+    B = jax.nn.silu(_causal_conv(B_raw, params["conv_B_w"], params["conv_B_b"]))
+    C = jax.nn.silu(_causal_conv(C_raw, params["conv_C_w"], params["conv_C_b"]))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(xs.shape[0], xs.shape[1], nh, s.head_dim)
+    Bg = B.reshape(B.shape[0], B.shape[1], s.n_groups, s.state_dim)
+    Cg = C.reshape(C.shape[0], C.shape[1], s.n_groups, s.state_dim)
+
+    # pad to a chunk multiple; padded steps use dt = 0 (identity transition,
+    # zero input) so they leave the state untouched
+    l0 = xh.shape[1]
+    chunk = min(s.chunk_size, l0)
+    pad = (-l0) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bg = jnp.pad(Bg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cg = jnp.pad(Cg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    if use_kernel:
+        from repro.kernels.ops import ssd_scan as ssd_impl
+        y, final = ssd_impl(xh, dt, A, Bg, Cg, chunk=chunk)
+    else:
+        y, final = ssd_chunked(xh, dt, A, Bg, Cg, chunk=chunk)
+    if pad:
+        y = y[:, :l0]
+        xh = xh[:, :l0]
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(y.shape[0], y.shape[1], s.d_inner(cfg.d_model)).astype(x.dtype)
+
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    cache = {
+        "conv_x": xs_raw[:, -(w - 1):], "conv_B": B_raw[:, -(w - 1):],
+        "conv_C": C_raw[:, -(w - 1):], "ssm": final,
+    }
+    return y @ params["out_proj"], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) per-step state update
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.state_dim
+    nh = s.n_heads(cfg.d_model)
+    return {
+        "conv_x": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, s.conv_width - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, s.conv_width - 1, gn), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+    }
+
+
+def _conv_step(cache_buf, xt, w, b):
+    """cache_buf: (B, W-1, C); xt: (B, 1, C) -> (B, C), new buf."""
+    conv_in = jnp.concatenate([cache_buf, xt], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", conv_in, w) + b
+    return jax.nn.silu(out), conv_in[:, 1:]
+
+
+def mamba_decode(params, x, cache, cfg: ArchConfig):
+    """x: (B, 1, d_model); O(1)-state single-token step."""
+    s = cfg.ssm
+    nh = s.n_heads(cfg.d_model)
+
+    z = x @ params["z_proj"]
+    xs_t = x @ params["x_proj"]
+    B_t = x @ params["B_proj"]
+    C_t = x @ params["C_proj"]
+    dt = x @ params["dt_proj"]
+
+    xs, new_conv_x = _conv_step(cache["conv_x"], xs_t, params["conv_x_w"], params["conv_x_b"])
+    B, new_conv_B = _conv_step(cache["conv_B"], B_t, params["conv_B_w"], params["conv_B_b"])
+    C, new_conv_C = _conv_step(cache["conv_C"], C_t, params["conv_C_w"], params["conv_C_b"])
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(-1, nh, s.head_dim)
+    Bg = jnp.repeat(B.reshape(-1, s.n_groups, s.state_dim), nh // s.n_groups, axis=1)
+    Cg = jnp.repeat(C.reshape(-1, s.n_groups, s.state_dim), nh // s.n_groups, axis=1)
+
+    a = jnp.exp(dt * A[None, :])  # (B, H)
+    ssm = cache["ssm"] * a[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bg, xh * dt[..., None])
+    y = jnp.einsum("bhn,bhpn->bhp", Cg, ssm)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, s.d_inner(cfg.d_model)).astype(x.dtype)
+
+    y = rmsnorm({"scale": params["norm_scale"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    new_cache = {"conv_x": new_conv_x, "conv_B": new_conv_B,
+                 "conv_C": new_conv_C, "ssm": ssm}
+    return y @ params["out_proj"], new_cache

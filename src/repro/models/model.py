@@ -1,0 +1,164 @@
+"""Model facade: step functions + input specs for every (arch x shape).
+
+These are the exact callables the launcher lowers/compiles:
+  * train:   ``make_train_step(cfg, optimizer)``
+  * prefill: ``make_prefill_step(cfg)``
+  * decode:  ``make_decode_step(cfg, shape)``
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+multi-pod dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import decode as decode_mod
+from repro.models import transformer
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+
+    specs = {}
+    if cfg.modality == "vision":
+        specs["patch_embed"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), f32)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.num_patches), i32)
+    elif cfg.modality == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model), f32)
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    return specs
+
+
+def make_batch(cfg: ArchConfig, shape: InputShape, key) -> dict:
+    """Materialised random batch matching input_specs (for smoke tests)."""
+    out = {}
+    for name, spec in input_specs(cfg, shape).items():
+        if spec.dtype == jnp.int32:
+            if name == "pos":
+                out[name] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+            else:
+                out[name] = jax.random.randint(key, spec.shape, 0,
+                                               max(cfg.vocab_size, 2), jnp.int32)
+        else:
+            out[name] = jax.random.normal(key, spec.shape, spec.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer, *, grad_accum: int = 1,
+                    microbatch_shardings=None, grad_shardings=None):
+    """grad_accum > 1 splits the per-device batch into microbatches and
+    accumulates grads under a scan — the standard activation-memory knob
+    (divides peak activation size by grad_accum at zero collective cost).
+
+    microbatch_shardings: optional pytree of NamedSharding for the reshaped
+    (accum, batch/accum, ...) batch.  REQUIRED on a real mesh: without the
+    constraint GSPMD assigns the data axis to the scan (accum) dim and every
+    device computes the full microbatch (§Perf H3/iter2: 16x tile traffic
+    on yi-34b)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(transformer.loss_fn)(params, batch, cfg)
+
+    def train_step(params, opt_state, step, batch):
+        if grad_accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum)
+                                    + a.shape[1:]), batch)
+            if microbatch_shardings is not None:
+                micro = jax.lax.with_sharding_constraint(
+                    micro, microbatch_shardings)
+
+            def body(acc, mb):
+                loss_acc, g_acc = acc
+                loss_i, g_i = grads_of(params, mb)
+                if grad_shardings is not None:
+                    # ZeRO-style: reduce-scatter each microbatch's grads into
+                    # the (data, model)-sharded accumulator instead of keeping
+                    # a replicated-over-data grad buffer (§Perf H3/iter3)
+                    g_i = jax.lax.with_sharding_constraint(g_i, grad_shardings)
+                return (loss_acc + loss_i,
+                        jax.tree.map(jnp.add, g_acc, g_i)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            if grad_shardings is not None:
+                zeros = jax.lax.with_sharding_constraint(zeros, grad_shardings)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            scale = 1.0 / grad_accum
+            loss = loss * scale
+            grads = jax.tree.map(lambda g: g * jnp.asarray(scale, g.dtype), grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_grad_fn(cfg: ArchConfig):
+    """Bare loss+grad (the paper's streaming trainer applies its own SGD)."""
+    return jax.value_and_grad(partial(transformer.loss_fn, cfg=cfg))
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        hidden, caches, _aux, _mask = transformer.forward(
+            params, batch, cfg, collect_cache=True)
+        table = transformer.lm_head_table(params, cfg)
+        last = hidden[:, -1]
+        logits = last @ table.T
+        if cfg.final_logit_softcap:
+            logits = cfg.final_logit_softcap * jnp.tanh(logits / cfg.final_logit_softcap)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, shape: InputShape):
+    def serve_step(params, cache, batch):
+        return decode_mod.decode_step(params, cache, batch, cfg, shape)
+
+    return serve_step
+
+
+def init_params(cfg: ArchConfig, seed: int = 0):
+    return transformer.init_model(jax.random.PRNGKey(seed), cfg)
+
+
+def abstract_params(cfg: ArchConfig, seed: int = 0):
+    """ShapeDtypeStruct pytree of the params (no allocation) for dry-runs."""
+    return jax.eval_shape(lambda: transformer.init_model(jax.random.PRNGKey(seed), cfg))
+
+
+def abstract_cache(cfg: ArchConfig, shape: InputShape):
+    return jax.eval_shape(lambda: decode_mod.init_cache(cfg, shape))
+
+
+def abstract_opt_state(optimizer: Optimizer, params_abs):
+    return jax.eval_shape(optimizer.init, params_abs)

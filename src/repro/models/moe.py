@@ -1,0 +1,189 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Two sharding regimes (see DESIGN.md §4):
+  * ``tp``  — experts replicated over the ``model`` axis, each expert's FFN
+              hidden dim tensor-parallel (natural when num_experts < axis size,
+              e.g. Mixtral 8e over a 16-way axis).  No all-to-all.
+  * ``ep``  — experts sharded over ``model`` (expert parallelism; DeepSeekMoE
+              64e).  GSPMD inserts the dispatch all-to-all from the
+              token-sharded input to the expert-sharded buffers.
+
+Dispatch is sort-based (argsort tokens by expert id, gather into per-expert
+capacity slots, einsum, scatter-add back with gate weights) — the dropped-token
+capacity formulation; capacity_factor bounds memory.  The jnp reference
+``moe_dense_reference`` computes every expert for every token and is the
+oracle for tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import truncated_normal
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    keys = jax.random.split(key, 5)
+    s_in, s_out = d ** -0.5, m.d_ff_expert ** -0.5
+    params = {
+        "router": truncated_normal(keys[0], (d, m.num_experts), s_in, jnp.float32),
+        "gate": truncated_normal(keys[1], (m.num_experts, d, m.d_ff_expert), s_in, dtype),
+        "up": truncated_normal(keys[2], (m.num_experts, d, m.d_ff_expert), s_in, dtype),
+        "down": truncated_normal(keys[3], (m.num_experts, m.d_ff_expert, d), s_out, dtype),
+    }
+    if m.num_shared_experts:
+        ff_shared = m.num_shared_experts * m.d_ff_expert
+        ks = jax.random.split(keys[4], 3)
+        params["shared"] = {
+            "gate": truncated_normal(ks[0], (d, ff_shared), s_in, dtype),
+            "up": truncated_normal(ks[1], (d, ff_shared), s_in, dtype),
+            "down": truncated_normal(ks[2], (ff_shared, d), ff_shared ** -0.5, dtype),
+        }
+    return params
+
+
+def _router(params, x2d, m: MoEConfig):
+    """x2d: (T, d) -> gates (T, k), experts (T, k), aux load-balance loss."""
+    logits = (x2d.astype(jnp.float32)) @ params["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)  # renormalise
+    # Switch-style aux loss: E * sum_e f_e * p_e
+    counts = jnp.zeros((m.num_experts,), jnp.float32).at[experts.reshape(-1)].add(1.0)
+    f = counts / (x2d.shape[0] * m.top_k)
+    p = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(f * p) * m.router_aux_loss_coef
+    return gates, experts, aux
+
+
+def _expert_ffn(params, h):
+    """h: (E, C, d) -> (E, C, d) via per-expert gated MLP."""
+    g = jnp.einsum("ecd,edf->ecf", h, params["gate"])
+    u = jnp.einsum("ecd,edf->ecf", h, params["up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["down"])
+
+
+def _dispatch_group(x2d, gates, experts, e: int, k: int, capacity: int):
+    """Single-group sort-based dispatch.
+
+    x2d: (T, d); gates/experts: (T, k).
+    Returns expert_in (e, capacity, d), and (dest, token_idx, keep_gate) for
+    the combine step.  Runs entirely within one data shard under vmap.
+    """
+    t, d = x2d.shape
+    flat_expert = experts.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_expert].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_expert = jnp.arange(t * k) - starts[sorted_expert]
+    keep = pos_in_expert < capacity
+
+    token_idx = order // k
+    dest = sorted_expert * capacity + jnp.where(keep, pos_in_expert, 0)
+    dest = jnp.where(keep, dest, e * capacity)  # overflow slot (dropped)
+
+    gathered = x2d[token_idx]
+    buf = jnp.zeros((e * capacity + 1, d), x2d.dtype).at[dest].set(gathered)
+    expert_in = buf[: e * capacity].reshape(e, capacity, d)
+    keep_gate = jnp.where(keep, gates.reshape(-1)[order], 0.0)
+    return expert_in, dest, token_idx, keep_gate
+
+
+def _combine_group(expert_out, dest, token_idx, keep_gate, t: int):
+    """expert_out: (e, capacity, d) -> y (t, d)."""
+    e, c, d = expert_out.shape
+    flat = jnp.concatenate(
+        [expert_out.reshape(e * c, d), jnp.zeros((1, d), expert_out.dtype)])
+    contrib = flat[dest] * keep_gate[:, None].astype(expert_out.dtype)
+    return jnp.zeros((t, d), expert_out.dtype).at[token_idx].add(contrib)
+
+
+def moe_ffn(params, x, cfg: ArchConfig, *, capacity_factor=None):
+    """x: (B, S, d) -> (B, S, d), aux_loss.
+
+    Grouped sort-based capacity dispatch (GShard-style): routing + sort are
+    LOCAL per batch row (the data-sharded dim), so no global argsort; the
+    only cross-shard movement is the (data -> model) exchange of the
+    (B, E, C, d) dispatch buffer, which GSPMD lowers to an all-to-all when
+    experts are model-sharded (EP) and to nothing under TP."""
+    m = cfg.moe
+    b, s, d = x.shape
+    k, e = m.top_k, m.num_experts
+    capacity_factor = m.capacity_factor if capacity_factor is None else capacity_factor
+    capacity = int(max(k, capacity_factor * s * k / e))
+    capacity = -(-capacity // 8) * 8 if capacity > 8 else capacity
+
+    x2d = x.reshape(b * s, d)
+    gates, experts, aux = _router(params, x2d, m)
+    gates_g = gates.reshape(b, s, k)
+    experts_g = experts.reshape(b, s, k)
+
+    expert_in, dest, token_idx, keep_gate = jax.vmap(
+        lambda xg, gg, eg: _dispatch_group(xg, gg, eg, e, k, capacity)
+    )(x.reshape(b, s, d), gates_g, experts_g)
+    # expert_in: (B, e, capacity, d) — B over data, e over model (EP).
+    # the scatter inside the vmapped dispatch blocks GSPMD propagation:
+    # without the explicit hint the partitioner replicates the whole
+    # (B, E, C, d) buffer (measured 40 GiB/buffer on mixtral prefill_32k)
+    from repro.models.shard_hints import maybe_constrain
+    expert_in = maybe_constrain(
+        expert_in, (["pod_data"], ["model"], None, None))
+
+    def ffn(h):  # h: (B, e, c, d)
+        g = jnp.einsum("becd,edf->becf", h, params["gate"])
+        u = jnp.einsum("becd,edf->becf", h, params["up"])
+        return jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, params["down"])
+
+    # chunk the capacity dim so the (B, e, c, d_ff) intermediates stay small
+    # at long sequence lengths (32k prefill: c ~ 10k -> GBs per buffer)
+    ffn_chunk = 2048
+    if capacity > ffn_chunk and capacity % ffn_chunk == 0:
+        nch = capacity // ffn_chunk
+        h_c = jnp.moveaxis(
+            expert_in.reshape(b, e, nch, ffn_chunk, d), 2, 0)
+
+        def ffn_body(_, hc):
+            return None, ffn(hc)
+
+        _, out_c = jax.lax.scan(jax.checkpoint(ffn_body), None, h_c)
+        expert_out = jnp.moveaxis(out_c, 0, 2).reshape(b, e, capacity, d)
+    else:
+        expert_out = ffn(expert_in)
+    expert_out = maybe_constrain(
+        expert_out, (["pod_data"], ["model"], None, None))
+    y = jax.vmap(lambda eo, de, ti, kg: _combine_group(eo, de, ti, kg, s))(
+        expert_out, dest, token_idx, keep_gate)
+    y2d = y.reshape(b * s, d)
+
+    if m.num_shared_experts:
+        sh = params["shared"]
+        hshared = jax.nn.silu(x2d @ sh["gate"]) * (x2d @ sh["up"])
+        y2d = y2d + hshared @ sh["down"]
+    return y2d.reshape(b, s, d), aux
+
+
+def moe_dense_reference(params, x, cfg: ArchConfig):
+    """Oracle: compute all experts for all tokens, weight by (renormalised)
+    top-k gates.  Matches moe_ffn exactly when no token overflows capacity."""
+    m = cfg.moe
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    gates, experts, aux = _router(params, x2d, m)
+    dense_gates = jnp.zeros((b * s, m.num_experts), jnp.float32)
+    dense_gates = dense_gates.at[jnp.arange(b * s)[:, None], experts].set(gates)
+
+    g = jnp.einsum("td,edf->tef", x2d, params["gate"])
+    u = jnp.einsum("td,edf->tef", x2d, params["up"])
+    out = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, params["down"])
+    y2d = jnp.einsum("ted,te->td", out, dense_gates.astype(out.dtype))
+    if m.num_shared_experts:
+        sh = params["shared"]
+        hshared = jax.nn.silu(x2d @ sh["gate"]) * (x2d @ sh["up"])
+        y2d = y2d + hshared @ sh["down"]
+    return y2d.reshape(b, s, d), aux

@@ -1,0 +1,36 @@
+"""Runtime feature flags (perf-iteration toggles).
+
+Each flag selects between a paper-faithful/baseline implementation and a
+beyond-paper optimised one, so EXPERIMENTS.md §Perf can record both sides
+of every hypothesis from the same code.
+
+  flash_vjp — flash-attention custom VJP (O(S d) backward residuals)
+              instead of default AD over the blockwise scan (O(S^2)).
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+_FLAGS = {
+    "flash_vjp": os.environ.get("REPRO_FLASH_VJP", "0") == "1",
+}
+
+
+def flag(name: str) -> bool:
+    return _FLAGS[name]
+
+
+def set_flag(name: str, value: bool) -> None:
+    assert name in _FLAGS, name
+    _FLAGS[name] = value
+
+
+@contextmanager
+def flags(**kw):
+    old = {k: _FLAGS[k] for k in kw}
+    _FLAGS.update(kw)
+    try:
+        yield
+    finally:
+        _FLAGS.update(old)

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (adamw, make_optimizer, sgd, sgd_momentum)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = ["sgd", "sgd_momentum", "adamw", "make_optimizer",
+           "constant", "cosine_decay", "linear_warmup_cosine"]

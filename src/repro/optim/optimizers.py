@@ -1,0 +1,96 @@
+"""Minimal optax-style optimizers (no external dependency).
+
+Each optimizer is an (init, update) pair over pytrees:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+SGD is the paper-faithful optimizer (eq. 2: w <- w - alpha * grad); AdamW is
+the production default for the LLM training path.  Moment tensors are stored
+in float32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def _schedule(lr):
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+def sgd(lr) -> Optimizer:
+    """Plain SGD — exactly the paper's update (2)."""
+    lr = _schedule(lr)
+
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        a = lr(step)
+        return jax.tree.map(lambda g: -a * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr, momentum: float = 0.9) -> Optimizer:
+    lr = _schedule(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        m = jax.tree.map(lambda mm, g: momentum * mm + g.astype(jnp.float32),
+                         state["m"], grads)
+        a = lr(step)
+        return jax.tree.map(lambda mm: -a * mm, m), {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    lr = _schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mhat_scale = 1.0 / (1.0 - b1 ** step_f)
+        vhat_scale = 1.0 / (1.0 - b2 ** step_f)
+        a = lr(step)
+
+        def upd(mm, vv, p):
+            u = (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps)
+            return -a * (u + weight_decay * p.astype(jnp.float32))
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "sgd_momentum":
+        return sgd_momentum(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(name)

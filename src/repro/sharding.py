@@ -1,0 +1,276 @@
+"""Sharding rules: params, optimizer state, batches, decode caches.
+
+Path-based GSPMD rules (tensor parallel over ``model``, batch over
+``pod``+``data``, ZeRO-style data-axis sharding for optimizer moments).
+
+Every rule is a *priority list* of candidate PartitionSpecs; the first one
+whose assignments exactly divide the tensor dims (a jit in_shardings
+requirement) wins.  This is how e.g. Yi-34B's 56 q-heads (not divisible by
+the 16-way model axis) fall back to row-parallel (d_model) sharding, and odd
+vocab sizes (Whisper 51865) fall back to embedding-dim sharding.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+# ---------------------------------------------------------------------------
+# Candidate tables (trailing-dim specs of the unstacked tensor)
+# ---------------------------------------------------------------------------
+
+_ATTN_RULES = {
+    # col-parallel on heads; fall back to row-parallel on d_model
+    "wq": [P(None, "model", None), P("model", None, None)],
+    # kv projections are small (kv_heads x head_dim): when kv_heads doesn't
+    # divide the model axis, REPLICATE rather than row-parallel — deferred
+    # partial-sum reduction otherwise lands inside the attention tiles
+    # (measured: 550 GB/step of f32 tile all-reduces on llama train_4k,
+    # see EXPERIMENTS.md §Perf H1/iter2)
+    "wk": [P(None, "model", None), P(None, None, None)],
+    "wv": [P(None, "model", None), P(None, None, None)],
+    "wo": [P("model", None, None), P(None, None, "model")],
+    # MLA
+    "wq_a": [P(None, "model")],
+    "wq_b": [P(None, "model", None), P("model", None, None)],
+    "wkv_a": [P("model", None), P()],
+    "wkv_b": [P(None, "model", None), P("model", None, None)],
+    "q_norm_scale": [P(None)],
+    "kv_norm_scale": [P(None)],
+}
+
+_MLP_RULES = {
+    "gate": [P(None, "model"), P("model", None)],
+    "up": [P(None, "model"), P("model", None)],
+    "down": [P("model", None), P(None, "model")],
+}
+
+_MAMBA_RULES = {
+    "z_proj": [P(None, "model"), P("model", None)],
+    "x_proj": [P(None, "model"), P("model", None)],
+    "B_proj": [P("model", None), P()],
+    "C_proj": [P("model", None), P()],
+    "dt_proj": [P(None, "model"), P("model", None)],
+    "conv_x_w": [P(None, "model")],
+    "conv_x_b": [P("model")],
+    "conv_B_w": [P()],
+    "conv_B_b": [P()],
+    "conv_C_w": [P()],
+    "conv_C_b": [P()],
+    "dt_bias": [P("model")],
+    "A_log": [P("model")],
+    "D": [P("model")],
+    "norm_scale": [P("model")],
+    "out_proj": [P("model", None), P(None, None)],
+}
+
+
+def _moe_expert_parallel(cfg: ArchConfig) -> bool:
+    """EP when experts >= model-axis width (DeepSeekMoE 64e); TP otherwise."""
+    return cfg.moe is not None and cfg.moe.num_experts >= 16
+
+
+def _moe_rules(cfg: ArchConfig):
+    if _moe_expert_parallel(cfg):
+        return {
+            "router": [P(None, None)],
+            "gate": [P("model", None, None)],
+            "up": [P("model", None, None)],
+            "down": [P("model", None, None)],
+        }
+    return {
+        "router": [P(None, None)],
+        "gate": [P(None, None, "model")],
+        "up": [P(None, None, "model")],
+        "down": [P(None, "model", None)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fitting: first candidate whose assignments divide the dims
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fits(spec: P, shape, mesh: Mesh) -> bool:
+    parts = tuple(spec) + (None,) * (len(shape) - len(spec))
+    if len(parts) > len(shape):
+        return False
+    return all(dim % _axis_size(mesh, ax) == 0 for dim, ax in zip(shape, parts))
+
+
+def _fit(candidates: Sequence[P], shape, mesh: Mesh, n_lead: int = 0) -> P:
+    """First candidate (with n_lead leading None padding) that divides."""
+    for cand in list(candidates) + [P()]:
+        spec = P(*([None] * n_lead + list(cand)))
+        if _fits(spec, shape, mesh):
+            return spec
+    return P()
+
+
+def _names(path) -> List[str]:
+    return [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+
+
+def _candidates_for(path, cfg: ArchConfig):
+    names = _names(path)
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+
+    if leaf == "table":
+        return [P("model", None), P(None, "model")]
+    if parent == "moe":
+        return _moe_rules(cfg).get(leaf, [P()])
+    if parent == "shared":
+        return _MLP_RULES.get(leaf, [P()])
+    if parent == "mamba":
+        return _MAMBA_RULES.get(leaf, [P()])
+    if parent in ("attn", "cross") and leaf in _ATTN_RULES:
+        return _ATTN_RULES[leaf]
+    if parent == "mlp" and leaf in _MLP_RULES:
+        return _MLP_RULES[leaf]
+    if leaf == "scale":
+        return [P(None)]
+    return [P()]
+
+
+def param_specs(cfg: ArchConfig, params, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params`` (arrays or structs)."""
+
+    def rule(path, leaf):
+        cands = _candidates_for(path, cfg)
+        width = max(len(c) for c in cands)
+        n_lead = max(len(leaf.shape) - width, 0)
+        return _fit(cands, leaf.shape, mesh, n_lead)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def zero_sharded_specs(cfg: ArchConfig, params, mesh: Mesh,
+                       data_axes=("data",)):
+    """Param spec + shard the largest unsharded divisible dim over the data
+    axes (ZeRO-1 optimizer-moment sharding)."""
+    base = param_specs(cfg, params, mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    daxes = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+
+    def widen(spec: P, leaf):
+        shape = leaf.shape
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_dim = None, 1
+        for i, (s, ax) in enumerate(zip(shape, parts)):
+            if ax is None and s % dsize == 0 and s > best_dim:
+                best, best_dim = i, s
+        if best is None:
+            return spec
+        parts[best] = daxes
+        return P(*parts)
+
+    return jax.tree.map(widen, base, params)
+
+
+def opt_state_specs(cfg: ArchConfig, opt_state, params, mesh: Mesh):
+    """Moments get ZeRO data-sharding; anything else mirrors params."""
+    zspecs = zero_sharded_specs(cfg, params, mesh)
+    out = {}
+    for k, v in opt_state.items():
+        out[k] = zspecs if k in ("m", "v") else jax.tree.map(lambda _: P(), v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _bspec(mesh: Mesh, batch: int):
+    """Largest prefix of (pod, data) that divides the batch."""
+    axes = batch_axes(mesh)
+    full = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % full == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if "data" in axes and batch % mesh.shape["data"] == 0:
+        return "data"
+    if "pod" in axes and batch % mesh.shape["pod"] == 0:
+        return "pod"
+    return None
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    b_ax = _bspec(mesh, shape.global_batch)
+
+    if shape.kind == "decode":
+        return {"token": P(b_ax, None), "pos": P()}
+
+    specs = {}
+    if b_ax is None:
+        # long-context: shard sequence over data instead of batch
+        specs["tokens"] = P(None, "data")
+    else:
+        specs["tokens"] = P(b_ax, None)
+    if cfg.modality == "vision":
+        specs["patch_embed"] = P(b_ax, None, None)
+    if cfg.modality == "audio":
+        specs["frames"] = P(b_ax, None, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh, cache):
+    """Decode caches: batch over pod+data, kv-heads over model, with
+    fallbacks (seq over model; seq over data for batch-1 long context)."""
+    b_ax = _bspec(mesh, shape.global_batch)
+
+    def spec_for(path, leaf):
+        leaf_name = _names(path)[-1]
+        shp = leaf.shape
+        if leaf_name == "k_pos":
+            return P(None)
+        if leaf_name in ("k", "v", "cross_k", "cross_v"):
+            cands = [
+                P(None, b_ax, None, "model", None),   # heads TP
+                P(None, b_ax, "model", None, None),   # seq TP (kv heads < 16)
+                P(None, b_ax, None, None, None),
+                P(None, None, "data", "model", None), # batch-1 long context
+                P(None, None, "data", None, None),
+            ]
+        elif leaf_name in ("latent", "krope"):
+            cands = [P(None, b_ax, "model", None), P(None, b_ax, None, None),
+                     P(None, None, "data", None)]
+        elif leaf_name == "ssm":  # (L, B, H, hd, n)
+            cands = [P(None, b_ax, "model", None, None),
+                     P(None, None, "model", None, None),
+                     P(None, b_ax, None, None, None)]
+        elif leaf_name == "conv_x":  # (L, B, W-1, di)
+            cands = [P(None, b_ax, None, "model"), P(None, None, None, "model"),
+                     P(None, b_ax, None, None)]
+        elif leaf_name.startswith("conv_"):
+            cands = [P(None, b_ax, None, None), P()]
+        else:
+            cands = [P()]
+        for c in cands:
+            if len(c) <= len(shp) and _fits(c, shp, mesh):
+                return c
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

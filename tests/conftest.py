@@ -1,0 +1,10 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device — the 512-way
+# device-count override belongs ONLY to repro.launch.dryrun (see the system
+# design notes).  Keep threads modest on the 1-core container.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,72 @@
+"""Corollary-1 bound (eqs. 14-15) and the planner's paper-claim trends."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
+from repro.core.bounds import BoundConstants, calibrate_from_gram, corollary1_bound
+from repro.core.planner import optimize_block_size
+from repro.data.synthetic import make_regression_dataset
+
+CONSTS = BoundConstants(L=EP.L, c=EP.c, M=EP.M, M_G=EP.M_G, D=1.0, alpha=EP.alpha)
+N = EP.n_samples
+T = EP.T_factor * N
+
+
+def test_stepsize_condition_checked():
+    bad = BoundConstants(L=2.0, c=0.1, M=1.0, M_G=1.0, D=1.0, alpha=1.5)
+    with pytest.raises(AssertionError):
+        bad.validate()
+
+
+def test_bound_above_variance_floor():
+    grid = np.unique(np.logspace(0, np.log10(N), 50).astype(int))
+    vals = corollary1_bound(grid, N=N, T=T, n_o=100.0, tau_p=1.0, consts=CONSTS)
+    assert (vals >= CONSTS.variance_floor - 1e-12).all()
+    assert np.isfinite(vals).all()
+
+
+def test_optimal_block_smaller_than_dataset():
+    """Paper: 'the optimized value of n_c is generally smaller than N,
+    suggesting the advantages of pipelining'."""
+    for n_o in (10.0, 100.0, 1000.0):
+        plan = optimize_block_size(N=N, T=T, n_o=n_o, tau_p=1.0, consts=CONSTS)
+        assert plan.n_c < N / 2
+
+
+def test_overhead_increases_optimal_block():
+    """Paper Fig. 3: larger n_o => larger n_c-tilde (overhead amortisation)."""
+    ncs = [optimize_block_size(N=N, T=T, n_o=n_o, tau_p=1.0, consts=CONSTS).n_c
+           for n_o in (10.0, 100.0, 1000.0, 5000.0)]
+    assert all(a <= b for a, b in zip(ncs, ncs[1:]))
+    assert ncs[-1] > ncs[0]
+
+
+def test_large_overhead_foregoes_full_transfer():
+    """Paper: for large n_o it is better to forego transmitting some data."""
+    small = optimize_block_size(N=N, T=T, n_o=10.0, tau_p=1.0, consts=CONSTS)
+    large = optimize_block_size(N=N, T=T, n_o=5000.0, tau_p=1.0, consts=CONSTS)
+    assert small.full_transfer
+    assert not large.full_transfer
+
+
+def test_calibration_matches_paper_constants():
+    X, _, _ = make_regression_dataset()
+    L, c = calibrate_from_gram(X)
+    assert abs(L - 1.908) < 1e-3    # paper's reported largest eigenvalue
+    assert abs(c - 0.061) < 1e-3    # paper's reported smallest eigenvalue
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_o=st.floats(0.0, 2000.0),
+    d_diam=st.floats(0.25, 8.0),
+    alpha=st.floats(1e-5, 1e-3),
+)
+def test_bound_finite_positive_everywhere(n_o, d_diam, alpha):
+    consts = BoundConstants(L=EP.L, c=EP.c, M=1.0, M_G=1.0, D=d_diam, alpha=alpha)
+    consts.validate()
+    grid = np.unique(np.logspace(0, np.log10(N), 40).astype(int))
+    vals = corollary1_bound(grid, N=N, T=T, n_o=n_o, tau_p=1.0, consts=consts)
+    assert np.isfinite(vals).all()
+    assert (vals > 0).all()

@@ -1,0 +1,105 @@
+"""Paper Sec.-6 extensions: erasure channel + rate selection, multi-device
+TDMA, and the Theorem-1 Monte-Carlo evaluator."""
+import numpy as np
+import pytest
+
+from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
+from repro.core.bounds import BoundConstants
+from repro.core.channel import ErasureChannel, plan_with_channel, simulate_noisy_stream
+from repro.core.montecarlo import estimate_theorem1
+from repro.core.multidevice import MultiDeviceSchedule, plan_multi_device
+from repro.data.synthetic import make_regression_dataset
+
+CONSTS = BoundConstants(L=EP.L, c=EP.c, M=1.0, M_G=1.0, D=1.0, alpha=EP.alpha)
+N, T = EP.n_samples, 1.5 * EP.n_samples
+
+
+# ---------------------------------------------------------------------------
+# erasure channel
+# ---------------------------------------------------------------------------
+
+
+def test_error_probability_monotone_in_rate():
+    ch = ErasureChannel(beta=0.3)
+    rates = [1.0, 1.5, 2.0, 4.0]
+    ps = [ch.p_err(r) for r in rates]
+    assert all(a <= b for a, b in zip(ps, ps[1:]))
+    assert ps[0] == pytest.approx(0.0)
+
+
+def test_expected_block_time_tradeoff():
+    """Faster rate shortens payload but costs retransmissions — the
+    expected block time is non-monotone in rate (a real trade-off)."""
+    ch = ErasureChannel(beta=0.6)
+    times = [ch.expected_block_time(1000, 50.0, r) for r in (1.0, 1.5, 8.0)]
+    assert times[1] < times[0]          # moderate speed-up wins
+    assert times[2] > times[1]          # reckless rate loses to ARQ
+
+
+def test_joint_rate_block_planning():
+    ch = ErasureChannel(beta=0.4)
+    plan = plan_with_channel(N=N, T=T, n_o=500.0, tau_p=1.0, consts=CONSTS,
+                             channel=ch)
+    assert 1 <= plan["n_c"] <= N
+    assert plan["rate"] >= 1.0
+    assert np.isfinite(plan["bound"])
+    # a noisier channel can never improve the achievable bound
+    noisy = plan_with_channel(N=N, T=T, n_o=500.0, tau_p=1.0, consts=CONSTS,
+                              channel=ErasureChannel(beta=0.4, p_base=0.3))
+    assert noisy["bound"] >= plan["bound"] - 1e-12
+
+
+def test_noisy_stream_simulation():
+    ch = ErasureChannel(beta=0.2, p_base=0.1)
+    times, counts = simulate_noisy_stream(
+        n_samples=1000, n_c=100, n_o=20.0, rate=1.5, channel=ch, T=5000.0)
+    assert counts[-1] <= 1000
+    assert (np.diff(times) > 0).all()
+    assert (np.diff(counts) >= 0).all()
+    # with losses, delivery takes longer than the noiseless timeline
+    noiseless_end = 10 * (100 / 1.5 + 20.0)
+    if counts[-1] == 1000:
+        assert times[-1] >= noiseless_end - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# multi-device TDMA
+# ---------------------------------------------------------------------------
+
+
+def test_union_matches_single_device_reduction():
+    sched = MultiDeviceSchedule(n_devices=4, samples_per_device=500,
+                                n_c=50, n_o=10.0, T=6000.0, tau_p=1.0)
+    eq = sched.equivalent_single_device()
+    # at every whole TDMA round the union equals the reduced single stream
+    round_time = sched.n_devices * (sched.n_c + sched.n_o)
+    for k in range(1, 8):
+        t = k * round_time
+        assert sched.available_at(t) == eq.available_at(t), k
+
+
+def test_multi_device_planner():
+    out = plan_multi_device(n_devices=4, samples_per_device=N // 4, T=T,
+                            n_o=100.0, tau_p=1.0, consts=CONSTS)
+    assert out["n_c_per_device"] >= 1
+    assert out["n_c_union"] >= out["n_c_per_device"]
+    assert np.isfinite(out["bound"])
+
+
+# ---------------------------------------------------------------------------
+# Theorem-1 Monte-Carlo evaluator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_theorem1_tighter_than_corollary1():
+    X, y, _ = make_regression_dataset(n=2048, d=8, seed=3)
+    consts = BoundConstants(L=EP.L, c=EP.c, M=1.0, M_G=1.0, D=4.0,
+                            alpha=1e-3)
+    out = estimate_theorem1(X, y, n_c=256, n_o=50.0, T=1.5 * 2048,
+                            consts=consts, alpha=1e-3, n_runs=2)
+    # Corollary 1 replaces each per-block initial error with L D^2/2 —
+    # the Monte-Carlo Theorem-1 value must be no larger
+    assert out["theorem1"] <= out["corollary1"] + 1e-9
+    # and both must upper-bound the realised gap
+    assert out["empirical_gap"] <= out["corollary1"] + 1e-9

@@ -1,0 +1,70 @@
+"""MoE dispatch: grouped sort-dispatch vs dense oracle, capacity behaviour,
+EP/TP sharding-regime selection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.moe import init_moe, moe_dense_reference, moe_ffn
+from repro.sharding import _moe_expert_parallel
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ArchConfig(
+        name="t", family="moe", source="", d_model=32,
+        moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=16,
+                      num_shared_experts=2))
+    params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32))
+    return cfg, params, x
+
+
+def test_matches_dense_reference(setup):
+    cfg, params, x = setup
+    y1, a1 = moe_ffn(params, x, cfg, capacity_factor=8.0)  # no drops
+    y2, a2 = moe_dense_reference(params, x, cfg)
+    np.testing.assert_allclose(y1, y2, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(a1, a2, rtol=1e-6)
+
+
+def test_gates_renormalised(setup):
+    """Top-k gates are renormalised — output magnitude stays bounded even
+    with small capacity (dropped tokens fall back to shared experts only)."""
+    cfg, params, x = setup
+    y_small, _ = moe_ffn(params, x, cfg, capacity_factor=0.5)
+    assert bool(jnp.all(jnp.isfinite(y_small)))
+
+
+def test_capacity_drop_monotone(setup):
+    """Distance to the no-drop reference shrinks as capacity grows."""
+    cfg, params, x = setup
+    ref, _ = moe_dense_reference(params, x, cfg)
+    errs = []
+    for f in (0.25, 0.5, 1.0, 8.0):
+        y, _ = moe_ffn(params, x, cfg, capacity_factor=f)
+        errs.append(float(jnp.mean(jnp.abs(y - ref))))
+    assert errs[-1] < 1e-5
+    assert errs[0] >= errs[-1]
+
+
+def test_aux_loss_penalises_imbalance():
+    cfg = ArchConfig(name="t2", family="moe", source="", d_model=16,
+                     moe=MoEConfig(num_experts=4, top_k=1, d_ff_expert=8))
+    params = init_moe(jax.random.PRNGKey(2), cfg, jnp.float32)
+    # force-collapse the router onto one expert
+    collapsed = dict(params)
+    router = np.zeros((16, 4), np.float32)
+    router[:, 0] = 10.0
+    collapsed["router"] = jnp.asarray(router)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 16))
+    _, aux_bal = moe_ffn(params, x, cfg)
+    _, aux_col = moe_ffn(collapsed, x, cfg)
+    assert float(aux_col) > float(aux_bal)
+
+
+def test_ep_vs_tp_selection():
+    assert _moe_expert_parallel(get_config("deepseek-moe-16b"))       # 64e -> EP
+    assert not _moe_expert_parallel(get_config("mixtral-8x7b"))       # 8e  -> TP

@@ -1,0 +1,80 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bounds import BoundConstants, corollary1_bound
+from repro.core.protocol import BlockSchedule
+from repro.core.streaming import make_buffer, receive_block, sample
+from repro.launch.hlo_cost import shape_info
+from repro.models.blockwise import flash_attention
+from repro.models.attention import causal_mask, dot_product_attention
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    blocks=st.lists(st.integers(1, 8), min_size=1, max_size=6),
+)
+def test_streaming_buffer_available_equals_sum(blocks):
+    n = sum(blocks)
+    buf = make_buffer(n, (2,))
+    off = 0.0
+    for sz in blocks:
+        xb = jnp.full((sz, 2), off)
+        buf = receive_block(buf, xb, jnp.full((sz,), off))
+        off += 1.0
+    assert int(buf.available) == n
+    xs, _ = sample(buf, jax.random.PRNGKey(0), 32)
+    assert bool(jnp.all(xs[:, 0] < off))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([64, 96, 128]),
+    h=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_flash_attention_equals_plain(s, h, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, s, h, 16))
+    k = jax.random.normal(ks[1], (1, s, h, 16))
+    v = jax.random.normal(ks[2], (1, s, h, 16))
+    pos = jnp.arange(s)
+    out = flash_attention(q, k, v, causal=True, q_block=32, k_block=32)
+    ref = dot_product_attention(q, k, v,
+                                mask=causal_mask(pos, pos)[None, None, None])
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n_c=st.integers(1, 18_576),
+    n_o=st.floats(0.0, 4000.0),
+)
+def test_bound_regime_consistency(n_c, n_o):
+    """The two bound formulas agree with the protocol's regime flag."""
+    N, T = 18_576, 1.5 * 18_576
+    consts = BoundConstants(L=1.908, c=0.061, M=1.0, M_G=1.0, D=1.0, alpha=1e-4)
+    sched = BlockSchedule(N=N, n_c=n_c, n_o=n_o, T=T, tau_p=1.0)
+    val = corollary1_bound(np.asarray([n_c]), N=N, T=T, n_o=n_o, tau_p=1.0,
+                           consts=consts)[0]
+    assert np.isfinite(val) and val > 0
+    if sched.full_transfer:
+        # regime (b): sigma + r^{n_l} (e0 - sigma) s_b / B_d with
+        # s_b / B_d < 2 for every feasible block size
+        assert val <= consts.variance_floor + 2.0 * consts.init_gap
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.sampled_from([
+    ("f32[16,128]", 16 * 128 * 4),
+    ("bf16[2,4,8]{2,1,0}", 2 * 4 * 8 * 2),
+    ("(f32[4], s32[2,2])", 16 + 16),
+    ("pred[7]", 7),
+    ("u8[]", 1),
+]), st.integers(0, 3))
+def test_shape_info_parser(case, _salt):
+    s, expected = case
+    got, _ = shape_info(s)
+    assert got == expected

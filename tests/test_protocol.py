@@ -1,0 +1,76 @@
+"""Protocol arithmetic (paper Sec. 2, Fig. 2)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.protocol import BlockSchedule, boundary_n_c
+
+
+def test_paper_fig3_regime_examples():
+    # paper setting: N = 18576, T = 1.5 N
+    N, T = 18_576, 1.5 * 18_576
+    # small n_c, small overhead -> whole dataset delivered before T
+    s = BlockSchedule(N=N, n_c=100, n_o=10.0, T=T, tau_p=1.0)
+    assert s.full_transfer
+    assert s.delivered_fraction == 1.0
+    assert s.tau_l > 0 and s.n_l == int(s.tau_l)
+    # huge overhead -> only part of the data arrives
+    s = BlockSchedule(N=N, n_c=100, n_o=5000.0, T=T, tau_p=1.0)
+    assert not s.full_transfer
+    assert s.delivered_fraction < 1.0
+
+
+def test_boundary_matches_regime_flip():
+    N, T, n_o = 10_000, 15_000.0, 200.0
+    b = boundary_n_c(N, T, n_o)
+    # +-20% margin: the analytic boundary uses the paper's continuous
+    # B_d = N/n_c; the simulation delivers in whole blocks (ceil semantics)
+    below = BlockSchedule(N=N, n_c=int(b * 0.8), n_o=n_o, T=T, tau_p=1.0)
+    above = BlockSchedule(N=N, n_c=int(b * 1.2), n_o=n_o, T=T, tau_p=1.0)
+    # larger blocks amortise overhead: above the boundary the whole set fits
+    assert above.full_transfer
+    assert not below.full_transfer
+
+
+def test_boundary_infinite_when_T_leq_N():
+    assert math.isinf(boundary_n_c(1000, 900.0, 10.0))
+
+
+def test_available_at_block_ends():
+    s = BlockSchedule(N=1000, n_c=100, n_o=10.0, T=2000.0, tau_p=1.0)
+    assert s.available_at(0.0) == 0
+    assert s.available_at(109.9) == 0          # block 1 still in flight
+    assert s.available_at(110.0) == 100        # block 1 delivered
+    assert s.available_at(220.0) == 200
+    assert s.available_at(1e9) == 1000         # capped at N
+
+
+def test_updates_timeline_monotone():
+    s = BlockSchedule(N=1000, n_c=64, n_o=16.0, T=3000.0, tau_p=1.0)
+    tl = s.updates_timeline()
+    assert len(tl) == s.total_updates
+    assert (np.diff(tl) >= 0).all()
+    assert tl.max() <= 1000
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n=st.integers(100, 50_000),
+    n_c=st.integers(1, 5_000),
+    n_o=st.floats(0.0, 1_000.0),
+    t_factor=st.floats(0.1, 3.0),
+    tau_p=st.floats(0.25, 4.0),
+)
+def test_protocol_invariants(n, n_c, n_o, t_factor, tau_p):
+    n_c = min(n_c, n)
+    s = BlockSchedule(N=n, n_c=n_c, n_o=n_o, T=t_factor * n, tau_p=tau_p)
+    assert 0.0 <= s.delivered_fraction <= 1.0
+    assert s.n_p >= 0 and s.n_l >= 0
+    assert s.available_at(s.T) <= n
+    # full_transfer <=> the protocol delivers everything strictly before T
+    if s.full_transfer:
+        assert s.available_at(s.T) == n
+    # updates never exceed the time budget
+    assert s.total_updates * s.tau_p <= s.T + 1e-9

@@ -1,0 +1,105 @@
+"""Optimizers, schedules, checkpointing, data pipeline, hlo_cost."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data.stream import BlockStreamer
+from repro.data.synthetic import SyntheticTokens, make_regression_dataset
+from repro.optim.optimizers import adamw, apply_updates, sgd, sgd_momentum
+from repro.optim.schedules import cosine_decay, linear_warmup_cosine
+
+
+def _quadratic_min(opt, steps=200):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    for i in range(steps):
+        grads = {"w": 2 * (params["w"] - target)}
+        updates, state = opt.update(grads, state, params, jnp.asarray(i))
+        params = apply_updates(params, updates)
+    return params["w"], target
+
+
+def test_sgd_converges():
+    w, t = _quadratic_min(sgd(0.1))
+    np.testing.assert_allclose(w, t, atol=1e-3)
+
+
+def test_momentum_converges():
+    w, t = _quadratic_min(sgd_momentum(0.05, 0.9))
+    np.testing.assert_allclose(w, t, atol=1e-3)
+
+
+def test_adamw_converges():
+    w, t = _quadratic_min(adamw(0.1, weight_decay=0.0), steps=400)
+    np.testing.assert_allclose(w, t, atol=1e-2)
+
+
+def test_schedules_shapes():
+    s = linear_warmup_cosine(1e-3, warmup=10, total_steps=100)
+    vals = [float(s(jnp.asarray(i))) for i in (0, 5, 10, 50, 100)]
+    assert vals[0] == 0.0
+    assert vals[1] == pytest.approx(5e-4)
+    assert vals[2] == pytest.approx(1e-3)
+    assert vals[3] < vals[2]
+    c = cosine_decay(1e-3, 100)
+    assert float(c(jnp.asarray(0))) == pytest.approx(1e-3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    save_checkpoint(str(tmp_path / "ck"), tree, step=7)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    restored, step = load_checkpoint(str(tmp_path / "ck"), like)
+    assert step == 7
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+
+
+def test_block_streamer_protocol():
+    s = BlockStreamer(n_samples=100, n_c=32, n_o=8.0, seed=0)
+    seen = []
+    while True:
+        blk = s.next_block()
+        if blk is None:
+            break
+        seen.extend(blk.tolist())
+    assert sorted(seen) == list(range(100))  # permutation, complete, no dup
+    assert s.n_blocks_total == 4
+    assert s.block_duration == 40.0
+
+
+def test_synthetic_tokens_deterministic():
+    a = SyntheticTokens(100, 16, 4, seed=3).batch(5)
+    b = SyntheticTokens(100, 16, 4, seed=3).batch(5)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 16)
+    assert a.max() < 100
+
+
+def test_regression_dataset_spectrum():
+    X, y, w = make_regression_dataset(n=2048, d=8, l_max=2.0, l_min=0.05)
+    eigs = np.linalg.eigvalsh(X.T @ X / len(X))
+    assert eigs[-1] == pytest.approx(2.0, rel=1e-6)
+    assert eigs[0] == pytest.approx(0.05, rel=1e-6)
+
+
+def test_hlo_cost_scan_multiplication():
+    from repro.launch.hlo_cost import analyze_hlo
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(xs, xs).compile()
+    cost = analyze_hlo(compiled.as_text())
+    assert cost.flops == pytest.approx(7 * 2 * 64 ** 3)

@@ -11,7 +11,7 @@ import numpy as np
 
 from benchmarks.common import emit, save_artifact
 from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
-from repro.core import BoundConstants, optimize_block_size
+from repro.core import BoundConstants, BoundPlanner, Scenario
 
 OVERHEADS = [10.0, 100.0, 1000.0, 5000.0]
 
@@ -21,11 +21,12 @@ def run():
     T = EP.T_factor * N
     consts = BoundConstants(L=EP.L, c=EP.c, M=EP.M, M_G=EP.M_G, D=1.0,
                             alpha=EP.alpha)
+    planner = BoundPlanner()
     rows = []
     t0 = time.perf_counter()
     for n_o in OVERHEADS:
-        plan = optimize_block_size(N=N, T=T, n_o=n_o, tau_p=EP.tau_p,
-                                   consts=consts)
+        plan = planner.plan(Scenario(N=N, T=T, n_o=n_o, tau_p=EP.tau_p),
+                            consts)
         rows.append({
             "n_o": n_o,
             "n_c_tilde": plan.n_c,

@@ -10,7 +10,8 @@ import numpy as np
 
 from benchmarks.common import emit, save_artifact
 from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
-from repro.core import BoundConstants, optimize_block_size, run_pipelined_sgd
+from repro.core import (BoundConstants, BoundPlanner, RidgeTask, Scenario,
+                        Simulator)
 from repro.data.synthetic import make_regression_dataset
 
 
@@ -19,13 +20,16 @@ def run(n_o: float = 500.0):
     N, T = EP.n_samples, EP.T_factor * EP.n_samples
     consts = BoundConstants(L=EP.L, c=EP.c, M=EP.M, M_G=EP.M_G, D=6.0,
                             alpha=EP.alpha)
-    plan = optimize_block_size(N=N, T=T, n_o=n_o, tau_p=EP.tau_p, consts=consts)
+    scenario = Scenario(N=N, T=T, n_o=n_o, tau_p=EP.tau_p)
+    plan = BoundPlanner().plan(scenario, consts)
+    # n_c = N recovers the transmit-everything-first baseline
+    seq_plan = BoundPlanner(grid=[N]).plan(scenario, consts)
 
+    sim = Simulator()
+    task = RidgeTask(X=X, y=y, alpha=EP.alpha, lam=EP.lam)
     t0 = time.perf_counter()
-    piped = run_pipelined_sgd(X, y, n_c=plan.n_c, n_o=n_o, T=T,
-                              alpha=EP.alpha, lam=EP.lam)
-    seq = run_pipelined_sgd(X, y, n_c=N, n_o=n_o, T=T,
-                            alpha=EP.alpha, lam=EP.lam)
+    piped = sim.run(scenario, plan, task)
+    seq = sim.run(scenario, seq_plan, task)
     dt_us = (time.perf_counter() - t0) * 1e6 / 2
 
     improvement = (seq.final_loss - piped.final_loss) / seq.final_loss * 100.0

@@ -7,19 +7,20 @@ and bound optima), printed as text tables.
 import numpy as np
 
 from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
-from repro.core import (BoundConstants, average_final_loss, corollary1_bound,
-                        optimize_block_size, run_pipelined_sgd)
+from repro.core import (BoundConstants, BoundPlanner, Scenario,
+                        average_final_loss, run_pipelined_sgd)
 from repro.data import make_regression_dataset
 
 X, y, _ = make_regression_dataset(n=EP.n_samples, d=EP.n_features)
 N, T = EP.n_samples, EP.T_factor * EP.n_samples
 consts = BoundConstants(L=EP.L, c=EP.c, M=EP.M, M_G=EP.M_G, D=1.0,
                         alpha=EP.alpha)
+planner = BoundPlanner()
 
 print("== Fig. 3: Corollary-1 bound vs n_c ==")
 print(f"{'n_o':>6} | {'n_c~ (bound opt)':>16} | {'boundary':>9} | full transfer at opt?")
 for n_o in (10.0, 100.0, 1000.0, 5000.0):
-    plan = optimize_block_size(N=N, T=T, n_o=n_o, tau_p=1.0, consts=consts)
+    plan = planner.plan(Scenario(N=N, T=T, n_o=n_o), consts)
     print(f"{n_o:6.0f} | {plan.n_c:16d} | {plan.boundary:9.0f} | {plan.full_transfer}")
 
 print("\n== Fig. 4: loss vs time at n_o = 1000 ==")
@@ -36,7 +37,7 @@ grid = [64, 256, 1024, 4096, N]
 losses = {nc: average_final_loss(X, y, n_c=nc, n_o=n_o, T=T, n_runs=2,
                                  alpha=EP.alpha, lam=EP.lam) for nc in grid}
 star = min(losses, key=losses.get)
-plan = optimize_block_size(N=N, T=T, n_o=n_o, tau_p=1.0, consts=consts, grid=grid)
+plan = BoundPlanner(grid=grid).plan(Scenario(N=N, T=T, n_o=n_o), consts)
 gap = (losses[plan.n_c] - losses[star]) / losses[star] * 100
 print(f"experimental optimum n_c* = {star}; bound optimum n_c~ = {plan.n_c}; "
       f"loss gap = {gap:.1f}%")

@@ -1,35 +1,47 @@
-"""Quickstart: the paper's pipelined edge-learning protocol in ~40 lines.
+"""Quickstart: the paper's pipelined edge-learning protocol in ~40 lines,
+through the unified three-object API:
+
+    Scenario  — what the system looks like (N, T, n_o, tau_p, link, topology)
+    Planner   — how to pick the block size (here: the Corollary-1 bound)
+    Simulator — run the workload under the planned schedule
 
 A device holds N samples and must offload them to an edge learner within a
-deadline T.  We (1) pick the block size n_c by minimising the Corollary-1
-bound, (2) run the pipelined streaming-SGD trainer, and (3) compare against
-the transmit-everything-first baseline.
+deadline T.  We (1) describe the system as a Scenario, (2) pick the block
+size n_c by minimising the Corollary-1 bound, (3) run the pipelined
+streaming-SGD trainer, and (4) compare against the transmit-everything-first
+baseline.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import BoundConstants, optimize_block_size, run_pipelined_sgd
+from repro.core import (BoundConstants, BoundPlanner, RidgeTask, Scenario,
+                        Simulator)
 from repro.data import make_regression_dataset
 
-# the paper's Sec.-5 setting (California-Housing-like synthetic; see DESIGN.md)
+# the paper's Sec.-5 setting (California-Housing-like synthetic)
 X, y, _ = make_regression_dataset()
 N = len(X)
-T = 1.5 * N          # deadline: 1.5x the time to transmit the whole set
-n_o = 500.0          # per-packet overhead (pilots / meta-data)
 
-# 1) plan the block size from the bound — no Monte-Carlo needed
+# 1) describe the system: deadline 1.5x the full-transfer time, 500-sample
+#    packet overhead, ideal link, single device (the defaults)
+scenario = Scenario(N=N, T=1.5 * N, n_o=500.0)
+
+# 2) plan the block size from the bound — no Monte-Carlo needed
 consts = BoundConstants(L=1.908, c=0.061, M=1.0, M_G=1.0, D=6.0, alpha=1e-4)
-plan = optimize_block_size(N=N, T=T, n_o=n_o, tau_p=1.0, consts=consts)
+plan = BoundPlanner().plan(scenario, consts)
 print(f"bound-optimal block size: n_c = {plan.n_c} "
       f"(regime boundary at {plan.boundary:.0f}, "
       f"full transfer: {plan.full_transfer})")
 
-# 2) train under the pipelined protocol
-piped = run_pipelined_sgd(X, y, n_c=plan.n_c, n_o=n_o, T=T)
+# 3) train under the pipelined protocol
+sim = Simulator()
+task = RidgeTask(X=X, y=y)
+piped = sim.run(scenario, plan, task)
 print(f"pipelined   (n_c={plan.n_c:6d}): final loss {piped.final_loss:.4f}, "
       f"{piped.delivered}/{N} samples delivered")
 
-# 3) the baseline the paper argues against: send everything, then train
-seq = run_pipelined_sgd(X, y, n_c=N, n_o=n_o, T=T)
+# 4) the baseline the paper argues against: send everything, then train
+seq_plan = BoundPlanner(grid=[N]).plan(scenario, consts)
+seq = sim.run(scenario, seq_plan, task)
 print(f"sequential  (n_c={N:6d}): final loss {seq.final_loss:.4f}")
 print(f"pipelining improves the final training loss by "
       f"{(seq.final_loss - piped.final_loss) / seq.final_loss * 100:.1f}%")

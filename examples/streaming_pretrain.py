@@ -12,8 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import BlockSchedule, BoundConstants, optimize_block_size
-from repro.core.stream_trainer import run_streaming_training
+from repro.core import (BoundConstants, BoundPlanner, Scenario, Simulator,
+                        StreamingTask)
 from repro.data.synthetic import SyntheticTokens
 from repro.models import init_params, make_train_step
 from repro.optim import linear_warmup_cosine
@@ -35,19 +35,20 @@ opt = make_optimizer("adamw", linear_warmup_cosine(1e-3, 20, args.steps))
 train_step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
 
 # plan the block size with the paper's bound (constants are heuristic for a
-# non-convex learner — see DESIGN.md §5)
+# non-convex learner); the Scenario -> Planner -> Simulator triple wraps the
+# generic streaming trainer exactly like the ridge task
+scenario = Scenario(N=n_seqs, T=float(args.steps), n_o=16.0, tau_p=1.0)
 consts = BoundConstants(L=1.0, c=0.05, M=1.0, M_G=1.0, D=2.0, alpha=1e-3)
-plan_opt = optimize_block_size(N=n_seqs, T=float(args.steps), n_o=16.0,
-                               tau_p=1.0, consts=consts)
-plan = BlockSchedule(N=n_seqs, n_c=plan_opt.n_c, n_o=16.0,
-                     T=float(args.steps), tau_p=1.0)
-print(f"planner: n_c = {plan.n_c} sequences/block, {plan.n_p} updates/block, "
+plan = BoundPlanner().plan(scenario, consts)
+sched = plan.schedule
+print(f"planner: n_c = {plan.n_c} sequences/block, {sched.n_p} updates/block, "
       f"full transfer: {plan.full_transfer}")
 
-state = run_streaming_training(
+report = Simulator().run(scenario, plan, StreamingTask(
     train_step=train_step, params=params, opt_state=opt.init(params),
-    dataset=np.asarray(data), plan=plan, batch_size=batch,
-    make_batch=lambda tok: {"tokens": jnp.asarray(tok)}, log_every=20)
+    dataset=np.asarray(data), batch_size=batch,
+    make_batch=lambda tok: {"tokens": jnp.asarray(tok)}, log_every=20))
+state = report.state
 
 for h in state.history:
     print(f"update {h['update']:4d}: {h['available']:4d}/{n_seqs} seqs "

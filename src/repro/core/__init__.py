@@ -1,10 +1,19 @@
 """The paper's contribution: pipelined communication/computation scheduling
-for latency-constrained edge learning (protocol, bounds, planner, trainers)."""
+for latency-constrained edge learning (protocol, bounds, planner, trainers).
+
+The unified surface is the Scenario/Planner/Simulator triple from
+:mod:`repro.core.scenario`; the flat functions (``optimize_block_size``,
+``plan_with_channel``, ``plan_multi_device``, ``run_pipelined_sgd``) remain
+as compatibility wrappers / task kernels."""
 from repro.core.bounds import BoundConstants, calibrate_from_gram, corollary1_bound, theorem1_bound
 from repro.core.pipeline import (StreamResult, average_final_loss,
                                  ridge_loss_full, run_pipelined_sgd)
 from repro.core.planner import Plan, default_grid, optimize_block_size
 from repro.core.protocol import BlockSchedule, boundary_n_c
+from repro.core.scenario import (BoundPlanner, ErasureLink, IdealLink,
+                                 MonteCarloPlanner, MultiDevice, Planner,
+                                 RidgeTask, Scenario, SimReport, Simulator,
+                                 SingleDevice, StreamingTask, Theorem1Planner)
 from repro.core.streaming import StreamBuffer, make_buffer, receive_block, sample
 from repro.core.stream_trainer import StreamingTrainState, run_streaming_training
 
@@ -13,6 +22,9 @@ __all__ = [
     "StreamResult", "average_final_loss", "ridge_loss_full", "run_pipelined_sgd",
     "Plan", "default_grid", "optimize_block_size",
     "BlockSchedule", "boundary_n_c",
+    "Scenario", "IdealLink", "ErasureLink", "SingleDevice", "MultiDevice",
+    "Planner", "BoundPlanner", "MonteCarloPlanner", "Theorem1Planner",
+    "Simulator", "SimReport", "RidgeTask", "StreamingTask",
     "StreamBuffer", "make_buffer", "receive_block", "sample",
     "StreamingTrainState", "run_streaming_training",
 ]

@@ -52,13 +52,19 @@ def _geom_sum(r: np.ndarray, k: np.ndarray) -> np.ndarray:
     return np.where(k <= 0, 0.0, out)
 
 
-def corollary1_bound(n_c, *, N: int, T: float, n_o: float, tau_p: float,
+def corollary1_bound(n_c, *, N: int, T: float, n_o, tau_p: float,
                      consts: BoundConstants) -> np.ndarray:
-    """Eq. (14) / (15), vectorised over n_c.
+    """Eq. (14) / (15), vectorised over ``n_c`` AND ``n_o``.
 
-    Returns the upper bound on E[L(w_T) - L(w*)] for each block size.
+    ``n_o`` may be a scalar or an array broadcastable against ``n_c`` —
+    link models (e.g. ARQ retransmission) induce an effective overhead
+    that varies with the block size, and the joint ``(n_c, rate)`` planner
+    evaluates the whole 2-D grid in one broadcast call.
+
+    Returns the upper bound on E[L(w_T) - L(w*)] for each grid point.
     """
     n_c = np.asarray(n_c, np.float64)
+    n_o = np.asarray(n_o, np.float64)
     dur = n_c + n_o
     B_d = N / n_c
     B = np.floor(T / dur)                 # whole blocks that fit

@@ -27,8 +27,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.bounds import BoundConstants, corollary1_bound
-from repro.core.planner import Plan, default_grid
+from repro.core.bounds import BoundConstants
 
 
 @dataclass(frozen=True)
@@ -59,26 +58,21 @@ def plan_with_channel(*, N: int, T: float, n_o: float, tau_p: float,
     n_c' + n_o' by scaling time units: n_o_eff(n_c, rate) chosen so that
     n_c + n_o_eff equals the expected block time in sample-transmission
     units (tau_p is unchanged — compute speed is unaffected by the link).
+
+    Compatibility wrapper: the search now runs as ONE broadcast bound
+    evaluation over the full (rate, n_c) grid inside
+    :class:`repro.core.scenario.BoundPlanner` instead of a Python loop
+    per grid point.
     """
-    grid = np.asarray(grid if grid is not None else default_grid(N))
-    best = None
-    for rate in rates:
-        p = channel.p_err(rate)
-        # expected block duration in time units, as a function of n_c
-        dur = (grid / rate + n_o) / (1.0 - p)
-        n_o_eff = dur - grid  # the paper's model: duration = n_c + n_o_eff
-        # evaluate the bound pointwise (n_o varies with n_c here)
-        vals = np.array([
-            corollary1_bound(np.asarray([nc]), N=N, T=T, n_o=float(no),
-                             tau_p=tau_p, consts=consts)[0]
-            for nc, no in zip(grid, n_o_eff)
-        ])
-        i = int(np.argmin(vals))
-        cand = (float(vals[i]), int(grid[i]), float(rate), float(p))
-        if best is None or cand[0] < best[0]:
-            best = cand
-    bound_val, n_c, rate, p = best
-    return {"n_c": n_c, "rate": rate, "p_err": p, "bound": bound_val}
+    from repro.core.scenario import BoundPlanner, ErasureLink, Scenario
+
+    scenario = Scenario(
+        N=N, T=T, n_o=n_o, tau_p=tau_p,
+        link=ErasureLink(beta=channel.beta, p_base=channel.p_base,
+                         rates=tuple(rates)))
+    plan = BoundPlanner(grid=grid).plan(scenario, consts)
+    return {"n_c": plan.n_c, "rate": plan.rate, "p_err": plan.p_err,
+            "bound": plan.bound_value}
 
 
 def simulate_noisy_stream(*, n_samples: int, n_c: int, n_o: float,

@@ -38,7 +38,8 @@ def _block_local_opt(X_blk, y_blk, lam, n_total):
 
 def estimate_theorem1(X, y, *, n_c: int, n_o: float, T: float,
                       consts: BoundConstants, lam: float = 0.05,
-                      alpha: float = 1e-4, n_runs: int = 3, seed: int = 0):
+                      alpha: float = 1e-4, tau_p: float = 1.0,
+                      n_runs: int = 3, seed: int = 0):
     """Monte-Carlo Theorem-1 estimate + the matching Corollary-1 value.
 
     Returns dict with 'theorem1', 'corollary1', 'empirical_gap' (the actual
@@ -48,7 +49,7 @@ def estimate_theorem1(X, y, *, n_c: int, n_o: float, T: float,
     from repro.core.pipeline import run_pipelined_sgd
 
     n, d = X.shape
-    plan = BlockSchedule(N=n, n_c=n_c, n_o=n_o, T=T, tau_p=1.0)
+    plan = BlockSchedule(N=n, n_c=n_c, n_o=n_o, T=T, tau_p=tau_p)
     # global optimum for the empirical gap
     w_star = np.linalg.solve(X.T @ X + lam * np.eye(d), X.T @ y)
     loss_star = float(np.mean((X @ w_star - y) ** 2)
@@ -60,14 +61,16 @@ def estimate_theorem1(X, y, *, n_c: int, n_o: float, T: float,
     per_block_gaps = np.zeros(max(n_blocks, 1))
     emp_gap = 0.0
     for r in range(n_runs):
-        res = run_pipelined_sgd(X, y, n_c=n_c, n_o=n_o, T=T, alpha=alpha,
-                                lam=lam, seed=seed + 31 * r, record_every=1)
+        res = run_pipelined_sgd(X, y, n_c=n_c, n_o=n_o, T=T, tau_p=tau_p,
+                                alpha=alpha, lam=lam, seed=seed + 31 * r,
+                                record_every=1)
         # reconstruct block boundaries on the update timeline
         perm = np.asarray(jax.random.permutation(
             jax.random.PRNGKey(seed + 31 * r), n))
-        # loss trace is per update; block b ends at update floor(b*dur)
+        # loss trace is per update (one every tau_p time units); block b
+        # ends at update floor(b * dur / tau_p)
         for b in range(1, n_blocks + 1):
-            t_end = min(int(b * plan.block_duration) - 1,
+            t_end = min(int(b * plan.block_duration / tau_p) - 1,
                         len(res.loss_trace) - 1)
             blk_idx = perm[(b - 1) * n_c: b * n_c]
             if len(blk_idx) == 0 or t_end < 0:
@@ -83,9 +86,10 @@ def estimate_theorem1(X, y, *, n_c: int, n_o: float, T: float,
 
     th1 = theorem1_bound(per_block_gaps,
                          delta_gap_B=float(per_block_gaps[-1]),
-                         N=n, T=T, n_c=n_c, n_o=n_o, tau_p=1.0, consts=consts)
+                         N=n, T=T, n_c=n_c, n_o=n_o, tau_p=tau_p,
+                         consts=consts)
     c1 = float(corollary1_bound(np.asarray([n_c]), N=n, T=T, n_o=n_o,
-                                tau_p=1.0, consts=consts)[0])
+                                tau_p=tau_p, consts=consts)[0])
     return {"theorem1": float(th1), "corollary1": c1,
             "empirical_gap": float(emp_gap),
             "looseness_c1_over_th1": float(c1 / max(th1, 1e-12))}

@@ -20,7 +20,6 @@ from typing import List
 import numpy as np
 
 from repro.core.bounds import BoundConstants
-from repro.core.planner import Plan, optimize_block_size
 from repro.core.protocol import BlockSchedule
 
 
@@ -57,13 +56,18 @@ class MultiDeviceSchedule:
 
 def plan_multi_device(*, n_devices: int, samples_per_device: int, T: float,
                       n_o: float, tau_p: float, consts: BoundConstants) -> dict:
-    """Plan per-device block size via the single-device reduction."""
-    N = n_devices * samples_per_device
-    plan = optimize_block_size(N=N, T=T, n_o=n_devices * n_o, tau_p=tau_p,
-                               consts=consts)
-    per_dev = max(1, plan.n_c // n_devices)
-    return {"n_c_union": plan.n_c, "n_c_per_device": per_dev,
+    """Plan per-device block size via the single-device reduction.
+
+    Compatibility wrapper over ``BoundPlanner`` on a ``MultiDevice``
+    scenario (the TDMA reduction now lives in
+    :class:`repro.core.scenario.Scenario`)."""
+    from repro.core.scenario import BoundPlanner, MultiDevice, Scenario
+
+    scenario = Scenario(N=n_devices * samples_per_device, T=T, n_o=n_o,
+                        tau_p=tau_p, topology=MultiDevice(n_devices))
+    plan = BoundPlanner().plan(scenario, consts)
+    return {"n_c_union": plan.n_c, "n_c_per_device": plan.n_c_per_device,
             "bound": plan.bound_value,
             "schedule": MultiDeviceSchedule(
                 n_devices=n_devices, samples_per_device=samples_per_device,
-                n_c=per_dev, n_o=n_o, T=T, tau_p=tau_p)}
+                n_c=plan.n_c_per_device, n_o=n_o, T=T, tau_p=tau_p)}

@@ -4,8 +4,15 @@ This is the paper's practical recipe: evaluate the Monte-Carlo-free bound
 (14)-(15) on a grid of block sizes and pick the minimiser n_c-tilde.  The
 planner also reports the regime boundary (the dots in Fig. 3) and supports
 calibrating (L, c) from a data Gramian and (tau_p, n_o) from measured
-step/transfer times of a real mesh — the TPU binding described in
-DESIGN.md §2.
+step/transfer times of a real mesh.
+
+The unified scenario API lives in :mod:`repro.core.scenario`: a frozen
+``Scenario`` (dataset/deadline/overhead + ``LinkModel`` + ``Topology``)
+is planned by any ``Planner`` (``BoundPlanner``, ``MonteCarloPlanner``,
+``Theorem1Planner``) — all of which return the enriched :class:`Plan`
+below — and executed by the ``Simulator`` facade.  ``optimize_block_size``
+is kept as a thin compatibility wrapper over ``BoundPlanner`` on the
+ideal-link single-device scenario.
 """
 from __future__ import annotations
 
@@ -14,19 +21,29 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.bounds import BoundConstants, corollary1_bound
-from repro.core.protocol import BlockSchedule, boundary_n_c
+from repro.core.bounds import BoundConstants
+from repro.core.protocol import BlockSchedule
 
 
 @dataclass(frozen=True)
 class Plan:
-    n_c: int                 # optimised block size (n_c-tilde)
-    bound_value: float       # Corollary-1 bound at the optimum
+    """The unified planner output (every Planner returns this type).
+
+    For a ``SingleDevice``/``IdealLink`` scenario the extra fields take
+    their neutral defaults (rate 1, no losses, per-device == union), so
+    the type is backward-compatible with the original bound planner.
+    """
+    n_c: int                 # optimised UNION block size (n_c-tilde)
+    bound_value: float       # planner objective at the optimum
     full_transfer: bool      # whether the optimum delivers the whole set
     boundary: float          # n_c where T = B_d (n_c + n_o)
     grid: np.ndarray         # evaluated n_c grid
-    bound_grid: np.ndarray   # bound value per grid point
-    schedule: BlockSchedule
+    bound_grid: np.ndarray   # objective per grid point (at the chosen rate)
+    schedule: BlockSchedule  # effective single-device schedule at the optimum
+    rate: float = 1.0            # chosen transmission rate (samples/unit)
+    p_err: float = 0.0           # packet-loss probability at that rate
+    n_c_per_device: int = 0      # per-device block size; planners set n_c // D
+    objective: str = "corollary1"  # which objective bound_value minimises
 
 
 def default_grid(N: int) -> np.ndarray:
@@ -38,21 +55,14 @@ def default_grid(N: int) -> np.ndarray:
 def optimize_block_size(*, N: int, T: float, n_o: float, tau_p: float,
                         consts: BoundConstants,
                         grid: Optional[Sequence[int]] = None) -> Plan:
-    consts.validate()
-    grid = np.asarray(grid if grid is not None else default_grid(N))
-    vals = corollary1_bound(grid, N=N, T=T, n_o=n_o, tau_p=tau_p, consts=consts)
-    i = int(np.argmin(vals))
-    n_c = int(grid[i])
-    sched = BlockSchedule(N=N, n_c=n_c, n_o=n_o, T=T, tau_p=tau_p)
-    return Plan(
-        n_c=n_c,
-        bound_value=float(vals[i]),
-        full_transfer=sched.full_transfer,
-        boundary=boundary_n_c(N, T, n_o),
-        grid=grid,
-        bound_grid=vals,
-        schedule=sched,
-    )
+    """Compatibility wrapper: Corollary-1 planning of the paper's baseline
+    scenario (ideal link, single device).  Equivalent to
+    ``BoundPlanner(grid=grid).plan(Scenario(N=N, T=T, n_o=n_o, tau_p=tau_p),
+    consts)``."""
+    from repro.core.scenario import BoundPlanner, Scenario
+
+    scenario = Scenario(N=N, T=T, n_o=n_o, tau_p=tau_p)
+    return BoundPlanner(grid=grid).plan(scenario, consts)
 
 
 def calibrate_tau_p(step_time_s: float, sample_tx_time_s: float) -> float:

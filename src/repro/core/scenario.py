@@ -1,0 +1,438 @@
+"""Unified Scenario / Planner / Simulator API.
+
+The paper's planning problem — pick the packet payload ``n_c`` minimising
+the Corollary-1 bound under a deadline — and both Sec.-6 extensions
+(noisy channel with rate selection, multiple devices) compose through
+three objects:
+
+  * :class:`Scenario` — a frozen bundle of the protocol parameters
+    ``(N, T, n_o, tau_p)`` plus a pluggable :class:`LinkModel`
+    (:class:`IdealLink` | :class:`ErasureLink`) and :class:`Topology`
+    (:class:`SingleDevice` | :class:`MultiDevice`).  Every combination is
+    expressible, including previously inexpressible cross products such
+    as an erasure channel feeding a multi-device TDMA uplink.
+  * :class:`Planner` — the protocol ``plan(scenario, consts) -> Plan``.
+    :class:`BoundPlanner` evaluates Corollary 1 on the full joint
+    ``(rate, n_c)`` grid in ONE broadcast call (no Python loops);
+    :class:`MonteCarloPlanner` minimises the empirical final loss with
+    the seed loop replaced by ``jax.vmap``; :class:`Theorem1Planner`
+    minimises the Monte-Carlo Theorem-1 estimate.  All three return the
+    same enriched :class:`~repro.core.planner.Plan`.
+  * :class:`Simulator` — ``run(scenario, plan, task) -> SimReport``:
+    dispatches a :class:`RidgeTask` to the jitted ridge scan and a
+    :class:`StreamingTask` to the generic ``run_streaming_training``
+    loop, applying the scenario's topology reduction and link-induced
+    effective overhead, and attaching a sampled ARQ delivery timeline
+    for lossy links.
+
+Both reductions are exact analytical maps into the paper's noiseless
+single-device model (Sec. 6): round-robin TDMA over ``D`` devices is a
+single stream with block ``D n_c`` / overhead ``D n_o``; stop-and-wait
+ARQ at loss probability ``p`` inflates the expected block duration by
+``1/(1-p)``, absorbed into an effective per-block overhead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
+
+import numpy as np
+
+from repro.core.bounds import BoundConstants, corollary1_bound
+from repro.core.planner import Plan, default_grid
+from repro.core.protocol import BlockSchedule, boundary_n_c
+
+
+# ---------------------------------------------------------------------------
+# Link models
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class LinkModel(Protocol):
+    """Rate/reliability model of the device->edge link.
+
+    Implementations must be vectorised: ``n_c`` and ``rate`` may be numpy
+    arrays broadcastable against each other.
+    """
+
+    rates: Tuple[float, ...]
+
+    def p_err(self, rate): ...
+
+    def expected_block_time(self, n_c, n_o, rate): ...
+
+
+@dataclass(frozen=True)
+class IdealLink:
+    """The paper's noiseless unit-rate link (Secs. 2-5)."""
+
+    rates: Tuple[float, ...] = (1.0,)
+
+    def p_err(self, rate):
+        return np.zeros_like(np.asarray(rate, np.float64))
+
+    def expected_block_time(self, n_c, n_o, rate):
+        return np.asarray(n_c, np.float64) / rate + n_o
+
+
+@dataclass(frozen=True)
+class ErasureLink:
+    """Erasure channel with stop-and-wait ARQ (paper Sec. 6, extension 1).
+
+    A packet is lost i.i.d. with probability
+    ``p_err(rate) = 1 - (1 - p_base) exp(-beta (rate - 1))`` and
+    retransmitted until received, so the EXPECTED block duration is
+    ``(n_c / rate + n_o) / (1 - p_err)`` — the classic rate-reliability
+    trade-off.  ``rates`` is the candidate set the joint planner searches.
+    """
+
+    beta: float = 0.25
+    p_base: float = 0.0  # residual loss probability at rate 1
+    rates: Tuple[float, ...] = (1.0, 1.25, 1.5, 2.0, 3.0)
+
+    def p_err(self, rate):
+        rate = np.asarray(rate, np.float64)
+        p = 1.0 - (1.0 - self.p_base) * np.exp(
+            -self.beta * np.maximum(rate - 1.0, 0.0))
+        return np.minimum(p, 0.999)
+
+    def expected_block_time(self, n_c, n_o, rate):
+        raw = np.asarray(n_c, np.float64) / rate + n_o
+        return raw / (1.0 - self.p_err(rate))
+
+
+# ---------------------------------------------------------------------------
+# Topologies
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Topology(Protocol):
+    n_devices: int
+
+
+@dataclass(frozen=True)
+class SingleDevice:
+    n_devices: int = 1
+
+
+@dataclass(frozen=True)
+class MultiDevice:
+    """D devices sharing the uplink by round-robin TDMA (Sec. 6, ext. 2).
+
+    The union prefix grows exactly like a single device with block size
+    ``D * n_c`` and overhead ``D * n_o`` — so all planning happens in
+    union coordinates and per-device block sizes come out as ``n_c / D``.
+    """
+
+    n_devices: int
+
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {self.n_devices}")
+
+
+# ---------------------------------------------------------------------------
+# Scenario
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """Everything the planner and simulator need to know about the system.
+
+    ``N`` is the TOTAL number of samples (across all devices), ``T`` the
+    deadline and ``n_o`` the per-device per-block overhead, all in the
+    paper's normalised sample-transmission time units; ``tau_p`` is the
+    time per SGD update.
+    """
+
+    N: int
+    T: float
+    n_o: float
+    tau_p: float = 1.0
+    link: Any = field(default_factory=IdealLink)
+    topology: Any = field(default_factory=SingleDevice)
+
+    @property
+    def n_devices(self) -> int:
+        return self.topology.n_devices
+
+    @property
+    def union_overhead(self) -> float:
+        """Per-union-block overhead after the TDMA reduction (D * n_o)."""
+        return self.n_devices * self.n_o
+
+    def effective_overhead(self, n_c, rate=1.0):
+        """Link+topology-induced overhead ``n_o_eff(n_c, rate)``.
+
+        Chosen so that ``n_c + n_o_eff`` equals the expected union-block
+        delivery time — mapping any scenario into the paper's noiseless
+        model where Corollary 1 applies unchanged.  Vectorised over
+        broadcastable ``n_c`` / ``rate`` arrays.
+        """
+        n_c = np.asarray(n_c, np.float64)
+        dur = self.link.expected_block_time(n_c, self.union_overhead, rate)
+        return dur - n_c
+
+    def schedule(self, n_c: int, rate: float = 1.0) -> BlockSchedule:
+        """Effective single-device :class:`BlockSchedule` at a block size."""
+        return BlockSchedule(N=self.N, n_c=int(n_c),
+                             n_o=float(self.effective_overhead(n_c, rate)),
+                             T=self.T, tau_p=self.tau_p)
+
+
+# ---------------------------------------------------------------------------
+# Planners
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Planner(Protocol):
+    def plan(self, scenario: Scenario, consts: BoundConstants) -> Plan: ...
+
+
+def _finish_plan(scenario: Scenario, grid: np.ndarray, rates: np.ndarray,
+                 vals: np.ndarray, *, objective: str) -> Plan:
+    """Shared argmin + Plan assembly over a (rates, grid) objective array.
+
+    ``np.argmin`` over the flattened rate-major array reproduces the
+    legacy loop's tie-breaking (first rate, then first grid point).
+    """
+    flat = int(np.argmin(vals))
+    ri, gi = divmod(flat, grid.size)
+    rate = float(rates[ri])
+    n_c = int(grid[gi])
+    n_o_eff = float(scenario.effective_overhead(n_c, rate))
+    sched = BlockSchedule(N=scenario.N, n_c=n_c, n_o=n_o_eff,
+                          T=scenario.T, tau_p=scenario.tau_p)
+    D = scenario.n_devices
+    return Plan(
+        n_c=n_c,
+        bound_value=float(vals[ri, gi]),
+        full_transfer=sched.full_transfer,
+        boundary=boundary_n_c(scenario.N, scenario.T, n_o_eff),
+        grid=grid,
+        bound_grid=vals[ri],
+        schedule=sched,
+        rate=rate,
+        p_err=float(scenario.link.p_err(rate)),
+        n_c_per_device=max(1, n_c // D),
+        objective=objective,
+    )
+
+
+@dataclass(frozen=True)
+class BoundPlanner:
+    """Corollary-1 planner (the paper's recipe), joint over (n_c, rate).
+
+    The whole ``(rate, n_c)`` grid is evaluated in ONE broadcast call to
+    :func:`corollary1_bound` — no Python loop over grid points.
+    """
+
+    grid: Optional[Sequence[int]] = None
+
+    def plan(self, scenario: Scenario, consts: BoundConstants) -> Plan:
+        consts.validate()
+        grid = np.asarray(self.grid if self.grid is not None
+                          else default_grid(scenario.N))
+        rates = np.asarray(scenario.link.rates, np.float64)
+        n_o_eff = scenario.effective_overhead(grid[None, :], rates[:, None])
+        vals = corollary1_bound(
+            np.broadcast_to(grid[None, :].astype(np.float64), n_o_eff.shape),
+            N=scenario.N, T=scenario.T, n_o=n_o_eff, tau_p=scenario.tau_p,
+            consts=consts)
+        return _finish_plan(scenario, grid, rates, vals,
+                            objective="corollary1")
+
+
+def _mc_default_grid(N: int, n_points: int) -> np.ndarray:
+    g = np.unique(np.round(
+        np.logspace(0, np.log10(N), n_points)).astype(np.int64))
+    return g[g >= 1]
+
+
+@dataclass(frozen=True)
+class MonteCarloPlanner:
+    """Experimental-optimum planner: minimise the Monte-Carlo average of
+    the realised final training loss on the ridge task (the paper's
+    ``n_c*`` search, Sec. 5).  The per-seed loop is a single ``jax.vmap``
+    over seeds inside :func:`repro.core.pipeline.average_final_loss`.
+    """
+
+    X: Any
+    y: Any
+    lam: float = 0.05
+    alpha: float = 1e-4
+    n_runs: int = 3
+    seed: int = 0
+    grid: Optional[Sequence[int]] = None
+    grid_points: int = 12  # MC is expensive: default to a coarse grid
+
+    def plan(self, scenario: Scenario,
+             consts: Optional[BoundConstants] = None) -> Plan:
+        from repro.core.pipeline import average_final_loss
+
+        grid = np.asarray(self.grid if self.grid is not None
+                          else _mc_default_grid(scenario.N, self.grid_points))
+        rates = np.asarray(scenario.link.rates, np.float64)
+        vals = np.empty((rates.size, grid.size))
+        for ri, rate in enumerate(rates):
+            for gi, n_c in enumerate(grid):
+                n_o_eff = float(scenario.effective_overhead(int(n_c), rate))
+                vals[ri, gi] = average_final_loss(
+                    self.X, self.y, n_c=int(n_c), n_o=n_o_eff, T=scenario.T,
+                    tau_p=scenario.tau_p, n_runs=self.n_runs,
+                    alpha=self.alpha, lam=self.lam, seed=self.seed)
+        return _finish_plan(scenario, grid, rates, vals,
+                            objective="montecarlo")
+
+
+@dataclass(frozen=True)
+class Theorem1Planner:
+    """Tighter (but Monte-Carlo) planner: minimise the Theorem-1 estimate
+    from :func:`repro.core.montecarlo.estimate_theorem1` instead of the
+    closed-form Corollary-1 relaxation."""
+
+    X: Any
+    y: Any
+    lam: float = 0.05
+    alpha: float = 1e-4
+    n_runs: int = 2
+    seed: int = 0
+    grid: Optional[Sequence[int]] = None
+    grid_points: int = 8
+
+    def plan(self, scenario: Scenario, consts: BoundConstants) -> Plan:
+        from repro.core.montecarlo import estimate_theorem1
+
+        grid = np.asarray(self.grid if self.grid is not None
+                          else _mc_default_grid(scenario.N, self.grid_points))
+        rates = np.asarray(scenario.link.rates, np.float64)
+        vals = np.empty((rates.size, grid.size))
+        for ri, rate in enumerate(rates):
+            for gi, n_c in enumerate(grid):
+                n_o_eff = float(scenario.effective_overhead(int(n_c), rate))
+                out = estimate_theorem1(
+                    self.X, self.y, n_c=int(n_c), n_o=n_o_eff, T=scenario.T,
+                    consts=consts, lam=self.lam, alpha=self.alpha,
+                    tau_p=scenario.tau_p, n_runs=self.n_runs, seed=self.seed)
+                vals[ri, gi] = out["theorem1"]
+        return _finish_plan(scenario, grid, rates, vals,
+                            objective="theorem1")
+
+
+# ---------------------------------------------------------------------------
+# Simulator facade
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RidgeTask:
+    """The paper's Sec.-5 ridge-regression workload (jitted lax.scan)."""
+
+    X: Any
+    y: Any
+    lam: float = 0.05
+    alpha: float = 1e-4
+    seed: int = 0
+    record_every: int = 256
+
+
+@dataclass
+class StreamingTask:
+    """Any-architecture workload for the generic streaming trainer."""
+
+    train_step: Callable
+    params: Any
+    opt_state: Any
+    dataset: Any            # (N, seq) host array of samples
+    batch_size: int
+    make_batch: Optional[Callable] = None
+    seed: int = 0
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class SimReport:
+    """Unified simulation output for every task type."""
+
+    final_loss: float
+    delivered: int
+    schedule: BlockSchedule
+    plan: Plan
+    w_final: Optional[np.ndarray] = None
+    loss_trace: Optional[np.ndarray] = None
+    trace_times: Optional[np.ndarray] = None
+    history: Optional[list] = None       # StreamingTask update log
+    state: Any = None                    # StreamingTrainState
+    arq_times: Optional[np.ndarray] = None    # sampled ARQ delivery ...
+    arq_counts: Optional[np.ndarray] = None   # ... timeline (lossy links)
+
+
+class Simulator:
+    """``run(scenario, plan, task) -> SimReport``.
+
+    Applies the scenario's topology reduction and link-induced effective
+    overhead to the plan's block size, then dispatches on the task type:
+    :class:`RidgeTask` runs the fully-jitted ridge scan,
+    :class:`StreamingTask` runs the generic ``run_streaming_training``
+    loop.  For an :class:`ErasureLink` a realised ARQ delivery timeline
+    is sampled and attached to the report.
+    """
+
+    def run(self, scenario: Scenario, plan: Plan, task) -> SimReport:
+        sched = scenario.schedule(plan.n_c, plan.rate)
+        if isinstance(task, RidgeTask):
+            report = self._run_ridge(scenario, plan, task, sched)
+        elif isinstance(task, StreamingTask):
+            report = self._run_streaming(scenario, plan, task, sched)
+        else:
+            raise TypeError(
+                f"unknown task type {type(task).__name__}; expected "
+                "RidgeTask or StreamingTask")
+        return report
+
+    def _run_ridge(self, scenario, plan, task, sched) -> SimReport:
+        from repro.core.pipeline import run_pipelined_sgd
+
+        res = run_pipelined_sgd(
+            task.X, task.y, n_c=sched.n_c, n_o=sched.n_o, T=sched.T,
+            tau_p=sched.tau_p, alpha=task.alpha, lam=task.lam,
+            seed=task.seed, record_every=task.record_every)
+        arq_t, arq_c = self._maybe_sample_arq(scenario, plan, task.seed)
+        return SimReport(
+            final_loss=res.final_loss, delivered=res.delivered,
+            schedule=sched, plan=plan, w_final=res.w_final,
+            loss_trace=res.loss_trace, trace_times=res.trace_times,
+            arq_times=arq_t, arq_counts=arq_c)
+
+    def _run_streaming(self, scenario, plan, task, sched) -> SimReport:
+        from repro.core.stream_trainer import run_streaming_training
+
+        state = run_streaming_training(
+            train_step=task.train_step, params=task.params,
+            opt_state=task.opt_state, dataset=task.dataset, plan=sched,
+            batch_size=task.batch_size, make_batch=task.make_batch,
+            seed=task.seed, log_every=task.log_every)
+        final = state.history[-1]["loss"] if state.history else float("nan")
+        arq_t, arq_c = self._maybe_sample_arq(scenario, plan, task.seed)
+        return SimReport(
+            final_loss=final, delivered=state.delivered, schedule=sched,
+            plan=plan, history=state.history, state=state,
+            arq_times=arq_t, arq_counts=arq_c)
+
+    def _maybe_sample_arq(self, scenario, plan, seed):
+        if not isinstance(scenario.link, ErasureLink):
+            return None, None
+        from repro.core.channel import ErasureChannel, simulate_noisy_stream
+
+        chan = ErasureChannel(beta=scenario.link.beta,
+                              p_base=scenario.link.p_base)
+        times, counts = simulate_noisy_stream(
+            n_samples=scenario.N, n_c=plan.n_c,
+            n_o=scenario.union_overhead, rate=plan.rate, channel=chan,
+            T=scenario.T, seed=seed)
+        return times, counts

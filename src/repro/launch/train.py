@@ -21,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import INPUT_SHAPES, get_config, reduced
-from repro.core import BlockSchedule, BoundConstants, optimize_block_size
-from repro.core.stream_trainer import run_streaming_training
+from repro.core import (BoundConstants, BoundPlanner, Scenario, Simulator,
+                        StreamingTask)
 from repro.data.synthetic import SyntheticTokens
 from repro.models import init_params, make_train_step
 from repro.optim import linear_warmup_cosine
@@ -66,27 +66,30 @@ def main():
         return {"tokens": jnp.asarray(tok[:, : args.seq])}
 
     if args.stream:
-        n_c = args.n_c
-        if n_c == 0:
-            consts = BoundConstants(L=1.0, c=0.05, M=1.0, M_G=1.0, D=2.0,
-                                    alpha=min(args.lr, 1.0))
-            plan_opt = optimize_block_size(
-                N=n_seqs, T=float(args.steps), n_o=args.n_o, tau_p=1.0,
-                consts=consts)
-            n_c = plan_opt.n_c
-            print(f"planner: n_c-tilde = {n_c} (bound {plan_opt.bound_value:.4f})")
-        plan = BlockSchedule(N=n_seqs, n_c=n_c, n_o=args.n_o,
-                             T=float(args.steps), tau_p=1.0)
-        t0 = time.time()
-        state = run_streaming_training(
+        # the unified API: Scenario -> Planner -> Simulator
+        scenario = Scenario(N=n_seqs, T=float(args.steps), n_o=args.n_o,
+                            tau_p=1.0)
+        consts = BoundConstants(L=1.0, c=0.05, M=1.0, M_G=1.0, D=2.0,
+                                alpha=min(args.lr, 1.0))
+        # --n-c pins the grid to the override; otherwise search 1..N
+        planner = BoundPlanner(grid=[args.n_c] if args.n_c else None)
+        plan = planner.plan(scenario, consts)
+        if not args.n_c:
+            print(f"planner: n_c-tilde = {plan.n_c} "
+                  f"(bound {plan.bound_value:.4f})")
+        task = StreamingTask(
             train_step=train_step, params=params, opt_state=opt_state,
-            dataset=np.asarray(data), plan=plan, batch_size=args.batch,
+            dataset=np.asarray(data), batch_size=args.batch,
             make_batch=make_batch, seed=args.seed)
+        t0 = time.time()
+        report = Simulator().run(scenario, plan, task)
         dt = time.time() - t0
+        state = report.state
         losses = [h["loss"] for h in state.history]
-        print(f"streamed {state.delivered}/{n_seqs} seqs, "
-              f"{state.step + 1} updates in {dt:.1f}s; "
-              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+        trace = (f"loss {losses[0]:.4f} -> {losses[-1]:.4f}" if losses
+                 else "no logged updates (deadline too short for log_every)")
+        print(f"streamed {report.delivered}/{n_seqs} seqs, "
+              f"{state.step + 1} updates in {dt:.1f}s; {trace}")
         params = state.params
     else:
         step_j = jnp.zeros((), jnp.int32)

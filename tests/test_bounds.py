@@ -1,6 +1,8 @@
 """Corollary-1 bound (eqs. 14-15) and the planner's paper-claim trends."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP

@@ -1,0 +1,241 @@
+"""Unified Scenario/Planner/Simulator API: equivalence with the legacy
+entry points, the vectorised joint (n_c, rate) sweep, and the previously
+inexpressible erasure-channel x multi-device cross product."""
+import numpy as np
+import pytest
+
+from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
+from repro.core import (BoundConstants, BoundPlanner, ErasureLink, IdealLink,
+                        MonteCarloPlanner, MultiDevice, Plan, RidgeTask,
+                        Scenario, SimReport, Simulator, SingleDevice,
+                        StreamingTask, optimize_block_size)
+from repro.core.bounds import corollary1_bound
+from repro.core.channel import ErasureChannel, plan_with_channel
+from repro.core.multidevice import plan_multi_device
+from repro.core.planner import default_grid
+from repro.data.synthetic import make_regression_dataset
+
+CONSTS = BoundConstants(L=EP.L, c=EP.c, M=1.0, M_G=1.0, D=1.0, alpha=EP.alpha)
+N, T = EP.n_samples, 1.5 * EP.n_samples
+
+
+# ---------------------------------------------------------------------------
+# equivalence with the legacy planners
+# ---------------------------------------------------------------------------
+
+
+def test_bound_planner_reproduces_optimize_block_size_exactly():
+    """BoundPlanner on IdealLink/SingleDevice == the seed planner: same
+    grid, same bound values (bitwise), same chosen n_c."""
+    grid = default_grid(N)
+    for n_o in (10.0, 500.0, 5000.0):
+        vals = corollary1_bound(grid, N=N, T=T, n_o=n_o, tau_p=1.0,
+                                consts=CONSTS)
+        i = int(np.argmin(vals))
+        plan = BoundPlanner().plan(Scenario(N=N, T=T, n_o=n_o), CONSTS)
+        assert plan.n_c == int(grid[i])
+        assert plan.bound_value == float(vals[i])
+        np.testing.assert_array_equal(plan.bound_grid, vals)
+        # and the compatibility wrapper goes through the same path
+        legacy = optimize_block_size(N=N, T=T, n_o=n_o, tau_p=1.0,
+                                     consts=CONSTS)
+        assert legacy.n_c == plan.n_c
+        assert legacy.bound_value == plan.bound_value
+        assert legacy.boundary == plan.boundary
+        assert legacy.full_transfer == plan.full_transfer
+
+
+def test_vectorised_joint_search_matches_seed_loop():
+    """The broadcast (n_c, rate) sweep picks the same (n_c, rate, bound)
+    as the seed per-grid-point Python loop."""
+    channel = ErasureChannel(beta=0.4)
+    rates = (1.0, 1.25, 1.5, 2.0, 3.0)
+    grid = default_grid(N)
+    n_o = 500.0
+    best = None
+    for rate in rates:  # the seed implementation, verbatim
+        p = channel.p_err(rate)
+        dur = (grid / rate + n_o) / (1.0 - p)
+        n_o_eff = dur - grid
+        vals = np.array([
+            corollary1_bound(np.asarray([nc]), N=N, T=T, n_o=float(no),
+                             tau_p=1.0, consts=CONSTS)[0]
+            for nc, no in zip(grid, n_o_eff)
+        ])
+        i = int(np.argmin(vals))
+        cand = (float(vals[i]), int(grid[i]), float(rate), float(p))
+        if best is None or cand[0] < best[0]:
+            best = cand
+    out = plan_with_channel(N=N, T=T, n_o=n_o, tau_p=1.0, consts=CONSTS,
+                            channel=channel, rates=rates)
+    assert out["n_c"] == best[1]
+    assert out["rate"] == best[2]
+    assert out["bound"] == pytest.approx(best[0], rel=1e-12)
+    assert out["p_err"] == pytest.approx(best[3], rel=1e-12)
+
+
+def test_corollary1_accepts_array_n_o():
+    """Array n_o broadcasts exactly like repeated scalar calls."""
+    grid = np.array([16, 64, 256, 1024], np.float64)
+    n_os = np.array([10.0, 100.0, 300.0, 900.0])
+    batched = corollary1_bound(grid, N=N, T=T, n_o=n_os, tau_p=1.0,
+                               consts=CONSTS)
+    pointwise = np.array([
+        corollary1_bound(np.asarray([nc]), N=N, T=T, n_o=float(no),
+                         tau_p=1.0, consts=CONSTS)[0]
+        for nc, no in zip(grid, n_os)
+    ])
+    np.testing.assert_array_equal(batched, pointwise)
+
+
+def test_multi_device_wrapper_matches_scenario_plan():
+    out = plan_multi_device(n_devices=4, samples_per_device=N // 4, T=T,
+                            n_o=100.0, tau_p=1.0, consts=CONSTS)
+    plan = BoundPlanner().plan(
+        Scenario(N=N, T=T, n_o=100.0, topology=MultiDevice(4)), CONSTS)
+    assert out["n_c_union"] == plan.n_c
+    assert out["n_c_per_device"] == plan.n_c_per_device
+    assert out["bound"] == plan.bound_value
+    assert plan.n_c_per_device == max(1, plan.n_c // 4)
+
+
+# ---------------------------------------------------------------------------
+# cross-product scenarios (previously inexpressible)
+# ---------------------------------------------------------------------------
+
+
+def test_erasure_times_multidevice_end_to_end():
+    """A single Scenario composes ErasureLink x MultiDevice and plans +
+    simulates through the unified facade."""
+    X, y, _ = make_regression_dataset(n=2048, d=8, seed=2)
+    scenario = Scenario(N=2048, T=1.5 * 2048, n_o=20.0,
+                        link=ErasureLink(beta=0.4, rates=(1.0, 1.5, 2.0)),
+                        topology=MultiDevice(4))
+    plan = BoundPlanner().plan(scenario, CONSTS)
+    assert isinstance(plan, Plan)
+    assert 1 <= plan.n_c <= 2048
+    assert plan.rate in (1.0, 1.5, 2.0)
+    assert 0.0 <= plan.p_err < 1.0
+    assert plan.n_c_per_device == max(1, plan.n_c // 4)
+    assert np.isfinite(plan.bound_value)
+    # the joint search can never do worse than forcing rate = 1
+    forced = BoundPlanner().plan(
+        Scenario(N=2048, T=1.5 * 2048, n_o=20.0,
+                 link=ErasureLink(beta=0.4, rates=(1.0,)),
+                 topology=MultiDevice(4)), CONSTS)
+    assert plan.bound_value <= forced.bound_value + 1e-12
+
+    report = Simulator().run(scenario, plan, RidgeTask(X=X, y=y, alpha=1e-3))
+    assert isinstance(report, SimReport)
+    assert np.isfinite(report.final_loss)
+    assert 0 < report.delivered <= 2048
+    # lossy link -> a realised ARQ delivery timeline is attached
+    assert report.arq_times is not None and report.arq_counts is not None
+    assert (np.diff(report.arq_counts) >= 0).all()
+    # effective block duration reflects both the TDMA union (D n_o) and
+    # the ARQ inflation 1/(1-p) over the lossless duration at that rate
+    assert report.schedule.n_o == pytest.approx(
+        float(scenario.effective_overhead(plan.n_c, plan.rate)))
+    lossless = plan.n_c / plan.rate + 4 * 20.0
+    block_time = plan.n_c + report.schedule.n_o
+    assert block_time == pytest.approx(lossless / (1.0 - plan.p_err))
+    if plan.p_err > 0:
+        assert block_time > lossless
+
+
+def test_noisier_link_never_improves_bound():
+    base = BoundPlanner().plan(
+        Scenario(N=N, T=T, n_o=500.0, link=ErasureLink(beta=0.4)), CONSTS)
+    noisy = BoundPlanner().plan(
+        Scenario(N=N, T=T, n_o=500.0,
+                 link=ErasureLink(beta=0.4, p_base=0.3)), CONSTS)
+    assert noisy.bound_value >= base.bound_value - 1e-12
+
+
+def test_ideal_single_device_defaults():
+    sc = Scenario(N=N, T=T, n_o=100.0)
+    assert isinstance(sc.link, IdealLink)
+    assert isinstance(sc.topology, SingleDevice)
+    assert sc.n_devices == 1
+    assert float(sc.effective_overhead(128)) == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------------
+# simulator dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_ridge_matches_run_pipelined_sgd():
+    from repro.core.pipeline import run_pipelined_sgd
+
+    X, y, _ = make_regression_dataset(n=2048, d=8, seed=1)
+    sc = Scenario(N=2048, T=1.5 * 2048, n_o=32.0)
+    plan = BoundPlanner().plan(sc, CONSTS)
+    report = Simulator().run(sc, plan, RidgeTask(X=X, y=y, alpha=1e-3))
+    ref = run_pipelined_sgd(X, y, n_c=plan.n_c, n_o=32.0, T=1.5 * 2048,
+                            alpha=1e-3)
+    assert report.final_loss == ref.final_loss
+    assert report.delivered == ref.delivered
+    np.testing.assert_array_equal(report.w_final, ref.w_final)
+    assert report.arq_times is None  # ideal link: no ARQ timeline
+
+
+def test_simulator_streaming_task():
+    """The generic trainer composes with any scenario (here: multi-device)
+    through the same facade."""
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((64, 4)).astype(np.float32)
+
+    def train_step(params, opt_state, step, batch):
+        x = batch["x"]
+        loss = float(np.mean((x @ params) ** 2))
+        return params * 0.99, opt_state, {"loss": loss}
+
+    sc = Scenario(N=64, T=48.0, n_o=2.0, topology=MultiDevice(2))
+    plan = BoundPlanner(grid=[4, 8, 16]).plan(sc, CONSTS)
+    task = StreamingTask(train_step=train_step,
+                         params=np.ones(4, np.float32), opt_state=None,
+                         dataset=data, batch_size=4,
+                         make_batch=lambda tok: {"x": tok}, log_every=1)
+    report = Simulator().run(sc, plan, task)
+    assert report.history, "streaming run produced no update log"
+    assert report.delivered > 0
+    assert np.isfinite(report.final_loss)
+
+
+def test_simulator_rejects_unknown_task():
+    sc = Scenario(N=64, T=48.0, n_o=2.0)
+    plan = BoundPlanner(grid=[8]).plan(sc, CONSTS)
+    with pytest.raises(TypeError):
+        Simulator().run(sc, plan, object())
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo planner (vmapped seeds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_montecarlo_planner_returns_plan():
+    X, y, _ = make_regression_dataset(n=2048, d=8, seed=3)
+    planner = MonteCarloPlanner(X=X, y=y, alpha=1e-3, n_runs=2,
+                                grid=[64, 256, 1024])
+    plan = planner.plan(Scenario(N=2048, T=1.5 * 2048, n_o=200.0))
+    assert isinstance(plan, Plan)
+    assert plan.objective == "montecarlo"
+    assert plan.n_c in (64, 256, 1024)
+    assert plan.bound_value == float(np.min(plan.bound_grid))
+
+
+def test_average_final_loss_vmap_matches_seed_loop():
+    from repro.core.pipeline import average_final_loss, run_pipelined_sgd
+
+    X, y, _ = make_regression_dataset(n=1024, d=8, seed=4)
+    ref = np.mean([
+        run_pipelined_sgd(X, y, n_c=64, n_o=16.0, T=1.5 * 1024, alpha=1e-3,
+                          lam=0.05, seed=5 + 97 * r).final_loss
+        for r in range(3)
+    ])
+    got = average_final_loss(X, y, n_c=64, n_o=16.0, T=1.5 * 1024, n_runs=3,
+                             alpha=1e-3, lam=0.05, seed=5)
+    assert got == pytest.approx(float(ref), rel=1e-5)

@@ -21,13 +21,22 @@ BENCHES = {
                       "beyond-paper: schedule on LLM pretraining"),
     "extensions": ("benchmarks.bench_extensions",
                    "paper Sec.-6 extensions: Th1 MC, noisy channel, multi-device"),
+    "fleet": ("benchmarks.bench_fleet",
+              "fleet engine: batched vs scalar-loop planning + cache hit-rate"),
     # roofline (reads dry-run artifacts)
     "roofline": ("benchmarks.roofline_report", "roofline aggregation"),
 }
 
 
-def main() -> None:
-    wanted = sys.argv[1:] or list(BENCHES)
+def main(argv=None) -> int:
+    """Run the selected benchmarks; return a non-zero exit code on ANY
+    failure (unknown name or raising bench) so CI can gate on it."""
+    wanted = list(argv if argv is not None else sys.argv[1:]) or list(BENCHES)
+    unknown = [k for k in wanted if k not in BENCHES]
+    if unknown:
+        print(f"unknown benchmark(s): {unknown}; "
+              f"available: {sorted(BENCHES)}", file=sys.stderr)
+        return 2
     print("name,us_per_call,derived")
     failures = []
     for key in wanted:
@@ -39,8 +48,10 @@ def main() -> None:
             failures.append(key)
             traceback.print_exc()
     if failures:
-        raise SystemExit(f"benchmark failures: {failures}")
+        print(f"benchmark failures: {failures}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

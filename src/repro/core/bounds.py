@@ -4,6 +4,11 @@ The Corollary-1 evaluator is closed-form (geometric sums) and vectorised
 over ``n_c`` grids — this is what the planner minimises, exactly as the
 paper proposes (Sec. 4: "a generally looser bound that can be directly
 evaluated numerically without running any Monte Carlo simulations").
+
+This numpy implementation is the REFERENCE semantics; the batched fleet
+planner (:mod:`repro.fleet`) carries a line-for-line ``jax.numpy`` port in
+:mod:`repro.fleet.bounds_jax` that must stay in lockstep with
+:func:`corollary1_bound` (the fleet property tests enforce agreement).
 """
 from __future__ import annotations
 
@@ -36,6 +41,16 @@ class BoundConstants:
     def init_gap(self) -> float:
         """L D^2 / 2 — the Corollary-1 bound on any per-block initial error."""
         return self.L * self.D ** 2 / 2.0
+
+    @property
+    def contraction(self) -> float:
+        """Per-update contraction factor r = clip(1 - gamma c, 0, 1).
+
+        Shared by the numpy evaluator below and the ``jax.numpy`` port in
+        :mod:`repro.fleet.bounds_jax` so both paths derive the bound from
+        the same three scalars (contraction, variance_floor, init_gap).
+        """
+        return float(np.clip(1.0 - self.gamma * self.c, 0.0, 1.0))
 
     def validate(self):
         assert 0 < self.alpha <= 2.0 / (self.L * self.M_G), (
@@ -73,7 +88,7 @@ def corollary1_bound(n_c, *, N: int, T: float, n_o, tau_p: float,
 
     sigma = consts.variance_floor         # alpha^2 L M / (2 gamma c)
     e0 = consts.init_gap                  # L D^2 / 2
-    r = np.clip(1.0 - consts.gamma * consts.c, 0.0, 1.0)
+    r = consts.contraction
     rp = r ** n_p                         # per-block contraction
 
     # ---- regime (a): T <= B_d (n_c + n_o)   (eq. 14) -----------------------

@@ -28,6 +28,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.bounds import BoundConstants
+from repro.core.scenario import P_ERR_MAX
 
 
 @dataclass(frozen=True)
@@ -39,7 +40,7 @@ class ErasureChannel:
 
     def p_err(self, rate: float) -> float:
         p = 1.0 - (1.0 - self.p_base) * math.exp(-self.beta * max(rate - 1.0, 0.0))
-        return min(p, 0.999)
+        return min(p, P_ERR_MAX)
 
     def expected_block_time(self, n_c: int, n_o: float, rate: float) -> float:
         """E[time to deliver one block] under ARQ retransmission."""

@@ -52,6 +52,27 @@ def default_grid(N: int) -> np.ndarray:
     return g[g >= 1]
 
 
+def fleet_grid(N, size: int = 128) -> np.ndarray:
+    """Fixed-width log-spaced integer grid(s) 1..N for batched planning.
+
+    Unlike :func:`default_grid` the output is NOT deduplicated, so every
+    scenario in a heterogeneous batch gets the same grid width regardless
+    of its ``N`` — the shape invariance ``vmap``/``jit`` need.  Duplicate
+    grid points are harmless: argmin tie-breaking picks the first.
+
+    ``N`` may be a scalar (returns ``(size,)``) or a 1-D array of
+    per-scenario dataset sizes (returns ``(len(N), size)``).
+    """
+    if size < 1:
+        raise ValueError(f"size must be >= 1, got {size}")
+    N = np.asarray(N, np.int64)
+    if np.any(N < 1):
+        raise ValueError("every N must be >= 1")
+    expo = (np.linspace(0.0, 1.0, size)
+            * np.log10(N.astype(np.float64))[..., None])
+    return np.maximum(np.round(10.0 ** expo).astype(np.int64), 1)
+
+
 def optimize_block_size(*, N: int, T: float, n_o: float, tau_p: float,
                         consts: BoundConstants,
                         grid: Optional[Sequence[int]] = None) -> Plan:

@@ -99,8 +99,11 @@ def boundary_n_c(N: int, T: float, n_o: float) -> float:
     """n_c at which T == B_d (n_c + n_o) — the regime boundary (Fig. 3 dots).
 
     B_d (n_c + n_o) = N (1 + n_o / n_c) = T  =>  n_c = N n_o / (T - N).
-    Returns +inf when T <= N (the whole set can never be delivered).
+    Returns +inf when T <= N (the whole set can never be delivered) and
+    0.0 when n_o <= 0: a link-induced EFFECTIVE overhead can be negative
+    (rate > 1 outruns the ARQ inflation), in which case every block size
+    delivers the full set before T — the boundary sits below the grid.
     """
     if T <= N:
         return math.inf
-    return N * n_o / (T - N)
+    return max(N * n_o / (T - N), 0.0)

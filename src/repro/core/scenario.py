@@ -48,6 +48,11 @@ from repro.core.protocol import BlockSchedule, boundary_n_c
 # Link models
 # ---------------------------------------------------------------------------
 
+#: Cap on the erasure probability: keeps the ARQ inflation 1/(1 - p_err)
+#: finite however aggressive the rate.  Shared with the batched fleet
+#: planner (repro.fleet) so both paths see identical link physics.
+P_ERR_MAX = 0.999
+
 
 @runtime_checkable
 class LinkModel(Protocol):
@@ -64,11 +69,21 @@ class LinkModel(Protocol):
     def expected_block_time(self, n_c, n_o, rate): ...
 
 
+def _validate_rates(rates) -> None:
+    if len(rates) == 0:
+        raise ValueError("rates must be a non-empty tuple")
+    if any(not np.isfinite(r) or r <= 0.0 for r in rates):
+        raise ValueError(f"rates must be finite and > 0, got {rates}")
+
+
 @dataclass(frozen=True)
 class IdealLink:
     """The paper's noiseless unit-rate link (Secs. 2-5)."""
 
     rates: Tuple[float, ...] = (1.0,)
+
+    def __post_init__(self):
+        _validate_rates(self.rates)
 
     def p_err(self, rate):
         return np.zeros_like(np.asarray(rate, np.float64))
@@ -86,17 +101,32 @@ class ErasureLink:
     retransmitted until received, so the EXPECTED block duration is
     ``(n_c / rate + n_o) / (1 - p_err)`` — the classic rate-reliability
     trade-off.  ``rates`` is the candidate set the joint planner searches.
+
+    Rates below 1 transmit slower but are never MORE reliable than the
+    nominal rate (the exponent is clamped at 0, so ``p_err == p_base``);
+    ``p_err`` is additionally capped at :data:`P_ERR_MAX` so the expected
+    ARQ inflation ``1 / (1 - p_err)`` stays finite at any rate.
     """
 
     beta: float = 0.25
     p_base: float = 0.0  # residual loss probability at rate 1
     rates: Tuple[float, ...] = (1.0, 1.25, 1.5, 2.0, 3.0)
 
+    def __post_init__(self):
+        _validate_rates(self.rates)
+        if not np.isfinite(self.beta) or self.beta < 0.0:
+            raise ValueError(f"beta must be finite and >= 0, got {self.beta}")
+        if not 0.0 <= self.p_base < 1.0:
+            # p_base >= 1 used to be silently masked by the p_err cap,
+            # turning an impossible channel into a merely terrible one
+            raise ValueError(
+                f"p_base must be in [0, 1), got {self.p_base}")
+
     def p_err(self, rate):
         rate = np.asarray(rate, np.float64)
         p = 1.0 - (1.0 - self.p_base) * np.exp(
             -self.beta * np.maximum(rate - 1.0, 0.0))
-        return np.minimum(p, 0.999)
+        return np.minimum(p, P_ERR_MAX)
 
     def expected_block_time(self, n_c, n_o, rate):
         raw = np.asarray(n_c, np.float64) / rate + n_o
@@ -156,6 +186,16 @@ class Scenario:
     link: Any = field(default_factory=IdealLink)
     topology: Any = field(default_factory=SingleDevice)
 
+    def __post_init__(self):
+        if self.N < 1:
+            raise ValueError(f"N must be >= 1, got {self.N}")
+        if not self.T > 0.0:
+            raise ValueError(f"T must be > 0, got {self.T}")
+        if self.n_o < 0.0:
+            raise ValueError(f"n_o must be >= 0, got {self.n_o}")
+        if not self.tau_p > 0.0:
+            raise ValueError(f"tau_p must be > 0, got {self.tau_p}")
+
     @property
     def n_devices(self) -> int:
         return self.topology.n_devices
@@ -171,8 +211,13 @@ class Scenario:
         Chosen so that ``n_c + n_o_eff`` equals the expected union-block
         delivery time — mapping any scenario into the paper's noiseless
         model where Corollary 1 applies unchanged.  Vectorised over
-        broadcastable ``n_c`` / ``rate`` arrays.
+        broadcastable ``n_c`` / ``rate`` arrays.  May legitimately be
+        NEGATIVE (rate > 1 outruns the ARQ inflation): the effective block
+        duration ``n_c + n_o_eff`` stays positive, which is all the bound
+        math needs.
         """
+        if np.any(np.asarray(rate, np.float64) <= 0.0):
+            raise ValueError(f"rate must be > 0, got {rate}")
         n_c = np.asarray(n_c, np.float64)
         dur = self.link.expected_block_time(n_c, self.union_overhead, rate)
         return dur - n_c

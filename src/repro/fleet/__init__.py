@@ -1,0 +1,26 @@
+"""Fleet planning engine: batched, sharded, cached Corollary-1 planning.
+
+The PR-1 ``Scenario``/``Planner``/``Simulator`` triple makes ONE
+device-edge pair plannable; this package makes the FLEET the unit of work:
+
+  * :class:`~repro.fleet.batch.ScenarioBatch` — struct-of-arrays stacking
+    of thousands of heterogeneous scenarios (round-trips to ``Scenario``);
+  * :class:`~repro.fleet.planner.FleetPlanner` — the joint ``(rate, n_c)``
+    grid for every scenario evaluated in one jitted, x64, device-sharded
+    call through the ``jax.numpy`` bound port in
+    :mod:`~repro.fleet.bounds_jax`;
+  * :class:`~repro.fleet.cache.PlanCache` — quantised-key LRU so repeated
+    or near-identical requests skip the solve;
+  * ``repro.launch.plan_server`` — the micro-batching request-stream
+    driver reporting plans/sec (see ``python -m repro.launch.plan_server``).
+"""
+from repro.fleet.batch import ScenarioBatch
+from repro.fleet.bounds_jax import corollary1_bound_jax
+from repro.fleet.cache import PlanCache, scenario_key
+from repro.fleet.planner import FleetPlan, FleetPlanner, PlanRecord
+
+__all__ = [
+    "ScenarioBatch", "corollary1_bound_jax",
+    "PlanCache", "scenario_key",
+    "FleetPlan", "FleetPlanner", "PlanRecord",
+]

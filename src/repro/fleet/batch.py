@@ -1,0 +1,114 @@
+"""Struct-of-arrays batching of heterogeneous :class:`~repro.core.scenario.Scenario`s.
+
+The fleet planner's unit of work is a :class:`ScenarioBatch`: every scalar
+field of the PR-1 ``Scenario`` stacked into a ``(S,)`` array, the link
+parameters flattened into ``(S,)`` erasure params plus a padded ``(S, R)``
+candidate-rate matrix.  Padding keeps the batch rectangular — the shape
+invariance ``jit``/``vmap`` need — and ``rate_mask`` marks which columns
+are real candidates (padded columns repeat the last real rate and are
+masked out of the argmin with ``+inf``).
+
+``from_scenarios`` / ``__getitem__`` round-trip losslessly, with one
+documented normalisation: a ``MultiDevice(1)`` topology comes back as the
+equivalent ``SingleDevice()``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.scenario import (ErasureLink, IdealLink, MultiDevice,
+                                 Scenario, SingleDevice)
+
+
+@dataclass(frozen=True)
+class ScenarioBatch:
+    """Stacked scenario parameters; all arrays share leading dim ``S``."""
+
+    N: np.ndarray           # (S,) int64   total samples
+    T: np.ndarray           # (S,) float64 deadline
+    n_o: np.ndarray         # (S,) float64 per-device per-block overhead
+    tau_p: np.ndarray       # (S,) float64 time per SGD update
+    n_devices: np.ndarray   # (S,) int64   TDMA device count
+    beta: np.ndarray        # (S,) float64 erasure rate-sensitivity (0 = ideal)
+    p_base: np.ndarray      # (S,) float64 residual loss at rate 1 (0 = ideal)
+    rates: np.ndarray       # (S, R) float64 candidate rates, right-padded
+    rate_mask: np.ndarray   # (S, R) bool   True where the candidate is real
+    is_erasure: np.ndarray  # (S,) bool     link class (for reconstruction)
+
+    def __post_init__(self):
+        S = self.N.shape[0]
+        for name in ("T", "n_o", "tau_p", "n_devices", "beta", "p_base",
+                     "is_erasure"):
+            arr = getattr(self, name)
+            if arr.shape != (S,):
+                raise ValueError(f"{name} has shape {arr.shape}, want ({S},)")
+        if self.rates.ndim != 2 or self.rates.shape[0] != S:
+            raise ValueError(f"rates has shape {self.rates.shape}")
+        if self.rate_mask.shape != self.rates.shape:
+            raise ValueError("rate_mask/rates shape mismatch")
+        if not self.rate_mask[:, 0].all():
+            raise ValueError("every scenario needs >= 1 valid rate")
+
+    def __len__(self) -> int:
+        return int(self.N.shape[0])
+
+    @property
+    def n_rates(self) -> int:
+        """Padded width R of the candidate-rate matrix."""
+        return int(self.rates.shape[1])
+
+    @property
+    def union_overhead(self) -> np.ndarray:
+        """(S,) per-union-block overhead after the TDMA reduction."""
+        return self.n_devices.astype(np.float64) * self.n_o
+
+    @classmethod
+    def from_scenarios(cls, scenarios: Sequence[Scenario]) -> "ScenarioBatch":
+        if len(scenarios) == 0:
+            raise ValueError("empty scenario list")
+        R = max(len(sc.link.rates) for sc in scenarios)
+        S = len(scenarios)
+        rates = np.ones((S, R), np.float64)
+        mask = np.zeros((S, R), bool)
+        beta = np.zeros(S, np.float64)
+        p_base = np.zeros(S, np.float64)
+        is_er = np.zeros(S, bool)
+        for i, sc in enumerate(scenarios):
+            r = np.asarray(sc.link.rates, np.float64)
+            rates[i, :r.size] = r
+            rates[i, r.size:] = r[-1]          # pad: repeat last real rate
+            mask[i, :r.size] = True
+            if isinstance(sc.link, ErasureLink):
+                beta[i], p_base[i], is_er[i] = sc.link.beta, sc.link.p_base, True
+            elif not isinstance(sc.link, IdealLink):
+                raise TypeError(
+                    f"scenario {i}: unsupported link {type(sc.link).__name__}")
+        return cls(
+            N=np.asarray([sc.N for sc in scenarios], np.int64),
+            T=np.asarray([sc.T for sc in scenarios], np.float64),
+            n_o=np.asarray([sc.n_o for sc in scenarios], np.float64),
+            tau_p=np.asarray([sc.tau_p for sc in scenarios], np.float64),
+            n_devices=np.asarray([sc.n_devices for sc in scenarios], np.int64),
+            beta=beta, p_base=p_base, rates=rates, rate_mask=mask,
+            is_erasure=is_er)
+
+    def __getitem__(self, i: int) -> Scenario:
+        """Reconstruct the i-th :class:`Scenario` (inverse of from_scenarios)."""
+        i = int(i)
+        rates = tuple(float(r) for r in self.rates[i][self.rate_mask[i]])
+        if self.is_erasure[i]:
+            link = ErasureLink(beta=float(self.beta[i]),
+                               p_base=float(self.p_base[i]), rates=rates)
+        else:
+            link = IdealLink(rates=rates)
+        D = int(self.n_devices[i])
+        topology = MultiDevice(D) if D > 1 else SingleDevice()
+        return Scenario(N=int(self.N[i]), T=float(self.T[i]),
+                        n_o=float(self.n_o[i]), tau_p=float(self.tau_p[i]),
+                        link=link, topology=topology)
+
+    def scenarios(self) -> List[Scenario]:
+        return [self[i] for i in range(len(self))]

@@ -1,0 +1,105 @@
+"""Quantised-key LRU cache of fleet plan records.
+
+Real request streams are heavy-tailed: the same handful of device classes
+(same ``N``/deadline/link quality up to measurement noise) show up over and
+over.  :class:`PlanCache` keys a scenario by its parameters rounded to a
+few SIGNIFICANT digits, so near-identical requests collapse onto one entry
+and skip the solve entirely — the planner only batches the misses.
+
+Quantisation is deliberately on the KEY only: the cached record is the
+exact plan of the first scenario that produced the key, which is within
+grid resolution of optimal for every scenario in the same bucket.
+
+A plan is only reusable under the SAME planning configuration, so every
+cache operation also takes a hashable ``context`` — the planner passes
+``(consts, grid_size)`` — and entries never leak across bound constants
+or grid resolutions sharing one cache.
+"""
+from __future__ import annotations
+
+import math
+from collections import OrderedDict
+from typing import Hashable, Optional, Tuple
+
+from repro.core.scenario import ErasureLink, Scenario
+
+
+def quantise(x: float, sig_digits: int = 3) -> float:
+    """Round ``x`` to ``sig_digits`` significant digits (0 stays 0)."""
+    if x == 0.0 or not math.isfinite(x):
+        return float(x)
+    return round(x, sig_digits - 1 - math.floor(math.log10(abs(x))))
+
+
+def scenario_key(scenario: Scenario, sig_digits: int = 3) -> Tuple:
+    """Hashable quantised signature of a scenario's planning inputs."""
+    link = scenario.link
+    if isinstance(link, ErasureLink):
+        link_sig = ("erasure", quantise(link.beta, sig_digits),
+                    quantise(link.p_base, sig_digits))
+    else:
+        link_sig = (type(link).__name__.lower(),)
+    return (
+        int(scenario.N),
+        int(scenario.n_devices),
+        quantise(scenario.T, sig_digits),
+        quantise(scenario.n_o, sig_digits),
+        quantise(scenario.tau_p, sig_digits),
+        link_sig,
+        tuple(quantise(r, sig_digits) for r in link.rates),
+    )
+
+
+class PlanCache:
+    """LRU map ``(context, scenario_key) -> PlanRecord`` with hit/miss
+    accounting.  ``context`` is any hashable describing the planning
+    configuration the record is valid under (constants, grid width);
+    records from one configuration are invisible to another."""
+
+    def __init__(self, maxsize: int = 4096, sig_digits: int = 3):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self.sig_digits = sig_digits
+        self._store: "OrderedDict[Hashable, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def key(self, scenario: Scenario, context: Hashable = ()) -> Tuple:
+        return (context, scenario_key(scenario, self.sig_digits))
+
+    def get(self, scenario: Scenario, context: Hashable = ()):
+        """Cached record for this (quantised) scenario, or None (counted)."""
+        k = self.key(scenario, context)
+        rec = self._store.get(k)
+        if rec is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(k)
+        self.hits += 1
+        return rec
+
+    def put(self, scenario: Scenario, record,
+            context: Hashable = ()) -> None:
+        k = self.key(scenario, context)
+        self._store[k] = record
+        self._store.move_to_end(k)
+        while len(self._store) > self.maxsize:
+            self._store.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, scenario: Scenario) -> bool:
+        return any(k[1] == scenario_key(scenario, self.sig_digits)
+                   for k in self._store)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0

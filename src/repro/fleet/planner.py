@@ -1,0 +1,284 @@
+"""Batched Corollary-1 planning over a :class:`ScenarioBatch`.
+
+One jitted call evaluates the joint ``(rate, n_c)`` objective for EVERY
+scenario in the batch — shape ``(S, R, G)`` — and reduces it with the same
+rate-major argmin tie-breaking as the scalar
+:class:`~repro.core.scenario.BoundPlanner`, so the batched and scalar paths
+pick identical plans (enforced by the fleet property tests).
+
+The whole computation runs under ``jax.experimental.enable_x64()`` to match
+the numpy reference bit-for-bit where the backend's libm allows, and is
+sharded across local devices via ``jax.sharding.NamedSharding`` over the
+scenario axis whenever more than one device is visible and ``S`` divides
+evenly.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.bounds import BoundConstants
+from repro.core.planner import Plan, fleet_grid
+from repro.core.protocol import BlockSchedule, boundary_n_c
+from repro.core.scenario import P_ERR_MAX, Scenario
+
+from repro.fleet.batch import ScenarioBatch
+from repro.fleet.bounds_jax import corollary1_bound_jax
+from repro.fleet.cache import PlanCache
+
+
+@dataclass(frozen=True)
+class PlanRecord:
+    """Lightweight per-scenario plan — what the cache stores and the
+    server streams back.  ``FleetPlan.record(i)`` extracts one."""
+
+    n_c: int
+    rate: float
+    bound_value: float
+    p_err: float
+    n_o_eff: float
+    full_transfer: bool
+    boundary: float
+    n_c_per_device: int
+    objective: str = "corollary1"
+
+
+@dataclass(frozen=True)
+class FleetPlan:
+    """Struct-of-arrays planner output; all arrays share leading dim S."""
+
+    n_c: np.ndarray             # (S,) int64   chosen union block size
+    rate: np.ndarray            # (S,) float64 chosen transmission rate
+    bound_value: np.ndarray     # (S,) float64 objective at the optimum
+    p_err: np.ndarray           # (S,) float64 loss probability at that rate
+    n_o_eff: np.ndarray         # (S,) float64 effective overhead at optimum
+    full_transfer: np.ndarray   # (S,) bool    regime flag (delivered >= N)
+    boundary: np.ndarray        # (S,) float64 regime-boundary block size
+    n_c_per_device: np.ndarray  # (S,) int64   per-device block size
+    grid: np.ndarray            # (S, G) evaluated n_c grid
+    bound_grid: np.ndarray      # (S, G) objective at the chosen rate
+    objective: str = "corollary1"
+
+    def __len__(self) -> int:
+        return int(self.n_c.shape[0])
+
+    def record(self, i: int) -> PlanRecord:
+        return PlanRecord(
+            n_c=int(self.n_c[i]), rate=float(self.rate[i]),
+            bound_value=float(self.bound_value[i]),
+            p_err=float(self.p_err[i]), n_o_eff=float(self.n_o_eff[i]),
+            full_transfer=bool(self.full_transfer[i]),
+            boundary=float(self.boundary[i]),
+            n_c_per_device=int(self.n_c_per_device[i]),
+            objective=self.objective)
+
+    def to_plan(self, batch: ScenarioBatch, i: int) -> Plan:
+        """Materialise the i-th result as a full PR-1 :class:`Plan`."""
+        sched = BlockSchedule(N=int(batch.N[i]), n_c=int(self.n_c[i]),
+                              n_o=float(self.n_o_eff[i]),
+                              T=float(batch.T[i]),
+                              tau_p=float(batch.tau_p[i]))
+        return Plan(
+            n_c=int(self.n_c[i]), bound_value=float(self.bound_value[i]),
+            full_transfer=sched.full_transfer,
+            boundary=float(self.boundary[i]),
+            grid=np.asarray(self.grid[i]),
+            bound_grid=np.asarray(self.bound_grid[i]),
+            schedule=sched, rate=float(self.rate[i]),
+            p_err=float(self.p_err[i]),
+            n_c_per_device=int(self.n_c_per_device[i]),
+            objective=self.objective)
+
+
+@jax.jit
+def _solve_kernel(N, T, union_no, tau_p, rates, rate_mask, grid, beta,
+                  p_base, sigma, e0, contraction):
+    """The whole fleet solve as one fused program.
+
+    Shapes: per-scenario vectors (S,), rate matrix (S, R), grid (S, G);
+    output per-scenario reductions.  Equivalent to vmapping the scalar
+    planner over scenarios with the grid axes broadcast — written directly
+    in batch form so the argmin layout (rate-major, then grid) matches
+    ``repro.core.scenario._finish_plan`` exactly.
+    """
+    S = rates.shape[0]
+    rate = rates[:, :, None]                                   # (S, R, 1)
+    g = grid[:, None, :].astype(T.dtype)                       # (S, 1, G)
+
+    # ErasureLink.p_err / expected_block_time, batched (beta=0, p_base=0
+    # degenerates to the ideal link, so no branch is needed)
+    p = 1.0 - (1.0 - p_base[:, None, None]) * jnp.exp(
+        -beta[:, None, None] * jnp.maximum(rate - 1.0, 0.0))
+    p = jnp.minimum(p, P_ERR_MAX)
+    dur = (g / rate + union_no[:, None, None]) / (1.0 - p)     # (S, R, G)
+    n_o_eff = dur - g
+
+    vals = corollary1_bound_jax(
+        g, N=N[:, None, None].astype(T.dtype), T=T[:, None, None],
+        n_o=n_o_eff, tau_p=tau_p[:, None, None],
+        sigma=sigma, e0=e0, contraction=contraction)           # (S, R, G)
+
+    # Two-stage argmin == flat rate-major argmin (ties: first grid point
+    # within a rate, then first rate), matching _finish_plan exactly.
+    masked = jnp.where(rate_mask[:, :, None], vals, jnp.inf)
+    gi_per_rate = jnp.argmin(masked, axis=2)                   # (S, R)
+    ri = jnp.argmin(jnp.min(masked, axis=2), axis=1)           # (S,)
+    s = jnp.arange(S)
+    gi = gi_per_rate[s, ri]
+
+    n_c = grid[s, gi]
+    best_no = n_o_eff[s, ri, gi]
+    best_dur = n_c.astype(T.dtype) + best_no
+    delivered = jnp.minimum(jnp.floor(T / best_dur) * n_c, N)
+    return {
+        "n_c": n_c,
+        "rate": rates[s, ri],
+        "bound_value": vals[s, ri, gi],
+        "p_err": p[s, ri, 0],
+        "n_o_eff": best_no,
+        "full_transfer": delivered >= N,
+        "bound_grid": vals[s, ri],
+    }
+
+
+def _maybe_shard(arrays: dict, S: int) -> dict:
+    """Lay the batch out across local devices over the scenario axis."""
+    devices = jax.local_devices()
+    if len(devices) <= 1 or S % len(devices) != 0:
+        return arrays
+    mesh = Mesh(np.asarray(devices), ("fleet",))
+    sharding = NamedSharding(mesh, P("fleet"))
+    return {k: jax.device_put(v, sharding) for k, v in arrays.items()}
+
+
+def _pad_batch(scenarios: List[Scenario],
+               pad_to: Optional[int] = None) -> List[Scenario]:
+    """Pad (repeating the last scenario) to a fixed length ``pad_to``, or
+    to the next power of two — shape invariance bounds how many kernel
+    shapes a request stream can ever compile (one per pad length)."""
+    n = len(scenarios)
+    if pad_to is None:
+        pad_to = 1
+        while pad_to < n:
+            pad_to *= 2
+    elif pad_to < n:
+        raise ValueError(f"pad_to={pad_to} < batch of {n}")
+    return scenarios + [scenarios[-1]] * (pad_to - n)
+
+
+@dataclass(frozen=True)
+class FleetPlanner:
+    """Batched Corollary-1 planner: thousands of scenarios per call.
+
+    ``grid_size`` is the per-scenario grid width G (every scenario gets its
+    own log-spaced 1..N grid of that width via
+    :func:`repro.core.planner.fleet_grid`); ``shard`` toggles the
+    NamedSharding layout across local devices.
+    """
+
+    grid_size: int = 128
+    shard: bool = True
+
+    def plan_batch(self,
+                   batch: Union[ScenarioBatch, Sequence[Scenario]],
+                   consts: BoundConstants,
+                   grid: Optional[np.ndarray] = None) -> FleetPlan:
+        """Solve every scenario in the batch in one jitted call.
+
+        ``grid`` may be ``None`` (per-scenario default grids), a shared
+        ``(G,)`` vector, or a per-scenario ``(S, G)`` matrix.
+        """
+        consts.validate()
+        if not isinstance(batch, ScenarioBatch):
+            batch = ScenarioBatch.from_scenarios(list(batch))
+        S = len(batch)
+        if grid is None:
+            grid = fleet_grid(batch.N, self.grid_size)
+        else:
+            grid = np.asarray(grid, np.int64)
+            if grid.ndim == 1:
+                grid = np.broadcast_to(grid, (S, grid.shape[0]))
+            if grid.shape[0] != S:
+                raise ValueError(
+                    f"grid has leading dim {grid.shape[0]}, want {S}")
+
+        arrays = {  # np.asarray: no copy when the dtype already matches
+            "N": np.asarray(batch.N, np.int64),
+            "T": np.asarray(batch.T, np.float64),
+            "union_no": batch.union_overhead,
+            "tau_p": np.asarray(batch.tau_p, np.float64),
+            "rates": np.asarray(batch.rates, np.float64),
+            "rate_mask": batch.rate_mask,
+            "grid": np.ascontiguousarray(grid),
+            "beta": np.asarray(batch.beta, np.float64),
+            "p_base": np.asarray(batch.p_base, np.float64),
+        }
+        with enable_x64():
+            if self.shard:
+                arrays = _maybe_shard(arrays, S)
+            out = _solve_kernel(
+                sigma=consts.variance_floor, e0=consts.init_gap,
+                contraction=consts.contraction, **arrays)
+            out = {k: np.asarray(v) for k, v in out.items()}
+
+        D = batch.n_devices
+        with np.errstate(divide="ignore"):  # T == N -> inf boundary
+            boundary = np.where(
+                batch.T <= batch.N, np.inf,
+                np.maximum(batch.N * out["n_o_eff"], 0.0)
+                / np.where(batch.T > batch.N, batch.T - batch.N, 1.0))
+        return FleetPlan(
+            n_c=out["n_c"], rate=out["rate"],
+            bound_value=out["bound_value"], p_err=out["p_err"],
+            n_o_eff=out["n_o_eff"], full_transfer=out["full_transfer"],
+            boundary=boundary,
+            n_c_per_device=np.maximum(1, out["n_c"] // D),
+            grid=np.asarray(grid), bound_grid=out["bound_grid"])
+
+    def plan_many(self, scenarios: Sequence[Scenario],
+                  consts: BoundConstants,
+                  cache: Optional[PlanCache] = None,
+                  pad_to: Optional[int] = None) -> List[PlanRecord]:
+        """Plan a request list, deduplicating through the cache.
+
+        Cache hits (and in-batch duplicates, up to key quantisation) skip
+        the solve; the remaining unique misses are padded — to ``pad_to``
+        when given (a serving loop passes its micro-batch size so ONE
+        kernel shape covers every batch), else to the next power of two —
+        and solved in ONE ``plan_batch`` call.  Results come back in
+        request order.  Cache entries are scoped to ``(consts,
+        grid_size)`` so one cache can serve several configurations
+        without cross-talk.
+        """
+        scenarios = list(scenarios)
+        if not scenarios:
+            return []
+        records: List[Optional[PlanRecord]] = [None] * len(scenarios)
+        if cache is None:
+            fp = self.plan_batch(_pad_batch(scenarios, pad_to), consts)
+            return [fp.record(i) for i in range(len(scenarios))]
+
+        ctx = (consts, self.grid_size)
+        miss: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        for i, sc in enumerate(scenarios):
+            rec = cache.get(sc, context=ctx)
+            if rec is not None:
+                records[i] = rec
+            else:
+                miss.setdefault(cache.key(sc, context=ctx), []).append(i)
+        if miss:
+            reps = [scenarios[idxs[0]] for idxs in miss.values()]
+            fp = self.plan_batch(_pad_batch(reps, pad_to), consts)
+            for j, idxs in enumerate(miss.values()):
+                rec = fp.record(j)
+                cache.put(scenarios[idxs[0]], rec, context=ctx)
+                for i in idxs:
+                    records[i] = rec
+        return records  # type: ignore[return-value]

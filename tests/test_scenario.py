@@ -13,6 +13,7 @@ from repro.core.bounds import corollary1_bound
 from repro.core.channel import ErasureChannel, plan_with_channel
 from repro.core.multidevice import plan_multi_device
 from repro.core.planner import default_grid
+from repro.core.protocol import BlockSchedule
 from repro.data.synthetic import make_regression_dataset
 
 CONSTS = BoundConstants(L=EP.L, c=EP.c, M=1.0, M_G=1.0, D=1.0, alpha=EP.alpha)
@@ -158,6 +159,101 @@ def test_ideal_single_device_defaults():
     assert isinstance(sc.topology, SingleDevice)
     assert sc.n_devices == 1
     assert float(sc.effective_overhead(128)) == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------------
+# link / scenario edge cases (regression tests)
+# ---------------------------------------------------------------------------
+
+
+def test_link_and_scenario_validation():
+    """Nonsense parameters raise instead of silently producing inf/garbage
+    (rate 0 used to emit a divide-by-zero inf block time; p_base >= 1 was
+    masked by the p_err cap)."""
+    for bad in (0.0, -1.0):
+        with pytest.raises(ValueError):
+            ErasureLink(rates=(bad,))
+        with pytest.raises(ValueError):
+            IdealLink(rates=(1.0, bad))
+    with pytest.raises(ValueError):
+        ErasureLink(rates=())
+    with pytest.raises(ValueError):
+        ErasureLink(p_base=1.0)
+    with pytest.raises(ValueError):
+        ErasureLink(beta=-0.1)
+    for kw in (dict(N=0, T=10.0, n_o=1.0), dict(N=10, T=0.0, n_o=1.0),
+               dict(N=10, T=10.0, n_o=-1.0),
+               dict(N=10, T=10.0, n_o=1.0, tau_p=0.0)):
+        with pytest.raises(ValueError):
+            Scenario(**kw)
+    with pytest.raises(ValueError):
+        Scenario(N=64, T=96.0, n_o=1.0).effective_overhead(8, rate=0.0)
+
+
+def test_p_err_below_nominal_rate_and_at_clamp():
+    """Rates below 1 are never MORE reliable than nominal (no negative
+    probabilities), and the 0.999 cap keeps the ARQ inflation finite."""
+    from repro.core.scenario import P_ERR_MAX
+
+    link = ErasureLink(beta=0.4, p_base=0.2, rates=(0.5, 1.0, 3.0))
+    assert float(link.p_err(0.5)) == pytest.approx(0.2)   # == p_base
+    assert float(link.p_err(0.25)) == float(link.p_err(1.0))
+    extreme = ErasureLink(beta=50.0)
+    assert float(extreme.p_err(3.0)) == P_ERR_MAX
+    block = float(extreme.expected_block_time(100, 10.0, 3.0))
+    assert np.isfinite(block)
+    assert block == pytest.approx((100 / 3.0 + 10.0) / (1.0 - P_ERR_MAX))
+    # legacy channel shares the same cap
+    assert ErasureChannel(beta=50.0).p_err(3.0) == P_ERR_MAX
+
+
+def test_negative_effective_overhead_plans_cleanly():
+    """A fast lossless rate makes n_o_eff negative; the plan stays finite
+    and the regime boundary clamps to 0 (it used to go negative)."""
+    sc = Scenario(N=1000, T=1500.0, n_o=1.0,
+                  link=ErasureLink(beta=0.0, rates=(1.0, 4.0)))
+    n_o_eff = float(sc.effective_overhead(500, 4.0))
+    assert n_o_eff < 0.0
+    assert 500 + n_o_eff > 0.0            # block duration stays positive
+    plan = BoundPlanner().plan(sc, CONSTS)
+    assert np.isfinite(plan.bound_value)
+    assert plan.boundary >= 0.0
+    val = corollary1_bound(np.asarray([500.0]), N=1000, T=1500.0,
+                           n_o=n_o_eff, tau_p=1.0, consts=CONSTS)[0]
+    assert np.isfinite(val) and val > 0
+
+
+def test_boundary_n_c_edges():
+    from repro.core.protocol import boundary_n_c
+
+    assert boundary_n_c(1000, 1500.0, 0.0) == 0.0
+    assert boundary_n_c(1000, 1500.0, -5.0) == 0.0   # negative n_o_eff
+    assert boundary_n_c(1000, 1000.0, 10.0) == np.inf
+    assert boundary_n_c(1000, 800.0, 10.0) == np.inf
+    assert boundary_n_c(1000, 1500.0, 10.0) == pytest.approx(20.0)
+
+
+def test_bound_continuous_at_regime_boundary():
+    """At n_c == boundary_n_c (integer B_d) eq. 14 at B == B_d equals
+    eq. 15 at tau_l == 0: the strict-inequality regime split is continuous
+    at the equality.  Just BELOW the boundary the bound steps up because a
+    whole block no longer completes (floor in B) — inherent to the
+    published formula, so assert monotonicity there, not continuity."""
+    N_, n_o = 1000, 10.0
+    T_ = 1500.0
+    nc = 20.0                    # boundary: B_d = 50 blocks exactly fill T
+    at = corollary1_bound(np.asarray([nc]), N=N_, T=T_, n_o=n_o,
+                          tau_p=1.0, consts=CONSTS)[0]
+    above = corollary1_bound(np.asarray([nc]), N=N_, T=T_ + 1e-9, n_o=n_o,
+                             tau_p=1.0, consts=CONSTS)[0]
+    below = corollary1_bound(np.asarray([nc]), N=N_, T=T_ - 1e-9, n_o=n_o,
+                             tau_p=1.0, consts=CONSTS)[0]
+    assert at == pytest.approx(above, rel=1e-9)
+    assert below >= at           # less time can never improve the bound
+    # the schedule's delivered-count flag agrees with the bound's regime
+    # reading at the exact boundary (whole set delivered at exactly T)
+    sched = BlockSchedule(N=N_, n_c=20, n_o=n_o, T=T_, tau_p=1.0)
+    assert sched.full_transfer
 
 
 # ---------------------------------------------------------------------------

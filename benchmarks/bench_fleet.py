@@ -1,7 +1,11 @@
 """Fleet planning engine benchmark: batched vs scalar-loop throughput.
 
 Plans 4096 heterogeneous scenarios (per-scenario ``N``, deadline, overhead,
-erasure params, device count; joint search over 5 candidate rates) two ways:
+link model + params, device count; joint search over 5 candidate rates) two
+ways.  By default the population MIXES every registered channel family
+(ideal / erasure / fading / Gilbert-Elliott) in one ``ScenarioBatch``, so
+the timed batched path includes the per-scenario ``jax.lax.switch`` link
+dispatch; restrict with ``--models erasure`` etc. to benchmark one family:
 
   * scalar — the PR-1 :class:`BoundPlanner` in a Python loop, one scenario
     at a time (already fully vectorised over its own (rate, n_c) grid);
@@ -22,15 +26,15 @@ PlanCache hit-rate and cached serving throughput.
 """
 from __future__ import annotations
 
+import argparse
 import time
-
-import numpy as np
 
 from benchmarks.common import emit, save_artifact
 from repro.core import BoundPlanner
 from repro.core.planner import fleet_grid
 from repro.fleet import FleetPlanner, PlanCache, ScenarioBatch
-from repro.launch.plan_server import default_consts, serve, synth_requests
+from repro.launch.plan_server import (ALL_MODELS, _parse_models,
+                                      default_consts, serve, synth_requests)
 
 N_SCENARIOS = 4096
 GRID_SIZE = 32
@@ -38,21 +42,25 @@ SPEEDUP_FLOOR = 50.0
 EQUIV_SAMPLE_STRIDE = 32     # scalar-check every 32nd scenario (128 total)
 
 
-def run():
+def run(models=ALL_MODELS):
     consts = default_consts()
     # dup_frac=0 -> every request is a distinct device class (worst case
     # for the cache, the right population for a raw-throughput comparison)
     scenarios = synth_requests(N_SCENARIOS, seed=11, dup_frac=0.0,
-                               n_classes=N_SCENARIOS)
+                               n_classes=N_SCENARIOS, models=models)
     batch = ScenarioBatch.from_scenarios(scenarios)
+    model_mix = sorted({int(m) for m in batch.link_model_id})
     grids = fleet_grid(batch.N, GRID_SIZE)      # shared data prep: (S, G)
 
     # ---- batched: one jitted call, min over repeats ------------------------
     planner = FleetPlanner(grid_size=GRID_SIZE)
     fleet_plan = planner.plan_batch(batch, consts, grid=grids)  # compile+warm
+    # 13 repeats (up from 7): the per-call cost is ~15 ms, and on a noisy
+    # shared box the min needs more draws to reliably land near the
+    # noise-free floor the assertion is calibrated against
     t_batched = min(
         _timed(lambda: planner.plan_batch(batch, consts, grid=grids))
-        for _ in range(7))
+        for _ in range(13))
 
     # ---- scalar: the PR-1 planner in a Python loop -------------------------
     scalar_plans = []
@@ -79,13 +87,15 @@ def run():
         f"batched plans diverge from scalar: {exact} exact, {near} argmin ties")
 
     # ---- cached serving throughput on a realistic stream -------------------
-    stream = synth_requests(N_SCENARIOS, seed=12, dup_frac=0.5)
+    stream = synth_requests(N_SCENARIOS, seed=12, dup_frac=0.5,
+                            models=models)
     cache = PlanCache(maxsize=8192)
     stats = serve(stream, planner=planner, consts=consts, cache=cache,
                   batch_size=256)
 
     save_artifact("fleet", {
         "n_scenarios": N_SCENARIOS, "grid_size": GRID_SIZE,
+        "models": list(models), "model_ids_in_batch": model_mix,
         "batched_s": t_batched, "scalar_loop_s": t_scalar,
         "speedup": speedup,
         "batched_plans_per_sec": N_SCENARIOS / t_batched,
@@ -95,7 +105,8 @@ def run():
         "cache_hit_rate": stats.cache_hit_rate,
     })
     emit("fleet_plan_batch", t_batched * 1e6,
-         f"S={N_SCENARIOS} G={GRID_SIZE} speedup={speedup:.0f}x "
+         f"S={N_SCENARIOS} G={GRID_SIZE} models={len(model_mix)} "
+         f"speedup={speedup:.0f}x "
          f"batched={N_SCENARIOS / t_batched:,.0f}plans/s "
          f"scalar={N_SCENARIOS / t_scalar:,.0f}plans/s "
          f"equiv={exact}/{exact + near}exact")
@@ -103,10 +114,14 @@ def run():
          f"served={stats.n_requests} hit_rate={stats.cache_hit_rate:.2f} "
          f"{stats.plans_per_sec:,.0f}plans/s")
 
+    if len(models) > 1:
+        assert len(model_mix) > 1, (
+            f"requested a mixed-model population {models} but the batch "
+            f"only contains model ids {model_mix}")
     assert speedup >= SPEEDUP_FLOOR, (
-        f"batched fleet planning only {speedup:.1f}x faster than the scalar "
-        f"BoundPlanner loop at {N_SCENARIOS} scenarios (want >= "
-        f"{SPEEDUP_FLOOR:.0f}x)")
+        f"batched fleet planning (lax.switch over {len(model_mix)} link "
+        f"model(s)) only {speedup:.1f}x faster than the scalar BoundPlanner "
+        f"loop at {N_SCENARIOS} scenarios (want >= {SPEEDUP_FLOOR:.0f}x)")
     assert stats.cache_hit_rate >= 0.25, (
         f"PlanCache hit rate {stats.cache_hit_rate:.2f} on a 50%-duplicate "
         "stream — quantised keys are not collapsing repeated classes")
@@ -120,4 +135,10 @@ def _timed(fn) -> float:
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--models", default="all",
+                    help="comma-separated link model mix, or 'all' "
+                         f"({', '.join(ALL_MODELS)})")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(models=_parse_models(args.models))

@@ -10,7 +10,12 @@ from repro.core.pipeline import (StreamResult, average_final_loss,
                                  ridge_loss_full, run_pipelined_sgd)
 from repro.core.planner import Plan, default_grid, optimize_block_size
 from repro.core.protocol import BlockSchedule, boundary_n_c
-from repro.core.scenario import (BoundPlanner, ErasureLink, IdealLink,
+from repro.core.links import (MAX_LINK_PARAMS, P_ERR_MAX, LinkModel,
+                              LinkModelSpec, link_spec, link_spec_for,
+                              register_link_model, registered_link_models,
+                              unregister_link_model)
+from repro.core.scenario import (BoundPlanner, ErasureLink, FadingLink,
+                                 GilbertElliottLink, IdealLink,
                                  MonteCarloPlanner, MultiDevice, Planner,
                                  RidgeTask, Scenario, SimReport, Simulator,
                                  SingleDevice, StreamingTask, Theorem1Planner)
@@ -22,7 +27,11 @@ __all__ = [
     "StreamResult", "average_final_loss", "ridge_loss_full", "run_pipelined_sgd",
     "Plan", "default_grid", "optimize_block_size",
     "BlockSchedule", "boundary_n_c",
-    "Scenario", "IdealLink", "ErasureLink", "SingleDevice", "MultiDevice",
+    "Scenario", "IdealLink", "ErasureLink", "FadingLink",
+    "GilbertElliottLink", "SingleDevice", "MultiDevice",
+    "LinkModel", "LinkModelSpec", "MAX_LINK_PARAMS", "P_ERR_MAX",
+    "register_link_model", "registered_link_models", "unregister_link_model",
+    "link_spec", "link_spec_for",
     "Planner", "BoundPlanner", "MonteCarloPlanner", "Theorem1Planner",
     "Simulator", "SimReport", "RidgeTask", "StreamingTask",
     "StreamBuffer", "make_buffer", "receive_block", "sample",

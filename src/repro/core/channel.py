@@ -82,13 +82,36 @@ def simulate_noisy_stream(*, n_samples: int, n_c: int, n_o: float,
     """Sample the ARQ delivery timeline: returns the (time, delivered)
     step function actually realised over one channel run."""
     rng = np.random.default_rng(seed)
+    p = channel.p_err(rate)
+    return _arq_timeline(lambda: rng.random() < p, n_samples=n_samples,
+                         n_c=n_c, n_o=n_o, rate=rate, T=T)
+
+
+def simulate_link_stream(*, n_samples: int, n_c: int, n_o: float,
+                         rate: float, link, T: float, seed: int = 0):
+    """Registry-generic ARQ delivery timeline for ANY link model.
+
+    The per-attempt loss draws come from ``link.make_loss_process(rate,
+    rng)`` — i.i.d. for memoryless channels (erasure, fading), the actual
+    two-state chain for Gilbert-Elliott burst loss — so the realised
+    timeline reflects the channel's memory, not just its stationary loss
+    probability.
+    """
+    rng = np.random.default_rng(seed)
+    return _arq_timeline(link.make_loss_process(float(rate), rng),
+                         n_samples=n_samples, n_c=n_c, n_o=n_o, rate=rate,
+                         T=T)
+
+
+def _arq_timeline(lost, *, n_samples: int, n_c: int, n_o: float,
+                  rate: float, T: float):
+    """Stop-and-wait ARQ run driven by a ``() -> lost?`` sampler."""
     t, delivered = 0.0, 0
     times, counts = [0.0], [0]
-    p = channel.p_err(rate)
     while delivered < n_samples and t < T:
         block = min(n_c, n_samples - delivered)
         t += block / rate + n_o
-        while rng.random() < p and t < T:  # retransmit until received
+        while lost() and t < T:  # retransmit until received
             t += block / rate + n_o
         if t >= T:
             break

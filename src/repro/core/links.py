@@ -1,0 +1,411 @@
+"""Pluggable link-model registry: one channel API for every planner path.
+
+The paper's rate-reliability extension (Sec. 6) is the repo's only channel
+physics; this module turns it into an extension point.  Every link model is
+a frozen dataclass registered in a :class:`LinkModelSpec` table under a
+stable integer ``model_id`` and declares
+
+  * numpy scalar semantics — ``p_err(rate)`` and
+    ``expected_block_time(n_c, n_o, rate)``, vectorised over broadcastable
+    arrays (what the scalar :class:`~repro.core.scenario.BoundPlanner`,
+    the Monte-Carlo planners and the Simulator consume);
+  * a fixed-width parameter vector — ``pack_params()`` /
+    ``from_params(params, rates)`` round-trip the model through a padded
+    ``(num_scenarios, MAX_LINK_PARAMS)`` float table (what
+    :class:`~repro.fleet.batch.ScenarioBatch` stacks and the jitted fleet
+    kernel dispatches over via ``jax.lax.switch``);
+  * an ARQ loss process — ``make_loss_process(rate, rng)`` returns a
+    stateful ``() -> lost?`` sampler driving the Simulator's realised
+    delivery timeline (i.i.d. for memoryless channels, a two-state Markov
+    chain for burst loss).
+
+Registering a custom channel is ~50 lines: subclass the dataclass pattern
+below, decorate with :func:`register_link_model`, and register its
+``p_err`` jax kernel with :func:`repro.fleet.link_kernels.register_link_kernel`
+so the batched planner can solve it too (see README "Link models").
+
+Built-in models (ids are part of the on-wire/cache contract — never reuse):
+
+  ====  ======================  ========================================
+  id    class                   parameters
+  ====  ======================  ========================================
+  0     :class:`IdealLink`      (none)
+  1     :class:`ErasureLink`    ``beta, p_base``
+  2     :class:`FadingLink`     ``snr``
+  3     :class:`GilbertElliottLink`  ``beta, p_good, p_bad, p_gb, p_bg``
+  ====  ======================  ========================================
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (Callable, ClassVar, Dict, Protocol, Tuple, Type,
+                    runtime_checkable)
+
+import numpy as np
+
+#: Cap on the loss probability: keeps the stop-and-wait ARQ inflation
+#: ``1 / (1 - p_err)`` finite however aggressive the rate.  Shared by the
+#: numpy semantics here and the jax kernels in ``repro.fleet.link_kernels``
+#: so both paths see identical link physics.
+P_ERR_MAX = 0.999
+
+#: Padded width of the per-scenario link-parameter table in
+#: :class:`~repro.fleet.batch.ScenarioBatch`.  Fixed so the jitted fleet
+#: kernel sees one shape regardless of which models a batch mixes; models
+#: may declare at most this many parameters.
+MAX_LINK_PARAMS = 8
+
+
+@runtime_checkable
+class LinkModel(Protocol):
+    """Rate/reliability model of the device->edge link.
+
+    Implementations must be vectorised: ``n_c`` and ``rate`` may be numpy
+    arrays broadcastable against each other.
+    """
+
+    model_id: ClassVar[int]
+    N_PARAMS: ClassVar[int]
+    rates: Tuple[float, ...]
+
+    def p_err(self, rate): ...
+
+    def expected_block_time(self, n_c, n_o, rate): ...
+
+    def pack_params(self) -> np.ndarray: ...
+
+    @classmethod
+    def from_params(cls, params, rates: Tuple[float, ...]) -> "LinkModel": ...
+
+    def make_loss_process(self, rate: float, rng) -> Callable[[], bool]: ...
+
+
+@dataclass(frozen=True)
+class LinkModelSpec:
+    """Registry entry: the stable id, the class, and its parameter width."""
+
+    model_id: int
+    name: str
+    cls: type
+    n_params: int
+
+
+_SPECS_BY_ID: Dict[int, LinkModelSpec] = {}
+_SPECS_BY_CLS: Dict[type, LinkModelSpec] = {}
+
+
+def register_link_model(cls: Type) -> Type:
+    """Class decorator: add a link-model class to the registry.
+
+    The class must carry integer class attributes ``model_id`` (unique,
+    >= 0) and ``N_PARAMS`` (<= :data:`MAX_LINK_PARAMS`) and implement the
+    :class:`LinkModel` surface (``p_err``, ``expected_block_time``,
+    ``pack_params``, ``from_params``, ``make_loss_process``).
+    """
+    model_id = getattr(cls, "model_id", None)
+    if not isinstance(model_id, int) or isinstance(model_id, bool) \
+            or model_id < 0:
+        raise ValueError(
+            f"{cls.__name__}.model_id must be an int >= 0, got {model_id!r}")
+    n_params = getattr(cls, "N_PARAMS", None)
+    if not isinstance(n_params, int) or n_params < 0:
+        raise ValueError(
+            f"{cls.__name__}.N_PARAMS must be an int >= 0, got {n_params!r}")
+    if n_params > MAX_LINK_PARAMS:
+        raise ValueError(
+            f"{cls.__name__} declares {n_params} parameters; the padded "
+            f"fleet table holds at most MAX_LINK_PARAMS={MAX_LINK_PARAMS}")
+    missing = [m for m in ("p_err", "expected_block_time", "pack_params",
+                           "from_params", "make_loss_process")
+               if not callable(getattr(cls, m, None))]
+    if missing:
+        raise TypeError(f"{cls.__name__} is missing LinkModel methods "
+                        f"{missing}")
+    prior = _SPECS_BY_ID.get(model_id)
+    if prior is not None and prior.cls is not cls:
+        raise ValueError(
+            f"model_id {model_id} already registered by {prior.name}")
+    spec = LinkModelSpec(model_id=model_id, name=cls.__name__, cls=cls,
+                         n_params=n_params)
+    _SPECS_BY_ID[model_id] = spec
+    _SPECS_BY_CLS[cls] = spec
+    return cls
+
+
+def unregister_link_model(model_id: int) -> None:
+    """Remove a registry entry (plugin teardown / tests).  No-op if absent."""
+    spec = _SPECS_BY_ID.pop(model_id, None)
+    if spec is not None:
+        _SPECS_BY_CLS.pop(spec.cls, None)
+
+
+def link_spec(model_id: int) -> LinkModelSpec:
+    """Spec for a registered ``model_id`` (KeyError with guidance if not)."""
+    try:
+        return _SPECS_BY_ID[model_id]
+    except KeyError:
+        raise KeyError(
+            f"no link model registered under model_id {model_id}; known ids: "
+            f"{sorted(_SPECS_BY_ID)}") from None
+
+
+def link_spec_for(link_or_cls) -> LinkModelSpec:
+    """Spec for a link instance or class (KeyError if unregistered)."""
+    cls = link_or_cls if isinstance(link_or_cls, type) else type(link_or_cls)
+    try:
+        return _SPECS_BY_CLS[cls]
+    except KeyError:
+        raise KeyError(
+            f"{cls.__name__} is not a registered link model; decorate it "
+            "with repro.core.links.register_link_model") from None
+
+
+def registered_link_models() -> Tuple[LinkModelSpec, ...]:
+    """All registered specs, sorted by ``model_id``."""
+    return tuple(_SPECS_BY_ID[i] for i in sorted(_SPECS_BY_ID))
+
+
+def _validate_rates(rates) -> None:
+    if len(rates) == 0:
+        raise ValueError("rates must be a non-empty tuple")
+    if any(not np.isfinite(r) or r <= 0.0 for r in rates):
+        raise ValueError(f"rates must be finite and > 0, got {rates}")
+    if any(b <= a for a, b in zip(rates, rates[1:])):
+        # duplicates waste grid columns and can skew the rate-major argmin
+        # tie-breaking; out-of-order sets silently reorder the tie winner
+        raise ValueError(
+            f"rates must be strictly ascending (no duplicates), got {rates}")
+
+
+class _StopAndWaitARQ:
+    """Shared semantics of every lossy stop-and-wait link: the expected
+    block duration is the lossless time inflated by ``1 / (1 - p_err)``,
+    and the default realised loss process draws i.i.d. per attempt."""
+
+    def expected_block_time(self, n_c, n_o, rate):
+        raw = np.asarray(n_c, np.float64) / rate + n_o
+        return raw / (1.0 - self.p_err(rate))
+
+    def make_loss_process(self, rate: float, rng) -> Callable[[], bool]:
+        p = float(self.p_err(float(rate)))
+        return lambda: bool(rng.random() < p)
+
+
+@register_link_model
+@dataclass(frozen=True)
+class IdealLink:
+    """The paper's noiseless unit-rate link (Secs. 2-5)."""
+
+    model_id: ClassVar[int] = 0
+    N_PARAMS: ClassVar[int] = 0
+
+    rates: Tuple[float, ...] = (1.0,)
+
+    def __post_init__(self):
+        _validate_rates(self.rates)
+
+    def p_err(self, rate):
+        return np.zeros_like(np.asarray(rate, np.float64))
+
+    def expected_block_time(self, n_c, n_o, rate):
+        return np.asarray(n_c, np.float64) / rate + n_o
+
+    def pack_params(self) -> np.ndarray:
+        return np.empty(0, np.float64)
+
+    @classmethod
+    def from_params(cls, params, rates) -> "IdealLink":
+        return cls(rates=tuple(rates))
+
+    def make_loss_process(self, rate, rng) -> Callable[[], bool]:
+        return lambda: False
+
+
+@register_link_model
+@dataclass(frozen=True)
+class ErasureLink(_StopAndWaitARQ):
+    """Erasure channel with stop-and-wait ARQ (paper Sec. 6, extension 1).
+
+    A packet is lost i.i.d. with probability
+    ``p_err(rate) = 1 - (1 - p_base) exp(-beta (rate - 1))`` and
+    retransmitted until received, so the EXPECTED block duration is
+    ``(n_c / rate + n_o) / (1 - p_err)`` — the classic rate-reliability
+    trade-off.  ``rates`` is the candidate set the joint planner searches.
+
+    Rates below 1 transmit slower but are never MORE reliable than the
+    nominal rate (the exponent is clamped at 0, so ``p_err == p_base``);
+    ``p_err`` is additionally capped at :data:`P_ERR_MAX` so the expected
+    ARQ inflation ``1 / (1 - p_err)`` stays finite at any rate.
+    """
+
+    model_id: ClassVar[int] = 1
+    N_PARAMS: ClassVar[int] = 2
+
+    beta: float = 0.25
+    p_base: float = 0.0  # residual loss probability at rate 1
+    rates: Tuple[float, ...] = (1.0, 1.25, 1.5, 2.0, 3.0)
+
+    def __post_init__(self):
+        _validate_rates(self.rates)
+        if not np.isfinite(self.beta) or self.beta < 0.0:
+            raise ValueError(f"beta must be finite and >= 0, got {self.beta}")
+        if not 0.0 <= self.p_base < 1.0:
+            # p_base >= 1 used to be silently masked by the p_err cap,
+            # turning an impossible channel into a merely terrible one
+            raise ValueError(
+                f"p_base must be in [0, 1), got {self.p_base}")
+
+    def p_err(self, rate):
+        rate = np.asarray(rate, np.float64)
+        p = 1.0 - (1.0 - self.p_base) * np.exp(
+            -self.beta * np.maximum(rate - 1.0, 0.0))
+        return np.minimum(p, P_ERR_MAX)
+
+    def pack_params(self) -> np.ndarray:
+        return np.asarray([self.beta, self.p_base], np.float64)
+
+    @classmethod
+    def from_params(cls, params, rates) -> "ErasureLink":
+        return cls(beta=float(params[0]), p_base=float(params[1]),
+                   rates=tuple(rates))
+
+
+@register_link_model
+@dataclass(frozen=True)
+class FadingLink(_StopAndWaitARQ):
+    """Block-fading channel with rate-dependent outage.
+
+    Each block sees an independent Rayleigh fade; transmitting at ``rate``
+    (samples per unit time, i.e. spectral efficiency in the normalised
+    model) fails whenever the instantaneous capacity falls short, giving
+    the classic outage probability
+
+        ``p_err(rate) = 1 - exp(-(2**rate - 1) / snr)``
+
+    capped at :data:`P_ERR_MAX`.  ``snr`` is the mean received SNR
+    (linear).  Unlike :class:`ErasureLink` the outage already bites at the
+    nominal rate 1, and grows doubly-exponentially with the rate — the
+    planner's rate selection matters much more on a fading link.
+    """
+
+    model_id: ClassVar[int] = 2
+    N_PARAMS: ClassVar[int] = 1
+
+    snr: float = 10.0
+    rates: Tuple[float, ...] = (1.0, 1.25, 1.5, 2.0, 3.0)
+
+    def __post_init__(self):
+        _validate_rates(self.rates)
+        if not np.isfinite(self.snr) or self.snr <= 0.0:
+            raise ValueError(f"snr must be finite and > 0, got {self.snr}")
+
+    def p_err(self, rate):
+        rate = np.asarray(rate, np.float64)
+        p = 1.0 - np.exp(-(np.exp2(rate) - 1.0) / self.snr)
+        return np.minimum(p, P_ERR_MAX)
+
+    def pack_params(self) -> np.ndarray:
+        return np.asarray([self.snr], np.float64)
+
+    @classmethod
+    def from_params(cls, params, rates) -> "FadingLink":
+        return cls(snr=float(params[0]), rates=tuple(rates))
+
+
+@register_link_model
+@dataclass(frozen=True)
+class GilbertElliottLink(_StopAndWaitARQ):
+    """Two-state Markov (Gilbert-Elliott) burst-loss channel.
+
+    The link alternates between a good and a bad state with transition
+    probabilities ``p_gb`` (good->bad) and ``p_bg`` (bad->good) per
+    transmission attempt.  In each state a packet is lost with the
+    rate-dependent probability of an :class:`ErasureLink` whose residual
+    loss is that state's ``p_good`` / ``p_bad``:
+
+        ``p_state(rate) = 1 - (1 - p_state) exp(-beta (rate - 1))``
+
+    PLANNING uses the stationary loss probability
+
+        ``p_err = p_g + pi_bad (p_b - p_g)``,  ``pi_bad = p_gb / (p_gb + p_bg)``
+
+    (exact for the long-run expected ARQ inflation of an ergodic chain;
+    burst structure only shows up in the realised delivery timeline, which
+    ``make_loss_process`` samples from the actual chain).  Exact-reduction
+    contract: when ``p_good == p_bad`` the convex combination is written
+    so ``p_err`` equals ``ErasureLink(beta, p_base=p_good).p_err``
+    BITWISE, whatever the transition probabilities.
+    """
+
+    model_id: ClassVar[int] = 3
+    N_PARAMS: ClassVar[int] = 5
+
+    p_gb: float = 0.05    # P(good -> bad) per transmission attempt
+    p_bg: float = 0.5     # P(bad -> good) per transmission attempt
+    p_good: float = 0.0   # loss probability in the good state at rate 1
+    p_bad: float = 0.5    # loss probability in the bad state at rate 1
+    beta: float = 0.25    # rate-sensitivity shared by both states
+    rates: Tuple[float, ...] = (1.0, 1.25, 1.5, 2.0, 3.0)
+
+    def __post_init__(self):
+        _validate_rates(self.rates)
+        if not np.isfinite(self.beta) or self.beta < 0.0:
+            raise ValueError(f"beta must be finite and >= 0, got {self.beta}")
+        for name in ("p_gb", "p_bg"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.p_gb + self.p_bg <= 0.0:
+            raise ValueError(
+                "p_gb + p_bg must be > 0 (a frozen chain has no stationary "
+                "distribution)")
+        for name in ("p_good", "p_bad"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {v}")
+
+    @property
+    def stationary_bad(self) -> float:
+        """Long-run probability of finding the chain in the bad state."""
+        return self.p_gb / (self.p_gb + self.p_bg)
+
+    def _state_p_err(self, rate):
+        """Per-state loss probabilities at ``rate`` (uncapped)."""
+        decay = np.exp(-self.beta * np.maximum(
+            np.asarray(rate, np.float64) - 1.0, 0.0))
+        p_g = 1.0 - (1.0 - self.p_good) * decay
+        p_b = 1.0 - (1.0 - self.p_bad) * decay
+        return p_g, p_b
+
+    def p_err(self, rate):
+        p_g, p_b = self._state_p_err(rate)
+        # p_g + pi (p_b - p_g), NOT (1-pi) p_g + pi p_b: the difference form
+        # is bitwise-exact at p_b == p_g (the ErasureLink reduction)
+        p = p_g + self.stationary_bad * (p_b - p_g)
+        return np.minimum(p, P_ERR_MAX)
+
+    def pack_params(self) -> np.ndarray:
+        return np.asarray([self.beta, self.p_good, self.p_bad,
+                           self.p_gb, self.p_bg], np.float64)
+
+    @classmethod
+    def from_params(cls, params, rates) -> "GilbertElliottLink":
+        return cls(beta=float(params[0]), p_good=float(params[1]),
+                   p_bad=float(params[2]), p_gb=float(params[3]),
+                   p_bg=float(params[4]), rates=tuple(rates))
+
+    def make_loss_process(self, rate, rng) -> Callable[[], bool]:
+        """Sample the actual two-state chain (bursts and all), one step per
+        transmission attempt, starting from the stationary distribution."""
+        p_g, p_b = (min(float(p), P_ERR_MAX)
+                    for p in self._state_p_err(float(rate)))
+        state = {"bad": bool(rng.random() < self.stationary_bad)}
+
+        def step() -> bool:
+            lost = rng.random() < (p_b if state["bad"] else p_g)
+            flip = rng.random() < (self.p_bg if state["bad"] else self.p_gb)
+            if flip:
+                state["bad"] = not state["bad"]
+            return bool(lost)
+
+        return step

@@ -23,6 +23,24 @@ class BlockSchedule:
     T: float        # deadline (normalised time)
     tau_p: float    # time per SGD update
 
+    def __post_init__(self):
+        # n_o may legitimately be NEGATIVE (a fast link's effective
+        # overhead after the ARQ reduction) as long as blocks keep a
+        # positive duration; everything else degenerates the timeline
+        # arithmetic (zero-duration blocks loop forever in available_at).
+        if self.N < 1:
+            raise ValueError(f"N must be >= 1, got {self.N}")
+        if self.n_c < 1:
+            raise ValueError(f"n_c must be >= 1, got {self.n_c}")
+        if not self.T > 0.0:
+            raise ValueError(f"T must be > 0, got {self.T}")
+        if not self.tau_p > 0.0:
+            raise ValueError(f"tau_p must be > 0, got {self.tau_p}")
+        if not self.n_c + self.n_o > 0.0:
+            raise ValueError(
+                f"block duration n_c + n_o must be > 0, got "
+                f"{self.n_c} + {self.n_o}")
+
     # ---- protocol quantities (paper notation) -----------------------------
     @property
     def block_duration(self) -> float:

@@ -6,11 +6,14 @@ the Corollary-1 bound under a deadline — and both Sec.-6 extensions
 three objects:
 
   * :class:`Scenario` — a frozen bundle of the protocol parameters
-    ``(N, T, n_o, tau_p)`` plus a pluggable :class:`LinkModel`
-    (:class:`IdealLink` | :class:`ErasureLink`) and :class:`Topology`
-    (:class:`SingleDevice` | :class:`MultiDevice`).  Every combination is
-    expressible, including previously inexpressible cross products such
-    as an erasure channel feeding a multi-device TDMA uplink.
+    ``(N, T, n_o, tau_p)`` plus a pluggable :class:`LinkModel` from the
+    registry in :mod:`repro.core.links` (:class:`IdealLink` |
+    :class:`ErasureLink` | :class:`FadingLink` |
+    :class:`GilbertElliottLink` | any registered plugin) and
+    :class:`Topology` (:class:`SingleDevice` | :class:`MultiDevice`).
+    Every combination is expressible, including previously inexpressible
+    cross products such as a bursty channel feeding a multi-device TDMA
+    uplink.
   * :class:`Planner` — the protocol ``plan(scenario, consts) -> Plan``.
     :class:`BoundPlanner` evaluates Corollary 1 on the full joint
     ``(rate, n_c)`` grid in ONE broadcast call (no Python loops);
@@ -34,103 +37,30 @@ ARQ at loss probability ``p`` inflates the expected block duration by
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import (Any, Callable, Optional, Protocol, Sequence, Tuple,
-                    runtime_checkable)
+from typing import Any, Callable, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
 from repro.core.bounds import BoundConstants, corollary1_bound
+from repro.core.links import (MAX_LINK_PARAMS, P_ERR_MAX, ErasureLink,
+                              FadingLink, GilbertElliottLink, IdealLink,
+                              LinkModel, LinkModelSpec, link_spec,
+                              link_spec_for, register_link_model,
+                              registered_link_models, unregister_link_model)
 from repro.core.planner import Plan, default_grid
 from repro.core.protocol import BlockSchedule, boundary_n_c
 
-
-# ---------------------------------------------------------------------------
-# Link models
-# ---------------------------------------------------------------------------
-
-#: Cap on the erasure probability: keeps the ARQ inflation 1/(1 - p_err)
-#: finite however aggressive the rate.  Shared with the batched fleet
-#: planner (repro.fleet) so both paths see identical link physics.
-P_ERR_MAX = 0.999
-
-
-@runtime_checkable
-class LinkModel(Protocol):
-    """Rate/reliability model of the device->edge link.
-
-    Implementations must be vectorised: ``n_c`` and ``rate`` may be numpy
-    arrays broadcastable against each other.
-    """
-
-    rates: Tuple[float, ...]
-
-    def p_err(self, rate): ...
-
-    def expected_block_time(self, n_c, n_o, rate): ...
-
-
-def _validate_rates(rates) -> None:
-    if len(rates) == 0:
-        raise ValueError("rates must be a non-empty tuple")
-    if any(not np.isfinite(r) or r <= 0.0 for r in rates):
-        raise ValueError(f"rates must be finite and > 0, got {rates}")
-
-
-@dataclass(frozen=True)
-class IdealLink:
-    """The paper's noiseless unit-rate link (Secs. 2-5)."""
-
-    rates: Tuple[float, ...] = (1.0,)
-
-    def __post_init__(self):
-        _validate_rates(self.rates)
-
-    def p_err(self, rate):
-        return np.zeros_like(np.asarray(rate, np.float64))
-
-    def expected_block_time(self, n_c, n_o, rate):
-        return np.asarray(n_c, np.float64) / rate + n_o
-
-
-@dataclass(frozen=True)
-class ErasureLink:
-    """Erasure channel with stop-and-wait ARQ (paper Sec. 6, extension 1).
-
-    A packet is lost i.i.d. with probability
-    ``p_err(rate) = 1 - (1 - p_base) exp(-beta (rate - 1))`` and
-    retransmitted until received, so the EXPECTED block duration is
-    ``(n_c / rate + n_o) / (1 - p_err)`` — the classic rate-reliability
-    trade-off.  ``rates`` is the candidate set the joint planner searches.
-
-    Rates below 1 transmit slower but are never MORE reliable than the
-    nominal rate (the exponent is clamped at 0, so ``p_err == p_base``);
-    ``p_err`` is additionally capped at :data:`P_ERR_MAX` so the expected
-    ARQ inflation ``1 / (1 - p_err)`` stays finite at any rate.
-    """
-
-    beta: float = 0.25
-    p_base: float = 0.0  # residual loss probability at rate 1
-    rates: Tuple[float, ...] = (1.0, 1.25, 1.5, 2.0, 3.0)
-
-    def __post_init__(self):
-        _validate_rates(self.rates)
-        if not np.isfinite(self.beta) or self.beta < 0.0:
-            raise ValueError(f"beta must be finite and >= 0, got {self.beta}")
-        if not 0.0 <= self.p_base < 1.0:
-            # p_base >= 1 used to be silently masked by the p_err cap,
-            # turning an impossible channel into a merely terrible one
-            raise ValueError(
-                f"p_base must be in [0, 1), got {self.p_base}")
-
-    def p_err(self, rate):
-        rate = np.asarray(rate, np.float64)
-        p = 1.0 - (1.0 - self.p_base) * np.exp(
-            -self.beta * np.maximum(rate - 1.0, 0.0))
-        return np.minimum(p, P_ERR_MAX)
-
-    def expected_block_time(self, n_c, n_o, rate):
-        raw = np.asarray(n_c, np.float64) / rate + n_o
-        return raw / (1.0 - self.p_err(rate))
+# Link models live in :mod:`repro.core.links` (the pluggable registry);
+# re-exported here because this module is their historical home.
+__all__ = [
+    "MAX_LINK_PARAMS", "P_ERR_MAX", "LinkModel", "LinkModelSpec",
+    "IdealLink", "ErasureLink", "FadingLink", "GilbertElliottLink",
+    "register_link_model", "registered_link_models", "unregister_link_model",
+    "link_spec", "link_spec_for",
+    "Topology", "SingleDevice", "MultiDevice", "Scenario",
+    "Planner", "BoundPlanner", "MonteCarloPlanner", "Theorem1Planner",
+    "RidgeTask", "StreamingTask", "SimReport", "Simulator",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -424,8 +354,11 @@ class Simulator:
     overhead to the plan's block size, then dispatches on the task type:
     :class:`RidgeTask` runs the fully-jitted ridge scan,
     :class:`StreamingTask` runs the generic ``run_streaming_training``
-    loop.  For an :class:`ErasureLink` a realised ARQ delivery timeline
-    is sampled and attached to the report.
+    loop.  For any lossy link (every registered model except
+    :class:`IdealLink`) a realised ARQ delivery timeline is sampled from
+    the link's own loss process — i.i.d. for memoryless channels, the
+    actual two-state chain for :class:`GilbertElliottLink` — and attached
+    to the report.
     """
 
     def run(self, scenario: Scenario, plan: Plan, task) -> SimReport:
@@ -470,14 +403,13 @@ class Simulator:
             arq_times=arq_t, arq_counts=arq_c)
 
     def _maybe_sample_arq(self, scenario, plan, seed):
-        if not isinstance(scenario.link, ErasureLink):
+        link = scenario.link
+        if isinstance(link, IdealLink) \
+                or not callable(getattr(link, "make_loss_process", None)):
             return None, None
-        from repro.core.channel import ErasureChannel, simulate_noisy_stream
+        from repro.core.channel import simulate_link_stream
 
-        chan = ErasureChannel(beta=scenario.link.beta,
-                              p_base=scenario.link.p_base)
-        times, counts = simulate_noisy_stream(
+        return simulate_link_stream(
             n_samples=scenario.N, n_c=plan.n_c,
-            n_o=scenario.union_overhead, rate=plan.rate, channel=chan,
+            n_o=scenario.union_overhead, rate=plan.rate, link=link,
             T=scenario.T, seed=seed)
-        return times, counts

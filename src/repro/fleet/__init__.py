@@ -9,18 +9,28 @@ device-edge pair plannable; this package makes the FLEET the unit of work:
     grid for every scenario evaluated in one jitted, x64, device-sharded
     call through the ``jax.numpy`` bound port in
     :mod:`~repro.fleet.bounds_jax`;
+  * :mod:`~repro.fleet.link_kernels` — the jax side of the pluggable link
+    registry: one ``p_err(params, rate)`` kernel per registered model,
+    dispatched per scenario via ``jax.lax.switch`` so ONE compilation
+    plans batches mixing every channel family;
   * :class:`~repro.fleet.cache.PlanCache` — quantised-key LRU so repeated
-    or near-identical requests skip the solve;
+    or near-identical requests skip the solve (keys carry the link's
+    ``(model_id, params)`` signature);
   * ``repro.launch.plan_server`` — the micro-batching request-stream
     driver reporting plans/sec (see ``python -m repro.launch.plan_server``).
 """
 from repro.fleet.batch import ScenarioBatch
 from repro.fleet.bounds_jax import corollary1_bound_jax
 from repro.fleet.cache import PlanCache, scenario_key
+from repro.fleet.link_kernels import (kernel_table, kernel_table_version,
+                                      register_link_kernel,
+                                      unregister_link_kernel)
 from repro.fleet.planner import FleetPlan, FleetPlanner, PlanRecord
 
 __all__ = [
     "ScenarioBatch", "corollary1_bound_jax",
     "PlanCache", "scenario_key",
     "FleetPlan", "FleetPlanner", "PlanRecord",
+    "register_link_kernel", "unregister_link_kernel",
+    "kernel_table", "kernel_table_version",
 ]

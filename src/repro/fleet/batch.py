@@ -2,11 +2,18 @@
 
 The fleet planner's unit of work is a :class:`ScenarioBatch`: every scalar
 field of the PR-1 ``Scenario`` stacked into a ``(S,)`` array, the link
-parameters flattened into ``(S,)`` erasure params plus a padded ``(S, R)``
-candidate-rate matrix.  Padding keeps the batch rectangular — the shape
-invariance ``jit``/``vmap`` need — and ``rate_mask`` marks which columns
-are real candidates (padded columns repeat the last real rate and are
-masked out of the argmin with ``+inf``).
+layer flattened through the pluggable registry
+(:mod:`repro.core.links`) into a per-scenario ``link_model_id`` vector
+plus a right-padded ``(S, MAX_LINK_PARAMS)`` parameter table, and the
+candidate rates into a padded ``(S, R)`` matrix.  Padding keeps the batch
+rectangular — the shape invariance ``jit``/``vmap`` need — and
+``rate_mask`` marks which columns are real candidates (padded columns
+repeat the last real rate and are masked out of the argmin with ``+inf``).
+
+Any REGISTERED link model batches without touching this module: the table
+row is ``link.pack_params()`` and reconstruction goes through
+``spec.cls.from_params`` — one batch can mix every channel family and the
+jitted fleet kernel dispatches per scenario via ``jax.lax.switch``.
 
 ``from_scenarios`` / ``__getitem__`` round-trip losslessly, with one
 documented normalisation: a ``MultiDevice(1)`` topology comes back as the
@@ -19,32 +26,34 @@ from typing import List, Sequence
 
 import numpy as np
 
-from repro.core.scenario import (ErasureLink, IdealLink, MultiDevice,
-                                 Scenario, SingleDevice)
+from repro.core.links import MAX_LINK_PARAMS, link_spec, link_spec_for
+from repro.core.scenario import (MultiDevice, Scenario, SingleDevice)
 
 
 @dataclass(frozen=True)
 class ScenarioBatch:
     """Stacked scenario parameters; all arrays share leading dim ``S``."""
 
-    N: np.ndarray           # (S,) int64   total samples
-    T: np.ndarray           # (S,) float64 deadline
-    n_o: np.ndarray         # (S,) float64 per-device per-block overhead
-    tau_p: np.ndarray       # (S,) float64 time per SGD update
-    n_devices: np.ndarray   # (S,) int64   TDMA device count
-    beta: np.ndarray        # (S,) float64 erasure rate-sensitivity (0 = ideal)
-    p_base: np.ndarray      # (S,) float64 residual loss at rate 1 (0 = ideal)
-    rates: np.ndarray       # (S, R) float64 candidate rates, right-padded
-    rate_mask: np.ndarray   # (S, R) bool   True where the candidate is real
-    is_erasure: np.ndarray  # (S,) bool     link class (for reconstruction)
+    N: np.ndarray              # (S,) int64   total samples
+    T: np.ndarray              # (S,) float64 deadline
+    n_o: np.ndarray            # (S,) float64 per-device per-block overhead
+    tau_p: np.ndarray          # (S,) float64 time per SGD update
+    n_devices: np.ndarray      # (S,) int64   TDMA device count
+    link_model_id: np.ndarray  # (S,) int32   registry id of the link class
+    link_params: np.ndarray    # (S, MAX_LINK_PARAMS) float64 packed params
+    rates: np.ndarray          # (S, R) float64 candidate rates, right-padded
+    rate_mask: np.ndarray      # (S, R) bool   True where the candidate is real
 
     def __post_init__(self):
         S = self.N.shape[0]
-        for name in ("T", "n_o", "tau_p", "n_devices", "beta", "p_base",
-                     "is_erasure"):
+        for name in ("T", "n_o", "tau_p", "n_devices", "link_model_id"):
             arr = getattr(self, name)
             if arr.shape != (S,):
                 raise ValueError(f"{name} has shape {arr.shape}, want ({S},)")
+        if self.link_params.shape != (S, MAX_LINK_PARAMS):
+            raise ValueError(
+                f"link_params has shape {self.link_params.shape}, want "
+                f"({S}, {MAX_LINK_PARAMS})")
         if self.rates.ndim != 2 or self.rates.shape[0] != S:
             raise ValueError(f"rates has shape {self.rates.shape}")
         if self.rate_mask.shape != self.rates.shape:
@@ -73,37 +82,40 @@ class ScenarioBatch:
         S = len(scenarios)
         rates = np.ones((S, R), np.float64)
         mask = np.zeros((S, R), bool)
-        beta = np.zeros(S, np.float64)
-        p_base = np.zeros(S, np.float64)
-        is_er = np.zeros(S, bool)
+        model_id = np.zeros(S, np.int32)
+        params = np.zeros((S, MAX_LINK_PARAMS), np.float64)
         for i, sc in enumerate(scenarios):
+            try:
+                spec = link_spec_for(sc.link)
+            except KeyError as e:
+                raise TypeError(f"scenario {i}: {e.args[0]}") from None
             r = np.asarray(sc.link.rates, np.float64)
             rates[i, :r.size] = r
             rates[i, r.size:] = r[-1]          # pad: repeat last real rate
             mask[i, :r.size] = True
-            if isinstance(sc.link, ErasureLink):
-                beta[i], p_base[i], is_er[i] = sc.link.beta, sc.link.p_base, True
-            elif not isinstance(sc.link, IdealLink):
-                raise TypeError(
-                    f"scenario {i}: unsupported link {type(sc.link).__name__}")
+            model_id[i] = spec.model_id
+            pv = np.asarray(sc.link.pack_params(), np.float64)
+            if pv.shape != (spec.n_params,):
+                raise ValueError(
+                    f"scenario {i}: {spec.name}.pack_params() returned shape "
+                    f"{pv.shape}, spec declares ({spec.n_params},)")
+            params[i, :spec.n_params] = pv
         return cls(
             N=np.asarray([sc.N for sc in scenarios], np.int64),
             T=np.asarray([sc.T for sc in scenarios], np.float64),
             n_o=np.asarray([sc.n_o for sc in scenarios], np.float64),
             tau_p=np.asarray([sc.tau_p for sc in scenarios], np.float64),
             n_devices=np.asarray([sc.n_devices for sc in scenarios], np.int64),
-            beta=beta, p_base=p_base, rates=rates, rate_mask=mask,
-            is_erasure=is_er)
+            link_model_id=model_id, link_params=params,
+            rates=rates, rate_mask=mask)
 
     def __getitem__(self, i: int) -> Scenario:
         """Reconstruct the i-th :class:`Scenario` (inverse of from_scenarios)."""
         i = int(i)
         rates = tuple(float(r) for r in self.rates[i][self.rate_mask[i]])
-        if self.is_erasure[i]:
-            link = ErasureLink(beta=float(self.beta[i]),
-                               p_base=float(self.p_base[i]), rates=rates)
-        else:
-            link = IdealLink(rates=rates)
+        spec = link_spec(int(self.link_model_id[i]))
+        link = spec.cls.from_params(self.link_params[i, :spec.n_params],
+                                    rates=rates)
         D = int(self.n_devices[i])
         topology = MultiDevice(D) if D > 1 else SingleDevice()
         return Scenario(N=int(self.N[i]), T=float(self.T[i]),

@@ -19,9 +19,10 @@ from __future__ import annotations
 
 import math
 from collections import OrderedDict
-from typing import Hashable, Optional, Tuple
+from typing import Hashable, Tuple
 
-from repro.core.scenario import ErasureLink, Scenario
+from repro.core.links import link_spec_for
+from repro.core.scenario import Scenario
 
 
 def quantise(x: float, sig_digits: int = 3) -> float:
@@ -32,13 +33,19 @@ def quantise(x: float, sig_digits: int = 3) -> float:
 
 
 def scenario_key(scenario: Scenario, sig_digits: int = 3) -> Tuple:
-    """Hashable quantised signature of a scenario's planning inputs."""
+    """Hashable quantised signature of a scenario's planning inputs.
+
+    The link enters through the registry as ``(model_id, *params)`` —
+    quantised like every other float — so near-identical requests collapse
+    while requests from DIFFERENT channel families (or the same family
+    with different physics) can never alias, whatever mix the request
+    stream carries.  Unregistered link models raise ``KeyError``: a
+    name-based fallback could silently serve one plugin's plan to another.
+    """
     link = scenario.link
-    if isinstance(link, ErasureLink):
-        link_sig = ("erasure", quantise(link.beta, sig_digits),
-                    quantise(link.p_base, sig_digits))
-    else:
-        link_sig = (type(link).__name__.lower(),)
+    spec = link_spec_for(link)
+    link_sig = (spec.model_id,) + tuple(
+        quantise(float(v), sig_digits) for v in link.pack_params())
     return (
         int(scenario.N),
         int(scenario.n_devices),

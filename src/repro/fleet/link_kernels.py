@@ -1,0 +1,129 @@
+"""Pure-jax ``p_err`` kernels, one per registered link model.
+
+The jax side of the pluggable link registry (:mod:`repro.core.links`): each
+kernel is a pure function ``p_err(params, rate) -> p`` where ``params`` is
+the model's row of the padded ``(S, MAX_LINK_PARAMS)`` parameter table and
+``rate`` the scenario's candidate-rate row — both jnp arrays, broadcast
+semantics, NO Python branching on values.  The fleet solve kernel vmaps a
+``jax.lax.switch`` over :func:`kernel_table` so one jitted ``plan_batch``
+call plans a batch mixing every channel family.
+
+Every kernel must mirror its model's numpy ``p_err`` bitwise (same op
+order, same :data:`~repro.core.links.P_ERR_MAX` clamp) — the batched ==
+scalar equivalence tests enforce it to argmin exactness.
+
+Registering a custom channel's kernel::
+
+    from repro.fleet.link_kernels import register_link_kernel
+
+    def _my_p_err(params, rate):          # params: (MAX_LINK_PARAMS,)
+        return jnp.minimum(params[..., 0] * rate, P_ERR_MAX)
+
+    register_link_kernel(MyLink.model_id, _my_p_err)
+
+Registration bumps :func:`kernel_table_version`; the fleet planner keys its
+jitted dispatch on that version, so plugins registered after import still
+get compiled in (at the cost of one retrace).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+
+from repro.core.links import (P_ERR_MAX, ErasureLink, FadingLink,
+                              GilbertElliottLink, IdealLink, link_spec,
+                              registered_link_models)
+
+_KERNELS: Dict[int, Callable] = {}
+_VERSION = 0
+
+
+def register_link_kernel(model_id: int, p_err_fn: Callable) -> None:
+    """Register the jax ``p_err(params, rate)`` kernel for ``model_id``.
+
+    The model must already be registered with
+    :func:`repro.core.links.register_link_model`.
+    """
+    global _VERSION
+    link_spec(model_id)  # raises KeyError with guidance if no spec exists
+    prior = _KERNELS.get(model_id)
+    if prior is p_err_fn:
+        return  # idempotent re-registration: no version bump, no retrace
+    if prior is not None:
+        raise ValueError(
+            f"model_id {model_id} already has a registered kernel")
+    _KERNELS[model_id] = p_err_fn
+    _VERSION += 1
+
+
+def unregister_link_kernel(model_id: int) -> None:
+    """Remove a kernel (plugin teardown / tests).  No-op if absent."""
+    global _VERSION
+    if _KERNELS.pop(model_id, None) is not None:
+        _VERSION += 1
+
+
+def kernel_table() -> tuple:
+    """Branch table for ``jax.lax.switch``, indexed by ``model_id``.
+
+    Requires a DENSE id space: every id in ``0..max`` must carry both a
+    spec and a kernel, because ``lax.switch(i, branches)`` selects
+    ``branches[i]`` positionally.
+    """
+    specs = registered_link_models()
+    missing = [s.model_id for s in specs if s.model_id not in _KERNELS]
+    if missing:
+        raise ValueError(
+            f"link models {missing} have no registered jax kernel; call "
+            "repro.fleet.link_kernels.register_link_kernel for each")
+    top = max(_KERNELS)
+    holes = [i for i in range(top + 1) if i not in _KERNELS]
+    if holes:
+        raise ValueError(
+            f"model_id space has holes {holes}: lax.switch dispatch needs "
+            f"dense ids 0..{top}")
+    return tuple(_KERNELS[i] for i in range(top + 1))
+
+
+def kernel_table_version() -> int:
+    """Monotone counter bumped on (un)registration — cache key for any
+    jitted function closing over :func:`kernel_table`."""
+    return _VERSION
+
+
+# ---------------------------------------------------------------------------
+# built-in kernels — each mirrors the numpy semantics in repro.core.links
+# ---------------------------------------------------------------------------
+
+
+def _ideal_p_err(params, rate):
+    return jnp.zeros_like(rate)
+
+
+def _erasure_p_err(params, rate):
+    beta, p_base = params[..., 0], params[..., 1]
+    p = 1.0 - (1.0 - p_base) * jnp.exp(-beta * jnp.maximum(rate - 1.0, 0.0))
+    return jnp.minimum(p, P_ERR_MAX)
+
+
+def _fading_p_err(params, rate):
+    snr = params[..., 0]
+    p = 1.0 - jnp.exp(-(jnp.exp2(rate) - 1.0) / snr)
+    return jnp.minimum(p, P_ERR_MAX)
+
+
+def _gilbert_elliott_p_err(params, rate):
+    beta, p_good, p_bad, p_gb, p_bg = (params[..., k] for k in range(5))
+    decay = jnp.exp(-beta * jnp.maximum(rate - 1.0, 0.0))
+    p_g = 1.0 - (1.0 - p_good) * decay
+    p_b = 1.0 - (1.0 - p_bad) * decay
+    pi_bad = p_gb / (p_gb + p_bg)
+    # difference form: bitwise-equal to ErasureLink when p_b == p_g
+    return jnp.minimum(p_g + pi_bad * (p_b - p_g), P_ERR_MAX)
+
+
+register_link_kernel(IdealLink.model_id, _ideal_p_err)
+register_link_kernel(ErasureLink.model_id, _erasure_p_err)
+register_link_kernel(FadingLink.model_id, _fading_p_err)
+register_link_kernel(GilbertElliottLink.model_id, _gilbert_elliott_p_err)

@@ -6,6 +6,14 @@ rate-major argmin tie-breaking as the scalar
 :class:`~repro.core.scenario.BoundPlanner`, so the batched and scalar paths
 pick identical plans (enforced by the fleet property tests).
 
+The channel physics comes from the pluggable link registry: a vmapped
+``jax.lax.switch`` over the :mod:`~repro.fleet.link_kernels` branch table
+turns each scenario's ``(link_model_id, link_params)`` row into its loss
+probability, so a single compilation plans a fleet mixing every registered
+channel family (ideal / erasure / fading / Gilbert-Elliott / plugins).
+The jitted solve is cached per kernel-table version — registering a new
+model after import just triggers one retrace.
+
 The whole computation runs under ``jax.experimental.enable_x64()`` to match
 the numpy reference bit-for-bit where the backend's libm allows, and is
 sharded across local devices via ``jax.sharding.NamedSharding`` over the
@@ -16,6 +24,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import List, Optional, Sequence, Union
 
 import jax
@@ -26,12 +35,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.bounds import BoundConstants
 from repro.core.planner import Plan, fleet_grid
-from repro.core.protocol import BlockSchedule, boundary_n_c
-from repro.core.scenario import P_ERR_MAX, Scenario
+from repro.core.protocol import BlockSchedule
+from repro.core.scenario import Scenario
 
 from repro.fleet.batch import ScenarioBatch
 from repro.fleet.bounds_jax import corollary1_bound_jax
 from repro.fleet.cache import PlanCache
+from repro.fleet.link_kernels import kernel_table, kernel_table_version
 
 
 @dataclass(frozen=True)
@@ -97,10 +107,8 @@ class FleetPlan:
             objective=self.objective)
 
 
-@jax.jit
-def _solve_kernel(N, T, union_no, tau_p, rates, rate_mask, grid, beta,
-                  p_base, sigma, e0, contraction):
-    """The whole fleet solve as one fused program.
+def _build_solve_kernel(branches):
+    """Jit the fleet solve closed over a link-kernel branch table.
 
     Shapes: per-scenario vectors (S,), rate matrix (S, R), grid (S, G);
     output per-scenario reductions.  Equivalent to vmapping the scalar
@@ -108,44 +116,65 @@ def _solve_kernel(N, T, union_no, tau_p, rates, rate_mask, grid, beta,
     in batch form so the argmin layout (rate-major, then grid) matches
     ``repro.core.scenario._finish_plan`` exactly.
     """
-    S = rates.shape[0]
-    rate = rates[:, :, None]                                   # (S, R, 1)
-    g = grid[:, None, :].astype(T.dtype)                       # (S, 1, G)
 
-    # ErasureLink.p_err / expected_block_time, batched (beta=0, p_base=0
-    # degenerates to the ideal link, so no branch is needed)
-    p = 1.0 - (1.0 - p_base[:, None, None]) * jnp.exp(
-        -beta[:, None, None] * jnp.maximum(rate - 1.0, 0.0))
-    p = jnp.minimum(p, P_ERR_MAX)
-    dur = (g / rate + union_no[:, None, None]) / (1.0 - p)     # (S, R, G)
-    n_o_eff = dur - g
+    @jax.jit
+    def _solve_kernel(N, T, union_no, tau_p, rates, rate_mask, grid,
+                      link_model_id, link_params, sigma, e0, contraction):
+        S = rates.shape[0]
+        rate = rates[:, :, None]                                   # (S, R, 1)
+        g = grid[:, None, :].astype(T.dtype)                       # (S, 1, G)
 
-    vals = corollary1_bound_jax(
-        g, N=N[:, None, None].astype(T.dtype), T=T[:, None, None],
-        n_o=n_o_eff, tau_p=tau_p[:, None, None],
-        sigma=sigma, e0=e0, contraction=contraction)           # (S, R, G)
+        # per-scenario link dispatch: lax.switch over the registered p_err
+        # kernels, vmapped over the batch (under vmap every branch runs and
+        # the result is selected — fine: p_err is O(R), the bound is O(R G))
+        def p_err_one(mid, params, rate_row):
+            return jax.lax.switch(mid, branches, params, rate_row)
 
-    # Two-stage argmin == flat rate-major argmin (ties: first grid point
-    # within a rate, then first rate), matching _finish_plan exactly.
-    masked = jnp.where(rate_mask[:, :, None], vals, jnp.inf)
-    gi_per_rate = jnp.argmin(masked, axis=2)                   # (S, R)
-    ri = jnp.argmin(jnp.min(masked, axis=2), axis=1)           # (S,)
-    s = jnp.arange(S)
-    gi = gi_per_rate[s, ri]
+        p = jax.vmap(p_err_one)(link_model_id, link_params, rates)  # (S, R)
 
-    n_c = grid[s, gi]
-    best_no = n_o_eff[s, ri, gi]
-    best_dur = n_c.astype(T.dtype) + best_no
-    delivered = jnp.minimum(jnp.floor(T / best_dur) * n_c, N)
-    return {
-        "n_c": n_c,
-        "rate": rates[s, ri],
-        "bound_value": vals[s, ri, gi],
-        "p_err": p[s, ri, 0],
-        "n_o_eff": best_no,
-        "full_transfer": delivered >= N,
-        "bound_grid": vals[s, ri],
-    }
+        # expected_block_time under stop-and-wait ARQ, batched
+        p3 = p[:, :, None]
+        dur = (g / rate + union_no[:, None, None]) / (1.0 - p3)    # (S, R, G)
+        n_o_eff = dur - g
+
+        vals = corollary1_bound_jax(
+            g, N=N[:, None, None].astype(T.dtype), T=T[:, None, None],
+            n_o=n_o_eff, tau_p=tau_p[:, None, None],
+            sigma=sigma, e0=e0, contraction=contraction)           # (S, R, G)
+
+        # Two-stage argmin == flat rate-major argmin (ties: first grid point
+        # within a rate, then first rate), matching _finish_plan exactly.
+        masked = jnp.where(rate_mask[:, :, None], vals, jnp.inf)
+        gi_per_rate = jnp.argmin(masked, axis=2)                   # (S, R)
+        ri = jnp.argmin(jnp.min(masked, axis=2), axis=1)           # (S,)
+        s = jnp.arange(S)
+        gi = gi_per_rate[s, ri]
+
+        n_c = grid[s, gi]
+        best_no = n_o_eff[s, ri, gi]
+        best_dur = n_c.astype(T.dtype) + best_no
+        delivered = jnp.minimum(jnp.floor(T / best_dur) * n_c, N)
+        return {
+            "n_c": n_c,
+            "rate": rates[s, ri],
+            "bound_value": vals[s, ri, gi],
+            "p_err": p[s, ri],
+            "n_o_eff": best_no,
+            "full_transfer": delivered >= N,
+            "bound_grid": vals[s, ri],
+        }
+
+    return _solve_kernel
+
+
+@lru_cache(maxsize=4)
+def _solve_kernel_for(version: int):
+    """Jitted solve for the CURRENT link-kernel table; keyed on the
+    registry version so later plugin registrations get their own trace.
+    Bounded: stale versions' compiled programs are evicted rather than
+    retained for the life of a long-running server."""
+    del version  # cache key only
+    return _build_solve_kernel(kernel_table())
 
 
 def _maybe_shard(arrays: dict, S: int) -> dict:
@@ -217,13 +246,14 @@ class FleetPlanner:
             "rates": np.asarray(batch.rates, np.float64),
             "rate_mask": batch.rate_mask,
             "grid": np.ascontiguousarray(grid),
-            "beta": np.asarray(batch.beta, np.float64),
-            "p_base": np.asarray(batch.p_base, np.float64),
+            "link_model_id": np.asarray(batch.link_model_id, np.int32),
+            "link_params": np.asarray(batch.link_params, np.float64),
         }
+        solve = _solve_kernel_for(kernel_table_version())
         with enable_x64():
             if self.shard:
                 arrays = _maybe_shard(arrays, S)
-            out = _solve_kernel(
+            out = solve(
                 sigma=consts.variance_floor, e0=consts.init_gap,
                 contraction=consts.contraction, **arrays)
             out = {k: np.asarray(v) for k, v in out.items()}

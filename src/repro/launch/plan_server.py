@@ -6,10 +6,14 @@ rate should I use?" — are collected into fixed-size micro-batches, deduped
 through the quantised-key :class:`~repro.fleet.cache.PlanCache`, and the
 residual misses solved in one jitted ``FleetPlanner.plan_batch`` call per
 batch (padded to powers of two so only O(log batch) kernel shapes ever
-compile).
+compile).  The stream may mix every registered link model — cache keys
+carry ``(model_id, params)`` and the kernel dispatches per scenario via
+``jax.lax.switch``, so a mixed-model stream solves in the same single
+compilation as a homogeneous one.
 
   PYTHONPATH=src python -m repro.launch.plan_server \
-      --requests 4096 --batch 256 --grid 64 --dup 0.5
+      --requests 4096 --batch 256 --grid 64 --dup 0.5 \
+      --models erasure,fading,gilbert_elliott
 
 The synthetic stream mimics a production mix: device classes are drawn
 from a finite catalogue with per-request jitter, so a fraction of requests
@@ -19,14 +23,16 @@ from __future__ import annotations
 
 import argparse
 import time
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
 from repro.core.bounds import BoundConstants
-from repro.core.scenario import (ErasureLink, MultiDevice, Scenario,
+from repro.core.links import link_spec, link_spec_for
+from repro.core.scenario import (ErasureLink, FadingLink, GilbertElliottLink,
+                                 IdealLink, MultiDevice, Scenario,
                                  SingleDevice)
 from repro.fleet import FleetPlanner, PlanCache, PlanRecord
 
@@ -39,14 +45,58 @@ def default_consts() -> BoundConstants:
                           alpha=EP.alpha)
 
 
+def _draw_ideal(rng) -> IdealLink:
+    return IdealLink(rates=RATE_SET)
+
+
+def _draw_erasure(rng) -> ErasureLink:
+    return ErasureLink(beta=float(rng.uniform(0.05, 1.5)),
+                       p_base=float(rng.uniform(0.0, 0.5)), rates=RATE_SET)
+
+
+def _draw_fading(rng) -> FadingLink:
+    return FadingLink(snr=float(rng.uniform(2.0, 50.0)), rates=RATE_SET)
+
+
+def _draw_gilbert_elliott(rng) -> GilbertElliottLink:
+    p_good = float(rng.uniform(0.0, 0.2))
+    return GilbertElliottLink(
+        p_gb=float(rng.uniform(0.01, 0.3)),
+        p_bg=float(rng.uniform(0.2, 0.9)),
+        p_good=p_good,
+        p_bad=float(rng.uniform(p_good, 0.9)),
+        beta=float(rng.uniform(0.05, 1.0)), rates=RATE_SET)
+
+
+#: Synthetic device-class link factories, by model name (--models values).
+LINK_FACTORIES = {
+    "ideal": _draw_ideal,
+    "erasure": _draw_erasure,
+    "fading": _draw_fading,
+    "gilbert_elliott": _draw_gilbert_elliott,
+}
+
+#: The full mixed-model catalogue (every built-in channel family).
+ALL_MODELS = tuple(LINK_FACTORIES)
+
+
 def synth_requests(n: int, *, seed: int = 0, dup_frac: float = 0.5,
-                   n_classes: int = 64) -> List[Scenario]:
+                   n_classes: int = 64,
+                   models: Sequence[str] = ("erasure",)) -> List[Scenario]:
     """Heterogeneous request stream over a catalogue of device classes.
 
     ``dup_frac`` of the requests resample a previously seen class with
     tiny parameter jitter (below the cache's quantisation step), the rest
     draw a fresh class — so the achievable cache hit-rate is ~``dup_frac``.
+    Each fresh class draws its link from one of ``models`` (keys of
+    :data:`LINK_FACTORIES`) uniformly, so ``models=ALL_MODELS`` yields a
+    stream mixing every channel family.
     """
+    unknown = [m for m in models if m not in LINK_FACTORIES]
+    if unknown:
+        raise ValueError(
+            f"unknown link model name(s) {unknown}; "
+            f"available: {sorted(LINK_FACTORIES)}")
     rng = np.random.default_rng(seed)
     classes: List[dict] = []
 
@@ -56,8 +106,7 @@ def synth_requests(n: int, *, seed: int = 0, dup_frac: float = 0.5,
             N=N, T=float(rng.uniform(1.1, 3.0)) * N,
             n_o=float(rng.uniform(1.0, 1000.0)),
             tau_p=float(rng.choice([0.5, 1.0, 2.0])),
-            beta=float(rng.uniform(0.05, 1.5)),
-            p_base=float(rng.uniform(0.0, 0.5)),
+            link=LINK_FACTORIES[models[int(rng.integers(len(models)))]](rng),
             D=int(rng.choice([1, 1, 2, 4, 8])))
 
     out: List[Scenario] = []
@@ -71,8 +120,7 @@ def synth_requests(n: int, *, seed: int = 0, dup_frac: float = 0.5,
         jitter = 1.0 + rng.uniform(-1e-5, 1e-5)   # below quantisation step
         out.append(Scenario(
             N=c["N"], T=c["T"] * jitter, n_o=c["n_o"], tau_p=c["tau_p"],
-            link=ErasureLink(beta=c["beta"], p_base=c["p_base"],
-                             rates=RATE_SET),
+            link=c["link"],
             topology=MultiDevice(c["D"]) if c["D"] > 1 else SingleDevice()))
     return out
 
@@ -85,6 +133,8 @@ class ServeStats:
     seconds: float
     plans_per_sec: float
     cache_hit_rate: float
+    #: request counts keyed by link model_id (registry ids)
+    requests_per_model: Dict[int, int] = field(default_factory=dict)
 
 
 def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
@@ -96,13 +146,24 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
     so the whole stream exercises exactly ONE kernel shape, and
     ``warm=True`` pre-plans one batch (uncached, untimed) to compile it —
     reported throughput is steady-state, not jit compilation.
+
+    The reported hit-rate covers THIS stream only (delta of the cache
+    counters, not its lifetime totals) and is 0.0 — never NaN — on an
+    empty stream; ``requests_per_model`` counts requests by link
+    ``model_id`` so mixed-model traffic is visible in the stats.
     """
     requests = list(requests)
     if batch_size < 1:
         raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+    per_model: Dict[int, int] = {}
+    for sc in requests:
+        mid = link_spec_for(sc.link).model_id
+        per_model[mid] = per_model.get(mid, 0) + 1
     if warm and requests:
         planner.plan_many(requests[:batch_size], consts, cache=None,
                           pad_to=batch_size)
+    hits0, misses0 = (cache.hits, cache.misses) if cache is not None \
+        else (0, 0)
     records: List[PlanRecord] = []
     n_batches = 0
     t0 = time.perf_counter()
@@ -112,10 +173,22 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
             pad_to=batch_size))
         n_batches += 1
     dt = time.perf_counter() - t0
+    if cache is not None:
+        d_hits = cache.hits - hits0
+        d_total = d_hits + (cache.misses - misses0)
+        hit_rate = d_hits / d_total if d_total else 0.0
+    else:
+        hit_rate = 0.0
     return ServeStats(
         records=records, n_requests=len(requests), n_batches=n_batches,
         seconds=dt, plans_per_sec=len(requests) / dt if dt > 0 else 0.0,
-        cache_hit_rate=cache.hit_rate if cache is not None else 0.0)
+        cache_hit_rate=hit_rate, requests_per_model=per_model)
+
+
+def _parse_models(spec: str) -> Sequence[str]:
+    if spec == "all":
+        return ALL_MODELS
+    return tuple(m.strip() for m in spec.split(",") if m.strip())
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -127,12 +200,16 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--sig-digits", type=int, default=3)
     ap.add_argument("--dup", type=float, default=0.5,
                     help="fraction of requests hitting a known device class")
+    ap.add_argument("--models", default="erasure",
+                    help="comma-separated link model mix, or 'all' "
+                         f"({', '.join(ALL_MODELS)})")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     requests = synth_requests(args.requests, seed=args.seed,
-                              dup_frac=args.dup)
+                              dup_frac=args.dup,
+                              models=_parse_models(args.models))
     planner = FleetPlanner(grid_size=args.grid)
     cache = None if args.no_cache else PlanCache(
         maxsize=args.cache_size, sig_digits=args.sig_digits)
@@ -142,6 +219,10 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
           f"micro-batches of <= {args.batch}")
     print(f"throughput: {stats.plans_per_sec:,.0f} plans/sec "
           f"({stats.seconds * 1e3:.1f} ms total, grid={args.grid})")
+    by_model = ", ".join(
+        f"{link_spec(mid).name}[{mid}]={n}"
+        for mid, n in sorted(stats.requests_per_model.items()))
+    print(f"request mix: {by_model}")
     if cache is not None:
         print(f"cache: {cache.hits} hits / {cache.misses} misses "
               f"(hit rate {stats.cache_hit_rate:.1%}, {len(cache)} entries)")

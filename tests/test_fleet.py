@@ -10,21 +10,24 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import (BoundConstants, BoundPlanner, ErasureLink, IdealLink,
-                        MultiDevice, Scenario, SingleDevice)
+from repro.core import (BoundConstants, BoundPlanner, ErasureLink, FadingLink,
+                        GilbertElliottLink, IdealLink, MultiDevice, Scenario,
+                        SingleDevice)
 from repro.core.bounds import corollary1_bound
 from repro.core.planner import fleet_grid
 from repro.fleet import (FleetPlanner, PlanCache, ScenarioBatch,
                          corollary1_bound_jax, scenario_key)
-from repro.launch.plan_server import (default_consts, serve, synth_requests)
+from repro.launch.plan_server import (ALL_MODELS, default_consts, serve,
+                                      synth_requests)
 
 CONSTS = BoundConstants(L=1.908, c=0.061, M=1.0, M_G=1.0, D=1.0, alpha=1e-4)
 RATES5 = (1.0, 1.25, 1.5, 2.0, 3.0)
 
 
 def _mixed_scenarios():
-    """A deterministic batch covering every link x topology cross product,
-    ragged rate sets, and both regimes."""
+    """A deterministic batch covering every registered link model (ideal,
+    erasure, fading, Gilbert-Elliott) x topology cross product, ragged rate
+    sets, and both regimes — the ISSUE-3 acceptance population."""
     return [
         Scenario(N=2048, T=1.5 * 2048, n_o=100.0),
         Scenario(N=18576, T=1.2 * 18576, n_o=500.0,
@@ -39,6 +42,19 @@ def _mixed_scenarios():
         Scenario(N=30000, T=1.1 * 30000, n_o=2000.0,
                  link=ErasureLink(beta=1.5, p_base=0.5, rates=RATES5),
                  topology=MultiDevice(2)),
+        Scenario(N=4096, T=1.4 * 4096, n_o=200.0,
+                 link=FadingLink(snr=8.0, rates=RATES5)),
+        Scenario(N=1024, T=0.9 * 1024, n_o=20.0, tau_p=2.0,
+                 link=FadingLink(snr=2.5, rates=(1.0, 1.5)),
+                 topology=MultiDevice(4)),
+        Scenario(N=8192, T=1.3 * 8192, n_o=300.0,
+                 link=GilbertElliottLink(p_gb=0.1, p_bg=0.6, p_good=0.05,
+                                         p_bad=0.6, beta=0.3, rates=RATES5),
+                 topology=MultiDevice(2)),
+        Scenario(N=20000, T=2.0 * 20000, n_o=1000.0,
+                 link=GilbertElliottLink(p_gb=0.4, p_bg=0.1, p_good=0.0,
+                                         p_bad=0.85, beta=0.0,
+                                         rates=(1.0, 2.0, 3.0))),
     ]
 
 
@@ -77,7 +93,18 @@ def test_scenario_batch_round_trip():
     assert batch.rate_mask[0].sum() == 1      # IdealLink default (1.0,)
     assert batch.rate_mask[2].sum() == 2
     np.testing.assert_array_equal(batch.union_overhead,
-                                  [100.0, 500.0, 10.0, 200.0, 8.0, 4000.0])
+                                  [100.0, 500.0, 10.0, 200.0, 8.0, 4000.0,
+                                   200.0, 80.0, 600.0, 1000.0])
+    # the registry flattening: ids follow the class table, params are the
+    # packed vectors right-padded with zeros
+    np.testing.assert_array_equal(batch.link_model_id,
+                                  [0, 1, 1, 1, 0, 1, 2, 2, 3, 3])
+    np.testing.assert_array_equal(batch.link_params[0], 0.0)     # ideal
+    np.testing.assert_array_equal(batch.link_params[1][:2], [0.4, 0.0])
+    np.testing.assert_array_equal(batch.link_params[6][:1], [8.0])
+    np.testing.assert_array_equal(batch.link_params[8][:5],
+                                  [0.3, 0.05, 0.6, 0.1, 0.6])
+    np.testing.assert_array_equal(batch.link_params[8][5:], 0.0)  # padding
 
 
 def test_scenario_batch_multidevice_one_normalises_to_single():
@@ -185,27 +212,42 @@ if HAVE_HYPOTHESIS:
         lambda s: tuple(sorted(s)))
 
     @st.composite
+    def _link(draw):
+        """Draw a link from EVERY registered channel family."""
+        rates = draw(_rate_sets)
+        kind = draw(st.sampled_from(["ideal", "erasure", "fading", "ge"]))
+        if kind == "erasure":
+            return ErasureLink(beta=draw(st.floats(0.0, 2.0)),
+                               p_base=draw(st.floats(0.0, 0.9)),
+                               rates=rates)
+        if kind == "fading":
+            return FadingLink(snr=draw(st.floats(0.5, 100.0)), rates=rates)
+        if kind == "ge":
+            return GilbertElliottLink(
+                p_gb=draw(st.floats(0.01, 1.0)),
+                p_bg=draw(st.floats(0.01, 1.0)),
+                p_good=draw(st.floats(0.0, 0.9)),
+                p_bad=draw(st.floats(0.0, 0.9)),
+                beta=draw(st.floats(0.0, 2.0)), rates=rates)
+        return IdealLink(rates=rates)
+
+    @st.composite
     def _scenario(draw):
         N = draw(st.integers(32, 30000))
         T = draw(st.floats(0.4, 3.0)) * N
         n_o = draw(st.floats(0.0, 2000.0))
         tau_p = draw(st.sampled_from([0.5, 1.0, 2.0]))
         D = draw(st.integers(1, 8))
-        if draw(st.booleans()):
-            link = ErasureLink(beta=draw(st.floats(0.0, 2.0)),
-                               p_base=draw(st.floats(0.0, 0.9)),
-                               rates=draw(_rate_sets))
-        else:
-            link = IdealLink(rates=draw(_rate_sets))
-        return Scenario(N=N, T=T, n_o=n_o, tau_p=tau_p, link=link,
+        return Scenario(N=N, T=T, n_o=n_o, tau_p=tau_p, link=draw(_link()),
                         topology=MultiDevice(D) if D > 1 else SingleDevice())
 
     @settings(max_examples=15, deadline=None)
     @given(scs=st.lists(_scenario(), min_size=1, max_size=6))
     def test_plan_batch_property_matches_scalar_loop(scs):
         """ISSUE acceptance: FleetPlanner.plan_batch agrees with a scalar
-        BoundPlanner loop on randomly drawn heterogeneous scenarios
-        (payload, rate, and bound value within tolerance)."""
+        BoundPlanner loop on randomly drawn heterogeneous scenarios from
+        ALL registered link models (payload, rate, and bound value within
+        tolerance)."""
         G = 24
         planner = FleetPlanner(grid_size=G)
         records = planner.plan_many(scs, CONSTS)   # pads to pow2 internally
@@ -233,6 +275,27 @@ def test_cache_quantised_key_collapses_jitter():
     assert scenario_key(_sc(link=ErasureLink(beta=0.4))) != \
         scenario_key(_sc(link=ErasureLink(beta=0.5)))
     assert scenario_key(_sc()) != scenario_key(_sc(link=ErasureLink()))
+
+
+def test_cache_key_separates_link_model_families():
+    """The (model_id, params) link signature keeps every registered family
+    apart even when the packed parameter values coincide — mixed-model
+    request streams can never alias across channel physics."""
+    keys = [scenario_key(_sc(link=link)) for link in (
+        IdealLink(rates=RATES5),
+        ErasureLink(beta=0.25, p_base=0.0, rates=RATES5),
+        FadingLink(snr=0.25, rates=RATES5),      # param collides with beta
+        GilbertElliottLink(p_gb=0.25, p_bg=0.5, rates=RATES5),
+    )]
+    assert len(set(keys)) == len(keys)
+    # same family, same physics, different quantised params -> distinct
+    assert scenario_key(_sc(link=FadingLink(snr=8.0))) != \
+        scenario_key(_sc(link=FadingLink(snr=12.0)))
+    # unregistered links raise instead of silently aliasing by class name
+    class Unregistered:
+        rates = RATES5
+    with pytest.raises(KeyError):
+        scenario_key(_sc(link=Unregistered()))
 
 
 def test_cache_lru_eviction_and_counters():
@@ -330,12 +393,127 @@ def test_serve_micro_batches_request_stream():
     assert len(stats.records) == 96
     assert stats.plans_per_sec > 0
     assert 0.0 < stats.cache_hit_rate < 1.0
+    assert stats.requests_per_model == {ErasureLink.model_id: 96}
     for rec in stats.records:
         assert rec.n_c >= 1 and np.isfinite(rec.bound_value)
         assert rec.rate in RATES5
     with pytest.raises(ValueError):
         serve(requests, planner=FleetPlanner(), consts=default_consts(),
               batch_size=0)
+
+
+def test_serve_mixed_model_stream_one_kernel():
+    """A stream mixing EVERY registered channel family is served through
+    the same micro-batch loop: each record matches its scalar solve and
+    the per-model counts cover all four families."""
+    requests = synth_requests(48, seed=7, dup_frac=0.3, models=ALL_MODELS)
+    stats = serve(requests, planner=FleetPlanner(grid_size=16),
+                  consts=default_consts(), cache=PlanCache(maxsize=256),
+                  batch_size=16)
+    assert len(stats.records) == 48
+    assert sum(stats.requests_per_model.values()) == 48
+    assert set(stats.requests_per_model) == {
+        IdealLink.model_id, ErasureLink.model_id, FadingLink.model_id,
+        GilbertElliottLink.model_id}
+    for sc, rec in zip(requests, stats.records):
+        _assert_record_matches_scalar(sc, rec.n_c, rec.rate,
+                                      rec.bound_value, default_consts(), 16)
+
+
+def test_serve_empty_and_fully_cached_streams_report_finite_stats():
+    """Regression: hit-rate / throughput reporting must stay finite (no
+    0/0 NaN) on an empty stream, and a fully-cached replay reports a 1.0
+    PER-STREAM hit rate (counter deltas, not cache lifetime totals)."""
+    planner = FleetPlanner(grid_size=16)
+    cache = PlanCache(maxsize=64)
+    empty = serve([], planner=planner, consts=default_consts(), cache=cache,
+                  batch_size=8)
+    assert empty.n_requests == 0 and empty.n_batches == 0
+    assert empty.records == [] and empty.requests_per_model == {}
+    assert empty.cache_hit_rate == 0.0 and np.isfinite(empty.plans_per_sec)
+    # no-cache path is equally well-defined on an empty stream
+    nocache = serve([], planner=planner, consts=default_consts(), cache=None)
+    assert nocache.cache_hit_rate == 0.0
+
+    requests = synth_requests(24, seed=9, dup_frac=0.0, models=ALL_MODELS)
+    first = serve(requests, planner=planner, consts=default_consts(),
+                  cache=cache, batch_size=8)
+    replay = serve(requests, planner=planner, consts=default_consts(),
+                   cache=cache, batch_size=8)
+    assert replay.cache_hit_rate == 1.0      # lifetime rate would be ~0.5
+    assert [r.n_c for r in replay.records] == [r.n_c for r in first.records]
+
+
+# ---------------------------------------------------------------------------
+# registry plugin: a custom channel goes end-to-end in ~30 lines
+# ---------------------------------------------------------------------------
+
+
+def test_custom_link_model_plugs_into_scalar_and_fleet_paths():
+    """ISSUE tentpole: registering (numpy model + jax kernel) is ALL a new
+    channel needs — ScenarioBatch packs it, the jitted kernel dispatches to
+    it via lax.switch next to the built-ins, the cache keys it, and the
+    batched plan matches the scalar BoundPlanner."""
+    import jax.numpy as jnp
+    from dataclasses import dataclass
+    from typing import ClassVar, Tuple
+
+    from repro.core.links import (P_ERR_MAX, register_link_model,
+                                  unregister_link_model, _validate_rates)
+    from repro.fleet import register_link_kernel, unregister_link_kernel
+
+    @dataclass(frozen=True)
+    class LinearLossLink:
+        """Toy channel: p_err grows linearly with rate."""
+
+        model_id: ClassVar[int] = 4
+        N_PARAMS: ClassVar[int] = 1
+
+        slope: float = 0.1
+        rates: Tuple[float, ...] = RATES5
+
+        def __post_init__(self):
+            _validate_rates(self.rates)
+
+        def p_err(self, rate):
+            return np.minimum(self.slope * np.asarray(rate, np.float64),
+                              P_ERR_MAX)
+
+        def expected_block_time(self, n_c, n_o, rate):
+            raw = np.asarray(n_c, np.float64) / rate + n_o
+            return raw / (1.0 - self.p_err(rate))
+
+        def pack_params(self):
+            return np.asarray([self.slope], np.float64)
+
+        @classmethod
+        def from_params(cls, params, rates):
+            return cls(slope=float(params[0]), rates=tuple(rates))
+
+        def make_loss_process(self, rate, rng):
+            p = float(self.p_err(rate))
+            return lambda: bool(rng.random() < p)
+
+    register_link_model(LinearLossLink)
+    register_link_kernel(LinearLossLink.model_id, lambda params, rate:
+                         jnp.minimum(params[..., 0] * rate, P_ERR_MAX))
+    try:
+        scs = _mixed_scenarios() + [
+            Scenario(N=6000, T=1.4 * 6000, n_o=250.0,
+                     link=LinearLossLink(slope=0.12, rates=RATES5))]
+        batch = ScenarioBatch.from_scenarios(scs)
+        assert int(batch.link_model_id[-1]) == 4
+        assert batch[len(scs) - 1] == scs[-1]            # lossless round-trip
+        assert scenario_key(scs[-1]) != scenario_key(scs[0])
+        G = 24
+        fp = FleetPlanner(grid_size=G).plan_batch(batch, CONSTS)
+        for i, sc in enumerate(scs):                     # plugin AND built-ins
+            _assert_record_matches_scalar(
+                sc, int(fp.n_c[i]), float(fp.rate[i]),
+                float(fp.bound_value[i]), CONSTS, G)
+    finally:
+        unregister_link_kernel(LinearLossLink.model_id)
+        unregister_link_model(LinearLossLink.model_id)
 
 
 # ---------------------------------------------------------------------------
@@ -348,8 +526,8 @@ import numpy as np, jax
 assert jax.device_count() == 4, jax.devices()
 from repro.core import BoundConstants
 from repro.fleet import FleetPlanner, ScenarioBatch
-from repro.launch.plan_server import default_consts, synth_requests
-scs = synth_requests(8, seed=3, dup_frac=0.0)
+from repro.launch.plan_server import ALL_MODELS, default_consts, synth_requests
+scs = synth_requests(8, seed=3, dup_frac=0.0, models=ALL_MODELS)
 batch = ScenarioBatch.from_scenarios(scs)
 sharded = FleetPlanner(grid_size=16, shard=True).plan_batch(batch, default_consts())
 local = FleetPlanner(grid_size=16, shard=False).plan_batch(batch, default_consts())

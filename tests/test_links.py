@@ -1,0 +1,232 @@
+"""Pluggable link-model registry: rates validation, the FadingLink /
+GilbertElliottLink channel physics (monotonicity, ErasureLink reduction),
+pack/from_params round-trips, registration error handling, and the
+Simulator's registry-generic ARQ timelines."""
+import numpy as np
+import pytest
+
+from repro.core import (BoundConstants, BoundPlanner, ErasureLink, FadingLink,
+                        GilbertElliottLink, IdealLink, P_ERR_MAX, RidgeTask,
+                        Scenario, Simulator, link_spec, link_spec_for,
+                        register_link_model, registered_link_models,
+                        unregister_link_model)
+from repro.core.links import MAX_LINK_PARAMS
+from repro.data.synthetic import make_regression_dataset
+
+CONSTS = BoundConstants(L=1.908, c=0.061, M=1.0, M_G=1.0, D=1.0, alpha=1e-4)
+RATES5 = (1.0, 1.25, 1.5, 2.0, 3.0)
+ALL_LINK_CLASSES = (IdealLink, ErasureLink, FadingLink, GilbertElliottLink)
+
+
+# ---------------------------------------------------------------------------
+# rates validation (ISSUE satellite: duplicates / non-ascending rejected)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", ALL_LINK_CLASSES)
+def test_rates_reject_duplicates_and_non_ascending(cls):
+    """Silent duplicate rates waste grid columns and can skew the
+    rate-major argmin tie-breaking; out-of-order sets reorder the tie
+    winner — both now raise on construction."""
+    assert cls(rates=(1.0, 1.5, 2.0)).rates == (1.0, 1.5, 2.0)
+    for bad in ((1.0, 1.0), (1.0, 1.5, 1.5), (2.0, 1.0), (1.0, 3.0, 2.0)):
+        with pytest.raises(ValueError, match="ascending"):
+            cls(rates=bad)
+    # the pre-existing checks still fire
+    with pytest.raises(ValueError):
+        cls(rates=())
+    with pytest.raises(ValueError):
+        cls(rates=(0.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# registry bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_registry_table():
+    specs = registered_link_models()
+    assert [(s.model_id, s.cls, s.n_params) for s in specs] == [
+        (0, IdealLink, 0), (1, ErasureLink, 2), (2, FadingLink, 1),
+        (3, GilbertElliottLink, 5)]
+    assert link_spec(2).name == "FadingLink"
+    assert link_spec_for(ErasureLink(beta=0.4)).model_id == 1
+    with pytest.raises(KeyError, match="no link model registered"):
+        link_spec(99)
+    with pytest.raises(KeyError, match="not a registered link model"):
+        link_spec_for(object())
+
+
+def test_register_link_model_rejects_bad_declarations():
+    with pytest.raises(ValueError, match="model_id"):
+        register_link_model(type("NoId", (), {}))
+    with pytest.raises(ValueError, match="N_PARAMS"):
+        register_link_model(type("NoWidth", (), {"model_id": 50}))
+    with pytest.raises(ValueError, match="MAX_LINK_PARAMS"):
+        register_link_model(type("TooWide", (), {
+            "model_id": 50, "N_PARAMS": MAX_LINK_PARAMS + 1}))
+    with pytest.raises(TypeError, match="missing LinkModel methods"):
+        register_link_model(type("NoMethods", (), {
+            "model_id": 50, "N_PARAMS": 1}))
+    # a stable id can never be taken over by a different class
+    with pytest.raises(ValueError, match="already registered"):
+        register_link_model(type("Imposter", (), {
+            "model_id": IdealLink.model_id, "N_PARAMS": 0,
+            **{m: (lambda self: None) for m in (
+                "p_err", "expected_block_time", "pack_params",
+                "from_params", "make_loss_process")}}))
+    unregister_link_model(12345)  # unknown id: silent no-op
+
+
+@pytest.mark.parametrize("link", [
+    IdealLink(rates=(1.0, 2.0)),
+    ErasureLink(beta=0.7, p_base=0.12, rates=RATES5),
+    FadingLink(snr=17.5, rates=(0.5, 1.0, 4.0)),
+    GilbertElliottLink(p_gb=0.07, p_bg=0.31, p_good=0.02, p_bad=0.55,
+                       beta=0.9, rates=(1.0, 1.5)),
+])
+def test_pack_from_params_round_trip(link):
+    spec = link_spec_for(link)
+    params = link.pack_params()
+    assert params.shape == (spec.n_params,)
+    assert spec.cls.from_params(params, rates=link.rates) == link
+
+
+# ---------------------------------------------------------------------------
+# channel physics
+# ---------------------------------------------------------------------------
+
+
+def test_fading_link_outage_formula_and_validation():
+    link = FadingLink(snr=10.0, rates=RATES5)
+    r = np.asarray(RATES5)
+    np.testing.assert_allclose(
+        link.p_err(r), np.minimum(1.0 - np.exp(-(2.0 ** r - 1.0) / 10.0),
+                                  P_ERR_MAX), rtol=1e-15)
+    # a stronger link is never less reliable
+    assert float(FadingLink(snr=30.0).p_err(2.0)) < float(link.p_err(2.0))
+    for bad in (0.0, -1.0, float("inf"), float("nan")):
+        with pytest.raises(ValueError):
+            FadingLink(snr=bad)
+
+
+def test_gilbert_elliott_stationary_loss_and_validation():
+    link = GilbertElliottLink(p_gb=0.1, p_bg=0.4, p_good=0.02, p_bad=0.6,
+                              beta=0.0, rates=RATES5)
+    pi_b = 0.1 / 0.5
+    assert link.stationary_bad == pytest.approx(pi_b)
+    # beta = 0: rate-independent, exactly the stationary mixture
+    assert float(link.p_err(2.0)) == pytest.approx(
+        0.02 + pi_b * (0.6 - 0.02))
+    for kw in (dict(p_gb=-0.1), dict(p_bg=1.5), dict(p_gb=0.0, p_bg=0.0),
+               dict(p_good=1.0), dict(p_bad=-0.2), dict(beta=-1.0)):
+        with pytest.raises(ValueError):
+            GilbertElliottLink(**kw)
+
+
+def test_scalar_planner_plans_fading_and_gilbert_elliott():
+    """Both new channels flow through the scalar BoundPlanner with the
+    rate-reliability trade-off intact: the joint search never loses to a
+    forced rate-1 plan, and p_err/n_o_eff reflect the link's formulas."""
+    for link in (FadingLink(snr=6.0, rates=RATES5),
+                 GilbertElliottLink(p_gb=0.2, p_bg=0.5, p_good=0.1,
+                                    p_bad=0.7, beta=0.4, rates=RATES5)):
+        sc = Scenario(N=4096, T=1.4 * 4096, n_o=150.0, link=link)
+        plan = BoundPlanner().plan(sc, CONSTS)
+        assert plan.rate in RATES5
+        assert plan.p_err == pytest.approx(float(link.p_err(plan.rate)))
+        forced = BoundPlanner().plan(
+            Scenario(N=4096, T=1.4 * 4096, n_o=150.0,
+                     link=type(link).from_params(link.pack_params(),
+                                                 rates=(1.0,))), CONSTS)
+        assert plan.bound_value <= forced.bound_value + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _probs = st.floats(0.0, 0.95)
+    _trans = st.floats(0.001, 1.0)
+
+    @settings(max_examples=100, deadline=None)
+    @given(beta=st.floats(0.0, 5.0), p=_probs, p_gb=_trans, p_bg=_trans,
+           rate=st.floats(0.1, 10.0))
+    def test_gilbert_elliott_reduces_to_erasure_exactly(beta, p, p_gb, p_bg,
+                                                        rate):
+        """Degenerate-case contract: equal good/bad loss makes the chain
+        indistinguishable from an i.i.d. erasure channel — BITWISE, for
+        any transition probabilities, so mixed fleets can rely on the
+        reduction at argmin resolution."""
+        ge = GilbertElliottLink(p_gb=p_gb, p_bg=p_bg, p_good=p, p_bad=p,
+                                beta=beta, rates=(1.0,))
+        er = ErasureLink(beta=beta, p_base=p, rates=(1.0,))
+        assert float(ge.p_err(rate)) == float(er.p_err(rate))
+        assert float(ge.expected_block_time(100, 10.0, rate)) == \
+            float(er.expected_block_time(100, 10.0, rate))
+
+    @settings(max_examples=100, deadline=None)
+    @given(snr=st.floats(0.01, 1000.0),
+           r1=st.floats(0.1, 10.0), r2=st.floats(0.1, 10.0))
+    def test_fading_p_err_monotone_in_rate_and_capped(snr, r1, r2):
+        """p_err is non-decreasing in the rate (faster is never more
+        reliable on a fading link) and capped at P_ERR_MAX."""
+        link = FadingLink(snr=snr, rates=(1.0,))
+        lo, hi = sorted((r1, r2))
+        p_lo, p_hi = float(link.p_err(lo)), float(link.p_err(hi))
+        assert 0.0 <= p_lo <= p_hi <= P_ERR_MAX
+
+
+# ---------------------------------------------------------------------------
+# Simulator ARQ timelines through the registry
+# ---------------------------------------------------------------------------
+
+
+def _ridge_task():
+    X, y, _ = make_regression_dataset(n=1024, d=6, seed=4)
+    return RidgeTask(X=X, y=y, alpha=1e-3)
+
+
+@pytest.mark.parametrize("link", [
+    FadingLink(snr=5.0, rates=(1.0, 1.5, 2.0)),
+    GilbertElliottLink(p_gb=0.15, p_bg=0.5, p_good=0.05, p_bad=0.7,
+                       beta=0.2, rates=(1.0, 1.5, 2.0)),
+])
+def test_simulator_attaches_arq_timeline_for_new_links(link):
+    sc = Scenario(N=1024, T=1.6 * 1024, n_o=16.0, link=link)
+    plan = BoundPlanner().plan(sc, CONSTS)
+    report = Simulator().run(sc, plan, _ridge_task())
+    assert report.arq_times is not None and report.arq_counts is not None
+    assert (np.diff(report.arq_times) > 0).all()
+    assert (np.diff(report.arq_counts) >= 0).all()
+    assert report.arq_counts[-1] <= 1024
+
+
+def test_gilbert_elliott_loss_process_is_burstier_than_erasure():
+    """At the same stationary loss probability, a sticky bad state makes
+    consecutive losses much more likely — the burst structure the planner
+    abstracts away but the realised timeline must show."""
+    ge = GilbertElliottLink(p_gb=0.01, p_bg=0.09, p_good=0.0, p_bad=0.8,
+                            beta=0.0, rates=(1.0,))
+    p_stat = float(ge.p_err(1.0))
+    er = ErasureLink(beta=0.0, p_base=p_stat, rates=(1.0,))
+
+    def run_rate(link, seed):
+        rng = np.random.default_rng(seed)
+        step = link.make_loss_process(1.0, rng)
+        draws = np.asarray([step() for _ in range(20000)])
+        pairs = draws[1:] & draws[:-1]
+        return draws.mean(), pairs.mean()
+
+    ge_rate, ge_pairs = run_rate(ge, 0)
+    er_rate, er_pairs = run_rate(er, 0)
+    assert ge_rate == pytest.approx(er_rate, abs=0.05)   # same long-run loss
+    assert ge_pairs > 2.0 * er_pairs                     # but bursty

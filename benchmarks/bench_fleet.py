@@ -23,27 +23,47 @@ within 1e-9 relative of the scalar optimum on argmin ties).
 Also replays a realistic request stream (50% repeated device classes with
 sub-quantisation jitter) through the micro-batching server to measure the
 PlanCache hit-rate and cached serving throughput.
+
+``--objective`` (default: all three registered objectives) additionally
+times the batched ``markov_arq`` (exact burst-aware ARQ) solve on the same
+population and the batched ``montecarlo`` (simulated empirical) solve on a
+scaled-down one, emitting one plans/sec row per objective into the CSV
+artifact; the >= 50x floor applies to the ``corollary1`` bound objective.
+Unknown objective names exit with status 2 (like unknown bench names in
+``benchmarks.run``).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 from benchmarks.common import emit, save_artifact
-from repro.core import BoundPlanner
+from repro.core import BoundPlanner, MarkovARQObjective, ObjectivePlanner
 from repro.core.planner import fleet_grid
 from repro.fleet import FleetPlanner, PlanCache, ScenarioBatch
-from repro.launch.plan_server import (ALL_MODELS, _parse_models,
-                                      default_consts, serve, synth_requests)
+from repro.launch.plan_server import (ALL_MODELS, ALL_OBJECTIVES,
+                                      _parse_models, default_consts,
+                                      resolve_objectives, serve,
+                                      synth_requests)
 
 N_SCENARIOS = 4096
 GRID_SIZE = 32
 SPEEDUP_FLOOR = 50.0
 EQUIV_SAMPLE_STRIDE = 32     # scalar-check every 32nd scenario (128 total)
+MC_SCENARIOS = 128           # the Monte-Carlo objective SIMULATES training
+MC_GRID_SIZE = 8             # per plan, so its population is scaled down
+MC_N_MAX = 2048
 
 
-def run(models=ALL_MODELS):
+def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES):
     consts = default_consts()
+    # accept a pre-resolved {id: instance} catalogue (instances key the
+    # jitted kernel caches, so resolve once) or names/"all"
+    catalogue = (objectives if isinstance(objectives, dict)
+                 else resolve_objectives(objectives))
+    objective_rows = {}
+    speedup = stats = None
     # dup_frac=0 -> every request is a distinct device class (worst case
     # for the cache, the right population for a raw-throughput comparison)
     scenarios = synth_requests(N_SCENARIOS, seed=11, dup_frac=0.0,
@@ -51,9 +71,58 @@ def run(models=ALL_MODELS):
     batch = ScenarioBatch.from_scenarios(scenarios)
     model_mix = sorted({int(m) for m in batch.link_model_id})
     grids = fleet_grid(batch.N, GRID_SIZE)      # shared data prep: (S, G)
+    planner = FleetPlanner(grid_size=GRID_SIZE)
+
+    if "markov_arq" in catalogue:
+        markov = catalogue["markov_arq"]
+        planner.plan_batch(batch, consts, grid=grids, objective=markov)
+        t_markov = min(
+            _timed(lambda: planner.plan_batch(batch, consts, grid=grids,
+                                              objective=markov))
+            for _ in range(7))
+        objective_rows["markov_arq"] = N_SCENARIOS / t_markov
+        # exact burst-aware picks must match the scalar objective planner
+        for i in range(0, N_SCENARIOS, N_SCENARIOS // 8):
+            sp = ObjectivePlanner(objective=MarkovARQObjective(),
+                                  grid=grids[i]).plan(scenarios[i], consts)
+            fm = planner.plan_batch(
+                ScenarioBatch.from_scenarios([scenarios[i]]), consts,
+                grid=grids[i:i + 1], objective=markov)
+            assert (int(fm.n_c[0]), float(fm.rate[0])) == (sp.n_c, sp.rate) \
+                or abs(float(fm.bound_value[0]) - sp.bound_value) \
+                <= 1e-9 * abs(sp.bound_value), (i, sp.n_c, int(fm.n_c[0]))
+        emit("fleet_plan_batch_markov_arq", t_markov * 1e6,
+             f"S={N_SCENARIOS} G={GRID_SIZE} "
+             f"batched={N_SCENARIOS / t_markov:,.0f}plans/s")
+
+    if "montecarlo" in catalogue:
+        mc = catalogue["montecarlo"]
+        mc_scenarios = synth_requests(MC_SCENARIOS, seed=13, dup_frac=0.0,
+                                      n_classes=MC_SCENARIOS, models=models,
+                                      n_max=MC_N_MAX)
+        mc_batch = ScenarioBatch.from_scenarios(mc_scenarios)
+        mc_grids = fleet_grid(mc_batch.N, MC_GRID_SIZE)
+        mc_planner = FleetPlanner(grid_size=MC_GRID_SIZE)
+        mc_planner.plan_batch(mc_batch, consts, grid=mc_grids, objective=mc)
+        t_mc = min(
+            _timed(lambda: mc_planner.plan_batch(mc_batch, consts,
+                                                 grid=mc_grids,
+                                                 objective=mc))
+            for _ in range(3))
+        objective_rows["montecarlo"] = MC_SCENARIOS / t_mc
+        emit("fleet_plan_batch_montecarlo", t_mc * 1e6,
+             f"S={MC_SCENARIOS} G={MC_GRID_SIZE} n_runs={mc.n_runs} "
+             f"batched={MC_SCENARIOS / t_mc:,.0f}plans/s (simulated)")
+
+    if "corollary1" not in catalogue:
+        save_artifact("fleet", {
+            "n_scenarios": N_SCENARIOS, "grid_size": GRID_SIZE,
+            "models": list(models), "model_ids_in_batch": model_mix,
+            "objective_plans_per_sec": objective_rows,
+        })
+        return speedup, stats
 
     # ---- batched: one jitted call, min over repeats ------------------------
-    planner = FleetPlanner(grid_size=GRID_SIZE)
     fleet_plan = planner.plan_batch(batch, consts, grid=grids)  # compile+warm
     # 13 repeats (up from 7): the per-call cost is ~15 ms, and on a noisy
     # shared box the min needs more draws to reliably land near the
@@ -61,6 +130,7 @@ def run(models=ALL_MODELS):
     t_batched = min(
         _timed(lambda: planner.plan_batch(batch, consts, grid=grids))
         for _ in range(13))
+    objective_rows["corollary1"] = N_SCENARIOS / t_batched
 
     # ---- scalar: the PR-1 planner in a Python loop -------------------------
     scalar_plans = []
@@ -96,6 +166,7 @@ def run(models=ALL_MODELS):
     save_artifact("fleet", {
         "n_scenarios": N_SCENARIOS, "grid_size": GRID_SIZE,
         "models": list(models), "model_ids_in_batch": model_mix,
+        "objective_plans_per_sec": objective_rows,
         "batched_s": t_batched, "scalar_loop_s": t_scalar,
         "speedup": speedup,
         "batched_plans_per_sec": N_SCENARIOS / t_batched,
@@ -139,6 +210,14 @@ if __name__ == "__main__":
     ap.add_argument("--models", default="all",
                     help="comma-separated link model mix, or 'all' "
                          f"({', '.join(ALL_MODELS)})")
+    ap.add_argument("--objective", default="all",
+                    help="comma-separated planning-objective mix, or 'all' "
+                         f"({', '.join(ALL_OBJECTIVES)})")
     args = ap.parse_args()
+    try:  # fail fast (exit 2, like an unknown bench name in benchmarks.run)
+        catalogue = resolve_objectives(args.objective)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
-    run(models=_parse_models(args.models))
+    run(models=_parse_models(args.models), objectives=catalogue)

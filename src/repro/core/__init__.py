@@ -14,10 +14,17 @@ from repro.core.links import (MAX_LINK_PARAMS, P_ERR_MAX, LinkModel,
                               LinkModelSpec, link_spec, link_spec_for,
                               register_link_model, registered_link_models,
                               unregister_link_model)
+from repro.core.objectives import (BoundObjective, MarkovARQObjective,
+                                   MonteCarloObjective, Objective,
+                                   ObjectiveSpec, mc_default_grid,
+                                   objective_spec, objective_spec_for,
+                                   register_objective, registered_objectives,
+                                   unregister_objective)
 from repro.core.scenario import (BoundPlanner, ErasureLink, FadingLink,
                                  GilbertElliottLink, IdealLink,
-                                 MonteCarloPlanner, MultiDevice, Planner,
-                                 RidgeTask, Scenario, SimReport, Simulator,
+                                 MonteCarloPlanner, MultiDevice,
+                                 ObjectivePlanner, Planner, RidgeTask,
+                                 Scenario, SimReport, Simulator,
                                  SingleDevice, StreamingTask, Theorem1Planner)
 from repro.core.streaming import StreamBuffer, make_buffer, receive_block, sample
 from repro.core.stream_trainer import StreamingTrainState, run_streaming_training
@@ -32,7 +39,12 @@ __all__ = [
     "LinkModel", "LinkModelSpec", "MAX_LINK_PARAMS", "P_ERR_MAX",
     "register_link_model", "registered_link_models", "unregister_link_model",
     "link_spec", "link_spec_for",
-    "Planner", "BoundPlanner", "MonteCarloPlanner", "Theorem1Planner",
+    "Objective", "ObjectiveSpec", "BoundObjective", "MonteCarloObjective",
+    "MarkovARQObjective", "register_objective", "registered_objectives",
+    "unregister_objective", "objective_spec", "objective_spec_for",
+    "mc_default_grid",
+    "Planner", "ObjectivePlanner", "BoundPlanner", "MonteCarloPlanner",
+    "Theorem1Planner",
     "Simulator", "SimReport", "RidgeTask", "StreamingTask",
     "StreamBuffer", "make_buffer", "receive_block", "sample",
     "StreamingTrainState", "run_streaming_training",

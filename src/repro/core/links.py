@@ -384,6 +384,52 @@ class GilbertElliottLink(_StopAndWaitARQ):
         p = p_g + self.stationary_bad * (p_b - p_g)
         return np.minimum(p, P_ERR_MAX)
 
+    def exact_arq_inflation(self, rate):
+        """EXACT expected transmission attempts per delivered block.
+
+        Markov-reward evaluation of the stop-and-wait ARQ run: every
+        attempt costs one slot, the chain steps once per attempt (the same
+        semantics ``make_loss_process`` samples), and the run starts from
+        the stationary state distribution.  With per-state loss
+        probabilities ``p_g, p_b`` (capped at :data:`P_ERR_MAX`) the
+        expected attempts-to-success from each state solve the 2x2 linear
+        system
+
+            ``T_g = 1 + p_g [(1 - p_gb) T_g + p_gb T_b]``
+            ``T_b = 1 + p_b [p_bg T_g + (1 - p_bg) T_b]``
+
+        and the inflation is ``pi_g T_g + pi_b T_b``.  Unlike the
+        stationary approximation ``1 / (1 - p_bar)`` this sees that a
+        failure is evidence of the bad state — on sticky chains failures
+        cluster and the exact inflation is strictly larger.  The
+        degenerate chain ``p_good == p_bad`` takes the stationary branch
+        explicitly, so the reduction to :class:`ErasureLink` stays
+        BITWISE (immune to solver rounding).  Vectorised over ``rate``.
+        """
+        if self.p_good == self.p_bad:
+            return 1.0 / (1.0 - self.p_err(rate))
+        p_g, p_b = (np.minimum(p, P_ERR_MAX)
+                    for p in self._state_p_err(rate))
+        den_g = 1.0 - p_g * (1.0 - self.p_gb)
+        den_b = 1.0 - p_b * (1.0 - self.p_bg)
+        det = den_g * den_b - p_g * self.p_gb * p_b * self.p_bg
+        t_g = (den_b + p_g * self.p_gb) / det
+        t_b = (den_g + p_b * self.p_bg) / det
+        pi_b = self.stationary_bad
+        return t_g + pi_b * (t_b - t_g)
+
+    def exact_expected_block_time(self, n_c, n_o, rate):
+        """Expected block duration under the EXACT burst-aware inflation
+        (see :meth:`exact_arq_inflation`); what
+        :class:`~repro.core.objectives.MarkovARQObjective` plans with.
+        The ``p_good == p_bad`` branch reuses the stationary division form
+        so it is bitwise-equal to :meth:`expected_block_time`.
+        """
+        raw = np.asarray(n_c, np.float64) / rate + n_o
+        if self.p_good == self.p_bad:
+            return raw / (1.0 - self.p_err(rate))
+        return raw * self.exact_arq_inflation(rate)
+
     def pack_params(self) -> np.ndarray:
         return np.asarray([self.beta, self.p_good, self.p_bad,
                            self.p_gb, self.p_bg], np.float64)

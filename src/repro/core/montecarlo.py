@@ -8,6 +8,12 @@ loose Corollary 1 is: we estimate the per-block quantities
 E_b[L_b(w_b^{n_p}) - L_b(w_b*)] by running the pipelined trainer and
 evaluating the block-local empirical losses at the block boundaries, then
 plug them into Theorem 1.
+
+This module also hosts the scalar REFERENCE evaluation of the Monte-Carlo
+ridge objective (:func:`montecarlo_objective_grid`) — the per-grid-point
+empirical mean final loss that :class:`~repro.core.objectives.MonteCarloObjective`
+declares and the batched fleet kernel in
+:mod:`repro.fleet.objective_kernels` must reproduce seed-for-seed.
 """
 from __future__ import annotations
 
@@ -21,6 +27,33 @@ import numpy as np
 from repro.core.bounds import BoundConstants, theorem1_bound
 from repro.core.pipeline import ridge_loss_full
 from repro.core.protocol import BlockSchedule
+
+
+def montecarlo_objective_grid(X, y, scenario, grid, rates, *,
+                              lam: float = 0.05, alpha: float = 1e-4,
+                              n_runs: int = 3, seed: int = 0) -> np.ndarray:
+    """Scalar reference of the Monte-Carlo ridge objective: the ``(R, G)``
+    empirical mean final loss over the joint ``(rate, n_c)`` grid.
+
+    One :func:`~repro.core.pipeline.average_final_loss` call (a single
+    vmapped seed batch) per grid point, at the scenario's link-induced
+    effective overhead — exactly the loop the pre-registry
+    ``MonteCarloPlanner`` ran, moved here so the scalar planner and the
+    objective registry share one reference implementation.
+    """
+    from repro.core.pipeline import average_final_loss
+
+    grid = np.asarray(grid)
+    rates = np.asarray(rates, np.float64)
+    vals = np.empty((rates.size, grid.size))
+    for ri, rate in enumerate(rates):
+        for gi, n_c in enumerate(grid):
+            n_o_eff = float(scenario.effective_overhead(int(n_c), rate))
+            vals[ri, gi] = average_final_loss(
+                X, y, n_c=int(n_c), n_o=n_o_eff, T=scenario.T,
+                tau_p=scenario.tau_p, n_runs=n_runs, alpha=alpha, lam=lam,
+                seed=seed)
+    return vals
 
 
 def _block_local_loss(w, X_blk, y_blk, lam, n_total):

@@ -1,0 +1,322 @@
+"""Pluggable planner-objective registry: one planning API for every objective.
+
+The paper's planner minimises the closed-form Corollary-1 bound, but the
+paper itself validates that bound against empirical Monte-Carlo SGD runs,
+and burst-loss channels admit an exact Markov-reward evaluation the
+stationary-loss bound cannot see.  Mirroring the link-model registry in
+:mod:`repro.core.links`, this module turns "which scalar does the planner
+minimise over the joint ``(rate, n_c)`` grid" into an extension point.
+
+Every objective is a frozen dataclass registered in an
+:class:`ObjectiveSpec` table under a stable string ``objective_id`` and
+declares
+
+  * a numpy reference evaluation — ``evaluate(scenario, consts, grid,
+    rates) -> (R, G)`` objective values over the joint grid (what the
+    scalar :class:`~repro.core.scenario.ObjectivePlanner` minimises with
+    the canonical rate-major argmin tie-breaking);
+  * an effective-overhead map — ``effective_overhead(scenario, n_c,
+    rate)``, the link+topology reduction the plan's schedule/boundary are
+    reported under (objectives that re-model the channel, e.g. the exact
+    burst-aware ARQ solve, override it so the reported schedule matches
+    the objective's own physics);
+  * a cache signature — ``cache_token()``, a hashable tuple of the id and
+    every hyperparameter the optimum depends on (Monte-Carlo seed count,
+    data digest, ...); :class:`~repro.fleet.cache.PlanCache` folds it into
+    the quantised key so two objectives can never alias one entry;
+  * optionally a ``default_grid(N)`` — objectives with expensive
+    evaluations (Monte Carlo) declare a coarser default search grid.
+
+The jitted batched counterparts live in
+:mod:`repro.fleet.objective_kernels`: registering a batched kernel under
+the same ``objective_id`` lets ``FleetPlanner.plan_batch`` solve thousands
+of scenarios against the objective in one compiled call (see README
+"Planning objectives" for a worked custom-objective plugin).
+
+Built-in objectives (ids are part of the cache contract — never reuse):
+
+  ============  =========================  ================================
+  id            class                      minimises
+  ============  =========================  ================================
+  corollary1    :class:`BoundObjective`    the paper's Corollary-1 bound
+  montecarlo    :class:`MonteCarloObjective`  empirical mean final ridge loss
+  markov_arq    :class:`MarkovARQObjective`   Corollary 1 under the EXACT
+                                             burst-aware ARQ block time
+  ============  =========================  ================================
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from functools import cached_property
+from typing import (Any, ClassVar, Dict, Protocol, Tuple, Type,
+                    runtime_checkable)
+
+import numpy as np
+
+from repro.core.bounds import BoundConstants, corollary1_bound
+
+
+@runtime_checkable
+class Objective(Protocol):
+    """What the planners minimise over the joint ``(rate, n_c)`` grid.
+
+    ``evaluate`` must be the REFERENCE semantics: the scalar planner
+    minimises exactly this array, and any batched kernel registered in
+    :mod:`repro.fleet.objective_kernels` must reproduce its argmin.
+    """
+
+    objective_id: ClassVar[str]
+
+    def evaluate(self, scenario, consts, grid, rates) -> np.ndarray: ...
+
+    def effective_overhead(self, scenario, n_c, rate): ...
+
+    def cache_token(self) -> Tuple: ...
+
+
+@dataclass(frozen=True)
+class ObjectiveSpec:
+    """Registry entry: the stable id and the objective class."""
+
+    objective_id: str
+    name: str
+    cls: type
+
+
+_SPECS_BY_ID: Dict[str, ObjectiveSpec] = {}
+_SPECS_BY_CLS: Dict[type, ObjectiveSpec] = {}
+
+
+def register_objective(cls: Type) -> Type:
+    """Class decorator: add an objective class to the registry.
+
+    The class must carry a non-empty string class attribute
+    ``objective_id`` (unique) and implement the :class:`Objective` surface
+    (``evaluate``, ``effective_overhead``, ``cache_token``).
+    """
+    objective_id = getattr(cls, "objective_id", None)
+    if not isinstance(objective_id, str) or not objective_id:
+        raise ValueError(
+            f"{cls.__name__}.objective_id must be a non-empty str, got "
+            f"{objective_id!r}")
+    missing = [m for m in ("evaluate", "effective_overhead", "cache_token")
+               if not callable(getattr(cls, m, None))]
+    if missing:
+        raise TypeError(
+            f"{cls.__name__} is missing Objective methods {missing}")
+    prior = _SPECS_BY_ID.get(objective_id)
+    if prior is not None and prior.cls is not cls:
+        raise ValueError(
+            f"objective_id {objective_id!r} already registered by "
+            f"{prior.name}")
+    spec = ObjectiveSpec(objective_id=objective_id, name=cls.__name__,
+                         cls=cls)
+    _SPECS_BY_ID[objective_id] = spec
+    _SPECS_BY_CLS[cls] = spec
+    return cls
+
+
+def unregister_objective(objective_id: str) -> None:
+    """Remove a registry entry (plugin teardown / tests).  No-op if absent."""
+    spec = _SPECS_BY_ID.pop(objective_id, None)
+    if spec is not None:
+        _SPECS_BY_CLS.pop(spec.cls, None)
+
+
+def objective_spec(objective_id: str) -> ObjectiveSpec:
+    """Spec for a registered id (KeyError with guidance if not)."""
+    try:
+        return _SPECS_BY_ID[objective_id]
+    except KeyError:
+        raise KeyError(
+            f"no objective registered under objective_id {objective_id!r}; "
+            f"known ids: {sorted(_SPECS_BY_ID)}") from None
+
+
+def objective_spec_for(objective_or_cls) -> ObjectiveSpec:
+    """Spec for an objective instance or class (KeyError if unregistered)."""
+    cls = (objective_or_cls if isinstance(objective_or_cls, type)
+           else type(objective_or_cls))
+    try:
+        return _SPECS_BY_CLS[cls]
+    except KeyError:
+        raise KeyError(
+            f"{cls.__name__} is not a registered objective; decorate it "
+            "with repro.core.objectives.register_objective") from None
+
+
+def registered_objectives() -> Tuple[ObjectiveSpec, ...]:
+    """All registered specs, sorted by ``objective_id``."""
+    return tuple(_SPECS_BY_ID[k] for k in sorted(_SPECS_BY_ID))
+
+
+def mc_default_grid(N: int, n_points: int = 12) -> np.ndarray:
+    """Coarse log grid for Monte-Carlo objectives (MC is expensive)."""
+    g = np.unique(np.round(
+        np.logspace(0, np.log10(N), n_points)).astype(np.int64))
+    return g[g >= 1]
+
+
+def _corollary1_grid(objective, scenario, consts: BoundConstants, grid,
+                     rates) -> np.ndarray:
+    """Corollary 1 over the joint grid at the OBJECTIVE's effective
+    overhead — one broadcast call, shared by every bound-shaped objective
+    so the ``p_good == p_bad`` bitwise-reduction contract between
+    :class:`BoundObjective` and :class:`MarkovARQObjective` can never
+    drift (they differ ONLY through ``effective_overhead``)."""
+    consts.validate()
+    grid = np.asarray(grid)
+    rates = np.asarray(rates, np.float64)
+    n_o_eff = objective.effective_overhead(scenario, grid[None, :],
+                                           rates[:, None])
+    return corollary1_bound(
+        np.broadcast_to(grid[None, :].astype(np.float64), n_o_eff.shape),
+        N=scenario.N, T=scenario.T, n_o=n_o_eff, tau_p=scenario.tau_p,
+        consts=consts)
+
+
+# ---------------------------------------------------------------------------
+# built-in objectives
+# ---------------------------------------------------------------------------
+
+
+@register_objective
+@dataclass(frozen=True)
+class BoundObjective:
+    """The paper's recipe: Corollary 1 on the joint ``(rate, n_c)`` grid.
+
+    This is the objective extracted verbatim from the pre-registry
+    ``BoundPlanner.plan`` — one broadcast :func:`corollary1_bound` call,
+    no Python loop — so plans are bitwise-identical to the old path.
+    """
+
+    objective_id: ClassVar[str] = "corollary1"
+
+    def evaluate(self, scenario, consts: BoundConstants, grid, rates):
+        return _corollary1_grid(self, scenario, consts, grid, rates)
+
+    def effective_overhead(self, scenario, n_c, rate):
+        return scenario.effective_overhead(n_c, rate)
+
+    def cache_token(self) -> Tuple:
+        return (self.objective_id,)
+
+
+@register_objective
+@dataclass(frozen=True)
+class MarkovARQObjective:
+    """Corollary 1 under the EXACT burst-aware expected per-block ARQ time.
+
+    A Gilbert-Elliott link plans, by default, through its stationary loss
+    probability — inflation ``1 / (1 - p_bar)`` — which ignores that a
+    failed attempt is evidence of the bad state, so failures cluster and
+    retransmission runs on sticky chains last longer than the memoryless
+    model predicts.  This objective evaluates the same Corollary-1 bound
+    but with the expected block duration taken from the link's
+    ``exact_expected_block_time`` — the per-(rate, state) Markov-reward
+    linear solve in
+    :meth:`~repro.core.links.GilbertElliottLink.exact_arq_inflation` —
+    whenever the link exposes one, falling back to the stationary
+    ``expected_block_time`` otherwise.
+
+    Contracts (tested): for memoryless links, and for a Gilbert-Elliott
+    chain with ``p_good == p_bad``, the objective array is bitwise equal to
+    :class:`BoundObjective`'s, so the plans coincide exactly; on sticky
+    chains the burst-aware plan achieves a strictly lower exact expected
+    block time than the stationary-approximation plan.
+    """
+
+    objective_id: ClassVar[str] = "markov_arq"
+
+    def evaluate(self, scenario, consts: BoundConstants, grid, rates):
+        return _corollary1_grid(self, scenario, consts, grid, rates)
+
+    def effective_overhead(self, scenario, n_c, rate):
+        if np.any(np.asarray(rate, np.float64) <= 0.0):
+            raise ValueError(f"rate must be > 0, got {rate}")
+        link = scenario.link
+        block_time = getattr(link, "exact_expected_block_time", None)
+        if not callable(block_time):
+            block_time = link.expected_block_time
+        n_c = np.asarray(n_c, np.float64)
+        dur = block_time(n_c, scenario.union_overhead, rate)
+        return dur - n_c
+
+    def cache_token(self) -> Tuple:
+        return (self.objective_id,)
+
+
+@register_objective
+@dataclass(frozen=True, eq=False)
+class MonteCarloObjective:
+    """Empirical objective: Monte-Carlo mean of the realised final ridge
+    loss (the paper's experimental ``n_c*`` search, Sec. 5).
+
+    The reference evaluation is the existing scalar Monte-Carlo path
+    (:func:`repro.core.montecarlo.montecarlo_objective_grid`, one vmapped
+    seed batch per grid point); the batched fleet kernel vmaps the SAME
+    seed streams over scenarios x rates x grid points so fleet plans match
+    the scalar planner seed-for-seed.
+
+    ``eq=False``: instances hold the training arrays, so identity (not
+    array comparison) is the right equality — the fleet kernel cache keys
+    on the instance, reuse one instance per request stream.
+    """
+
+    objective_id: ClassVar[str] = "montecarlo"
+
+    X: Any = None
+    y: Any = None
+    lam: float = 0.05
+    alpha: float = 1e-4
+    n_runs: int = 3
+    seed: int = 0
+    grid_points: int = 12  # MC is expensive: default to a coarse grid
+
+    def __post_init__(self):
+        if self.X is None or self.y is None:
+            raise ValueError("MonteCarloObjective needs the ridge task "
+                             "data: MonteCarloObjective(X=..., y=...)")
+        if self.n_runs < 1:
+            raise ValueError(f"n_runs must be >= 1, got {self.n_runs}")
+
+    def evaluate(self, scenario, consts, grid, rates):
+        from repro.core.montecarlo import montecarlo_objective_grid
+
+        return montecarlo_objective_grid(
+            self.X, self.y, scenario, grid, rates, lam=self.lam,
+            alpha=self.alpha, n_runs=self.n_runs, seed=self.seed)
+
+    def effective_overhead(self, scenario, n_c, rate):
+        return scenario.effective_overhead(n_c, rate)
+
+    def default_grid(self, N: int) -> np.ndarray:
+        return mc_default_grid(N, self.grid_points)
+
+    @property
+    def default_grid_size(self) -> int:
+        """Cap on the DEFAULT fleet grid width: every grid point is a
+        simulated training run, so a bound-sized grid would multiply the
+        batched solve cost ~10x (explicit ``grid=`` overrides)."""
+        return self.grid_points
+
+    @cached_property
+    def data_digest(self) -> str:
+        """Content hash of (X, y): two objectives over different data must
+        never share a cache entry even if every hyperparameter matches."""
+        h = hashlib.sha1()
+        for a in (self.X, self.y):
+            a = np.ascontiguousarray(np.asarray(a))
+            h.update(str(a.shape).encode())
+            h.update(str(a.dtype).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()[:16]
+
+    def cache_token(self) -> Tuple:
+        # grid_points is part of the token: it sets the DEFAULT search
+        # grid (scalar default_grid and the fleet default_grid_size cap),
+        # so two objectives differing only in it can plan different n_c
+        return (self.objective_id, int(self.n_runs), int(self.seed),
+                float(self.lam), float(self.alpha), int(self.grid_points),
+                self.data_digest)

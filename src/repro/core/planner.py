@@ -8,11 +8,14 @@ step/transfer times of a real mesh.
 
 The unified scenario API lives in :mod:`repro.core.scenario`: a frozen
 ``Scenario`` (dataset/deadline/overhead + ``LinkModel`` + ``Topology``)
-is planned by any ``Planner`` (``BoundPlanner``, ``MonteCarloPlanner``,
-``Theorem1Planner``) — all of which return the enriched :class:`Plan`
-below — and executed by the ``Simulator`` facade.  ``optimize_block_size``
-is kept as a thin compatibility wrapper over ``BoundPlanner`` on the
-ideal-link single-device scenario.
+is planned by any ``Planner`` (``ObjectivePlanner`` over any objective
+from the registry in :mod:`repro.core.objectives`, or the
+``BoundPlanner`` / ``MonteCarloPlanner`` / ``Theorem1Planner`` facades) —
+all of which return the enriched :class:`Plan` below — and executed by
+the ``Simulator`` facade.  ``optimize_block_size`` is kept as a thin
+compatibility wrapper over ``BoundPlanner`` on the ideal-link
+single-device scenario.  ``Plan.objective`` records which registered
+objective the ``bound_value`` minimises.
 """
 from __future__ import annotations
 

@@ -15,12 +15,15 @@ three objects:
     cross products such as a bursty channel feeding a multi-device TDMA
     uplink.
   * :class:`Planner` — the protocol ``plan(scenario, consts) -> Plan``.
-    :class:`BoundPlanner` evaluates Corollary 1 on the full joint
-    ``(rate, n_c)`` grid in ONE broadcast call (no Python loops);
-    :class:`MonteCarloPlanner` minimises the empirical final loss with
-    the seed loop replaced by ``jax.vmap``; :class:`Theorem1Planner`
-    minimises the Monte-Carlo Theorem-1 estimate.  All three return the
-    same enriched :class:`~repro.core.planner.Plan`.
+    :class:`ObjectivePlanner` minimises ANY objective registered in
+    :mod:`repro.core.objectives` (Corollary-1 bound, empirical
+    Monte-Carlo loss, exact burst-aware Markov-ARQ, plugins);
+    :class:`BoundPlanner` (Corollary 1 on the full joint ``(rate, n_c)``
+    grid in ONE broadcast call) and :class:`MonteCarloPlanner` (seed loop
+    replaced by ``jax.vmap``) are facades over it, and
+    :class:`Theorem1Planner` minimises the Monte-Carlo Theorem-1
+    estimate.  All return the same enriched
+    :class:`~repro.core.planner.Plan`.
   * :class:`Simulator` — ``run(scenario, plan, task) -> SimReport``:
     dispatches a :class:`RidgeTask` to the jitted ridge scan and a
     :class:`StreamingTask` to the generic ``run_streaming_training``
@@ -47,18 +50,30 @@ from repro.core.links import (MAX_LINK_PARAMS, P_ERR_MAX, ErasureLink,
                               LinkModel, LinkModelSpec, link_spec,
                               link_spec_for, register_link_model,
                               registered_link_models, unregister_link_model)
+from repro.core.objectives import (BoundObjective, MarkovARQObjective,
+                                   MonteCarloObjective, Objective,
+                                   ObjectiveSpec, mc_default_grid,
+                                   objective_spec, objective_spec_for,
+                                   register_objective,
+                                   registered_objectives,
+                                   unregister_objective)
 from repro.core.planner import Plan, default_grid
 from repro.core.protocol import BlockSchedule, boundary_n_c
 
-# Link models live in :mod:`repro.core.links` (the pluggable registry);
-# re-exported here because this module is their historical home.
+# Link models live in :mod:`repro.core.links` and planning objectives in
+# :mod:`repro.core.objectives` (the pluggable registries); re-exported here
+# because this module is the planners' home.
 __all__ = [
     "MAX_LINK_PARAMS", "P_ERR_MAX", "LinkModel", "LinkModelSpec",
     "IdealLink", "ErasureLink", "FadingLink", "GilbertElliottLink",
     "register_link_model", "registered_link_models", "unregister_link_model",
     "link_spec", "link_spec_for",
+    "Objective", "ObjectiveSpec", "BoundObjective", "MonteCarloObjective",
+    "MarkovARQObjective", "register_objective", "registered_objectives",
+    "unregister_objective", "objective_spec", "objective_spec_for",
     "Topology", "SingleDevice", "MultiDevice", "Scenario",
-    "Planner", "BoundPlanner", "MonteCarloPlanner", "Theorem1Planner",
+    "Planner", "ObjectivePlanner", "BoundPlanner", "MonteCarloPlanner",
+    "Theorem1Planner",
     "RidgeTask", "StreamingTask", "SimReport", "Simulator",
 ]
 
@@ -170,17 +185,24 @@ class Planner(Protocol):
 
 
 def _finish_plan(scenario: Scenario, grid: np.ndarray, rates: np.ndarray,
-                 vals: np.ndarray, *, objective: str) -> Plan:
+                 vals: np.ndarray, *, objective: str,
+                 n_o_eff_fn=None) -> Plan:
     """Shared argmin + Plan assembly over a (rates, grid) objective array.
 
     ``np.argmin`` over the flattened rate-major array reproduces the
     legacy loop's tie-breaking (first rate, then first grid point).
+    ``n_o_eff_fn(scenario, n_c, rate)`` lets an objective report the
+    schedule/boundary under its OWN effective overhead (e.g. the exact
+    burst-aware ARQ time); default is the scenario's link reduction.
     """
     flat = int(np.argmin(vals))
     ri, gi = divmod(flat, grid.size)
     rate = float(rates[ri])
     n_c = int(grid[gi])
-    n_o_eff = float(scenario.effective_overhead(n_c, rate))
+    if n_o_eff_fn is None:
+        n_o_eff = float(scenario.effective_overhead(n_c, rate))
+    else:
+        n_o_eff = float(n_o_eff_fn(scenario, n_c, rate))
     sched = BlockSchedule(N=scenario.N, n_c=n_c, n_o=n_o_eff,
                           T=scenario.T, tau_p=scenario.tau_p)
     D = scenario.n_devices
@@ -200,33 +222,52 @@ def _finish_plan(scenario: Scenario, grid: np.ndarray, rates: np.ndarray,
 
 
 @dataclass(frozen=True)
+class ObjectivePlanner:
+    """Plan any registered :class:`~repro.core.objectives.Objective`.
+
+    The generic scalar planner behind the objective registry: evaluate the
+    objective's ``(rate, n_c)`` reference array, reduce it with the
+    canonical rate-major argmin tie-breaking, and report the schedule under
+    the objective's own effective overhead.  ``BoundPlanner`` and
+    ``MonteCarloPlanner`` are thin facades over this with their historical
+    constructor surfaces.
+    """
+
+    objective: Any = field(default_factory=BoundObjective)
+    grid: Optional[Sequence[int]] = None
+
+    def plan(self, scenario: Scenario,
+             consts: Optional[BoundConstants] = None) -> Plan:
+        obj = self.objective
+        if self.grid is not None:
+            grid = np.asarray(self.grid)
+        else:
+            own = getattr(obj, "default_grid", None)
+            grid = (np.asarray(own(scenario.N)) if callable(own)
+                    else default_grid(scenario.N))
+        rates = np.asarray(scenario.link.rates, np.float64)
+        vals = np.asarray(obj.evaluate(scenario, consts, grid, rates))
+        return _finish_plan(scenario, grid, rates, vals,
+                            objective=obj.objective_id,
+                            n_o_eff_fn=obj.effective_overhead)
+
+
+@dataclass(frozen=True)
 class BoundPlanner:
     """Corollary-1 planner (the paper's recipe), joint over (n_c, rate).
 
     The whole ``(rate, n_c)`` grid is evaluated in ONE broadcast call to
-    :func:`corollary1_bound` — no Python loop over grid points.
+    :func:`corollary1_bound` — no Python loop over grid points.  The
+    evaluation itself lives in
+    :class:`~repro.core.objectives.BoundObjective` (extracted verbatim, so
+    plans are bitwise-identical to the pre-registry planner).
     """
 
     grid: Optional[Sequence[int]] = None
 
     def plan(self, scenario: Scenario, consts: BoundConstants) -> Plan:
-        consts.validate()
-        grid = np.asarray(self.grid if self.grid is not None
-                          else default_grid(scenario.N))
-        rates = np.asarray(scenario.link.rates, np.float64)
-        n_o_eff = scenario.effective_overhead(grid[None, :], rates[:, None])
-        vals = corollary1_bound(
-            np.broadcast_to(grid[None, :].astype(np.float64), n_o_eff.shape),
-            N=scenario.N, T=scenario.T, n_o=n_o_eff, tau_p=scenario.tau_p,
-            consts=consts)
-        return _finish_plan(scenario, grid, rates, vals,
-                            objective="corollary1")
-
-
-def _mc_default_grid(N: int, n_points: int) -> np.ndarray:
-    g = np.unique(np.round(
-        np.logspace(0, np.log10(N), n_points)).astype(np.int64))
-    return g[g >= 1]
+        return ObjectivePlanner(objective=BoundObjective(),
+                                grid=self.grid).plan(scenario, consts)
 
 
 @dataclass(frozen=True)
@@ -234,7 +275,9 @@ class MonteCarloPlanner:
     """Experimental-optimum planner: minimise the Monte-Carlo average of
     the realised final training loss on the ridge task (the paper's
     ``n_c*`` search, Sec. 5).  The per-seed loop is a single ``jax.vmap``
-    over seeds inside :func:`repro.core.pipeline.average_final_loss`.
+    over seeds inside :func:`repro.core.pipeline.average_final_loss`; the
+    grid evaluation is the reference semantics of
+    :class:`~repro.core.objectives.MonteCarloObjective`.
     """
 
     X: Any
@@ -248,21 +291,12 @@ class MonteCarloPlanner:
 
     def plan(self, scenario: Scenario,
              consts: Optional[BoundConstants] = None) -> Plan:
-        from repro.core.pipeline import average_final_loss
-
-        grid = np.asarray(self.grid if self.grid is not None
-                          else _mc_default_grid(scenario.N, self.grid_points))
-        rates = np.asarray(scenario.link.rates, np.float64)
-        vals = np.empty((rates.size, grid.size))
-        for ri, rate in enumerate(rates):
-            for gi, n_c in enumerate(grid):
-                n_o_eff = float(scenario.effective_overhead(int(n_c), rate))
-                vals[ri, gi] = average_final_loss(
-                    self.X, self.y, n_c=int(n_c), n_o=n_o_eff, T=scenario.T,
-                    tau_p=scenario.tau_p, n_runs=self.n_runs,
-                    alpha=self.alpha, lam=self.lam, seed=self.seed)
-        return _finish_plan(scenario, grid, rates, vals,
-                            objective="montecarlo")
+        objective = MonteCarloObjective(
+            X=self.X, y=self.y, lam=self.lam, alpha=self.alpha,
+            n_runs=self.n_runs, seed=self.seed,
+            grid_points=self.grid_points)
+        return ObjectivePlanner(objective=objective,
+                                grid=self.grid).plan(scenario, consts)
 
 
 @dataclass(frozen=True)
@@ -284,7 +318,7 @@ class Theorem1Planner:
         from repro.core.montecarlo import estimate_theorem1
 
         grid = np.asarray(self.grid if self.grid is not None
-                          else _mc_default_grid(scenario.N, self.grid_points))
+                          else mc_default_grid(scenario.N, self.grid_points))
         rates = np.asarray(scenario.link.rates, np.float64)
         vals = np.empty((rates.size, grid.size))
         for ri, rate in enumerate(rates):

@@ -7,30 +7,41 @@ device-edge pair plannable; this package makes the FLEET the unit of work:
     of thousands of heterogeneous scenarios (round-trips to ``Scenario``);
   * :class:`~repro.fleet.planner.FleetPlanner` — the joint ``(rate, n_c)``
     grid for every scenario evaluated in one jitted, x64, device-sharded
-    call through the ``jax.numpy`` bound port in
-    :mod:`~repro.fleet.bounds_jax`;
+    call against ANY registered planning objective;
   * :mod:`~repro.fleet.link_kernels` — the jax side of the pluggable link
     registry: one ``p_err(params, rate)`` kernel per registered model,
     dispatched per scenario via ``jax.lax.switch`` so ONE compilation
     plans batches mixing every channel family;
+  * :mod:`~repro.fleet.objective_kernels` — the jax side of the pluggable
+    OBJECTIVE registry (:mod:`repro.core.objectives`): batched kernels
+    for the Corollary-1 bound (``jax.numpy`` port in
+    :mod:`~repro.fleet.bounds_jax`), the exact burst-aware Markov-ARQ
+    bound, and the vmapped empirical Monte-Carlo ridge objective;
   * :class:`~repro.fleet.cache.PlanCache` — quantised-key LRU so repeated
     or near-identical requests skip the solve (keys carry the link's
-    ``(model_id, params)`` signature);
+    ``(model_id, params)`` signature AND the objective's cache token);
   * ``repro.launch.plan_server`` — the micro-batching request-stream
     driver reporting plans/sec (see ``python -m repro.launch.plan_server``).
 """
 from repro.fleet.batch import ScenarioBatch
 from repro.fleet.bounds_jax import corollary1_bound_jax
-from repro.fleet.cache import PlanCache, scenario_key
+from repro.fleet.cache import PlanCache, objective_token, scenario_key
 from repro.fleet.link_kernels import (kernel_table, kernel_table_version,
                                       register_link_kernel,
                                       unregister_link_kernel)
+from repro.fleet.objective_kernels import (fleet_solve,
+                                           grid_objective_builder,
+                                           objective_kernel_version,
+                                           register_objective_kernel,
+                                           unregister_objective_kernel)
 from repro.fleet.planner import FleetPlan, FleetPlanner, PlanRecord
 
 __all__ = [
     "ScenarioBatch", "corollary1_bound_jax",
-    "PlanCache", "scenario_key",
+    "PlanCache", "scenario_key", "objective_token",
     "FleetPlan", "FleetPlanner", "PlanRecord",
     "register_link_kernel", "unregister_link_kernel",
     "kernel_table", "kernel_table_version",
+    "register_objective_kernel", "unregister_objective_kernel",
+    "objective_kernel_version", "grid_objective_builder", "fleet_solve",
 ]

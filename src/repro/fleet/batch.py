@@ -74,6 +74,13 @@ class ScenarioBatch:
         """(S,) per-union-block overhead after the TDMA reduction."""
         return self.n_devices.astype(np.float64) * self.n_o
 
+    @property
+    def max_updates(self) -> int:
+        """Largest per-scenario update-slot count ``floor(T / tau_p)`` in
+        the batch — the static scan length the batched Monte-Carlo
+        objective kernel pads its shared simulation timeline to."""
+        return int(np.max(np.floor(self.T / self.tau_p)))
+
     @classmethod
     def from_scenarios(cls, scenarios: Sequence[Scenario]) -> "ScenarioBatch":
         if len(scenarios) == 0:

@@ -12,8 +12,12 @@ grid resolution of optimal for every scenario in the same bucket.
 
 A plan is only reusable under the SAME planning configuration, so every
 cache operation also takes a hashable ``context`` — the planner passes
-``(consts, grid_size)`` — and entries never leak across bound constants
-or grid resolutions sharing one cache.
+``(consts, grid_size)`` — plus the planning ``objective``, whose
+``cache_token()`` (stable id + every optimum-relevant hyperparameter,
+e.g. the Monte-Carlo seed count and data digest) is folded into the key.
+Entries therefore never leak across bound constants, grid resolutions,
+or OBJECTIVES sharing one cache: a Corollary-1 plan can never answer a
+Monte-Carlo request for the same scenario.
 """
 from __future__ import annotations
 
@@ -23,6 +27,22 @@ from typing import Hashable, Tuple
 
 from repro.core.links import link_spec_for
 from repro.core.scenario import Scenario
+
+
+def objective_token(objective) -> Tuple:
+    """The objective's contribution to the cache key: its declared
+    ``cache_token()``, or ``()`` for ``None`` (objective-agnostic use).
+    Objectives without a ``cache_token`` raise — a silent fallback could
+    alias two objectives' plans onto one entry."""
+    if objective is None:
+        return ()
+    token = getattr(objective, "cache_token", None)
+    if not callable(token):
+        raise TypeError(
+            f"{type(objective).__name__} declares no cache_token(); "
+            "planning objectives must expose their cache signature (see "
+            "repro.core.objectives.Objective)")
+    return tuple(token())
 
 
 def quantise(x: float, sig_digits: int = 3) -> float:
@@ -72,12 +92,15 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
 
-    def key(self, scenario: Scenario, context: Hashable = ()) -> Tuple:
-        return (context, scenario_key(scenario, self.sig_digits))
+    def key(self, scenario: Scenario, context: Hashable = (),
+            objective=None) -> Tuple:
+        return (context, objective_token(objective),
+                scenario_key(scenario, self.sig_digits))
 
-    def get(self, scenario: Scenario, context: Hashable = ()):
+    def get(self, scenario: Scenario, context: Hashable = (),
+            objective=None):
         """Cached record for this (quantised) scenario, or None (counted)."""
-        k = self.key(scenario, context)
+        k = self.key(scenario, context, objective)
         rec = self._store.get(k)
         if rec is None:
             self.misses += 1
@@ -87,8 +110,8 @@ class PlanCache:
         return rec
 
     def put(self, scenario: Scenario, record,
-            context: Hashable = ()) -> None:
-        k = self.key(scenario, context)
+            context: Hashable = (), objective=None) -> None:
+        k = self.key(scenario, context, objective)
         self._store[k] = record
         self._store.move_to_end(k)
         while len(self._store) > self.maxsize:
@@ -98,7 +121,7 @@ class PlanCache:
         return len(self._store)
 
     def __contains__(self, scenario: Scenario) -> bool:
-        return any(k[1] == scenario_key(scenario, self.sig_digits)
+        return any(k[-1] == scenario_key(scenario, self.sig_digits)
                    for k in self._store)
 
     @property

@@ -1,0 +1,388 @@
+"""Jitted batched objective kernels, one per registered planning objective.
+
+The jax side of the pluggable objective registry
+(:mod:`repro.core.objectives`), mirroring how
+:mod:`repro.fleet.link_kernels` is the jax side of the link registry.  A
+kernel BUILDER is registered per ``objective_id``; ``fleet_solve`` turns an
+objective instance into a host-level solver
+
+    ``solve(arrays, consts, shard, batch) -> dict of (S,)-leading arrays``
+
+that evaluates the objective over the joint ``(rate, n_c)`` grid of every
+scenario in one jitted x64 call and reduces it with the canonical
+rate-major argmin tie-breaking — the exact layout the scalar
+``ObjectivePlanner`` uses, so batched and scalar plans coincide.
+
+Built-in kernels:
+
+  * ``corollary1`` — the Corollary-1 bound at the stationary link-induced
+    effective overhead (the pre-registry fleet solve, op-for-op);
+  * ``markov_arq`` — the same bound, but Gilbert-Elliott scenarios get
+    their expected block duration from the EXACT per-(rate, state)
+    Markov-reward linear solve (closed-form 2x2, vectorised over the
+    batch) instead of the stationary-loss approximation; the degenerate
+    ``p_good == p_bad`` rows keep the stationary division form so the
+    reduction to ``corollary1`` stays bitwise;
+  * ``montecarlo`` — the empirical ridge objective: the scalar seed loop
+    of ``average_final_loss`` vmapped over scenarios x rates x grid
+    points x seeds as ONE ``lax.scan`` over a shared padded update
+    timeline.  RNG streams (per-seed keys, per-step splits, per-update
+    sample draws) replicate the scalar path exactly, so fleet plans match
+    the scalar Monte-Carlo planner seed-for-seed; training math runs in
+    float32 (like the scalar path) while the timeline/overhead arithmetic
+    stays float64.
+
+Registering a kernel for a custom grid objective needs only its value
+function (see README "Planning objectives")::
+
+    def _my_values(g, N, T, n_o_eff, tau_p, sigma, e0, contraction):
+        return (g + n_o_eff) / g          # expected time per sample
+
+    register_objective_kernel("throughput",
+                              grid_objective_builder(_my_values))
+
+Registration bumps :func:`objective_kernel_version`; jitted solves are
+additionally keyed on the LINK kernel-table version, so late link plugins
+retrace rather than stale-dispatch.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.links import P_ERR_MAX, GilbertElliottLink
+from repro.core.objectives import objective_spec
+from repro.core.pipeline import ridge_grad_sample, ridge_loss_full
+from repro.fleet.bounds_jax import corollary1_bound_jax
+from repro.fleet.link_kernels import kernel_table, kernel_table_version
+
+_BUILDERS: Dict[str, Callable] = {}
+_VERSION = 0
+
+
+def register_objective_kernel(objective_id: str, builder: Callable) -> None:
+    """Register the batched kernel builder for ``objective_id``.
+
+    ``builder(objective)`` must return a host-level callable
+    ``solve(arrays, consts, shard, batch)``.  The objective must already
+    be registered with :func:`repro.core.objectives.register_objective`.
+    """
+    global _VERSION
+    objective_spec(objective_id)  # KeyError with guidance if no spec
+    prior = _BUILDERS.get(objective_id)
+    if prior is builder:
+        return  # idempotent re-registration: no version bump
+    if prior is not None:
+        raise ValueError(
+            f"objective {objective_id!r} already has a registered kernel")
+    _BUILDERS[objective_id] = builder
+    _VERSION += 1
+
+
+def unregister_objective_kernel(objective_id: str) -> None:
+    """Remove a kernel builder (plugin teardown / tests).  No-op if absent."""
+    global _VERSION
+    if _BUILDERS.pop(objective_id, None) is not None:
+        _VERSION += 1
+
+
+def objective_kernel_version() -> int:
+    """Monotone counter bumped on (un)registration."""
+    return _VERSION
+
+
+def fleet_solve(objective) -> Callable:
+    """The batched solver for an objective instance (KeyError if none)."""
+    objective_id = getattr(objective, "objective_id", None)
+    builder = _BUILDERS.get(objective_id)
+    if builder is None:
+        raise KeyError(
+            f"objective {objective_id!r} has no registered fleet kernel; "
+            "call repro.fleet.objective_kernels.register_objective_kernel "
+            f"(known: {sorted(_BUILDERS)})")
+    return builder(objective)
+
+
+def _maybe_shard(arrays: dict, S: int) -> dict:
+    """Lay the batch out across local devices over the scenario axis."""
+    devices = jax.local_devices()
+    if len(devices) <= 1 or S % len(devices) != 0:
+        return arrays
+    mesh = Mesh(np.asarray(devices), ("fleet",))
+    sharding = NamedSharding(mesh, P("fleet"))
+    return {k: jax.device_put(v, sharding) for k, v in arrays.items()}
+
+
+def _switch_p_err(branches, link_model_id, link_params, rates):
+    """Per-scenario link dispatch: lax.switch over the registered p_err
+    kernels, vmapped over the batch (under vmap every branch runs and the
+    result is selected — fine: p_err is O(R), the objective is O(R G))."""
+
+    def p_err_one(mid, params, rate_row):
+        return jax.lax.switch(mid, branches, params, rate_row)
+
+    return jax.vmap(p_err_one)(link_model_id, link_params, rates)  # (S, R)
+
+
+def _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates, rate_mask, grid):
+    """Two-stage argmin == flat rate-major argmin (ties: first grid point
+    within a rate, then first rate), matching the scalar
+    ``repro.core.scenario._finish_plan`` exactly.  Shared by every
+    objective kernel so tie-breaking can never drift between objectives.
+    """
+    S = rates.shape[0]
+    masked = jnp.where(rate_mask[:, :, None], vals, jnp.inf)
+    gi_per_rate = jnp.argmin(masked, axis=2)                   # (S, R)
+    ri = jnp.argmin(jnp.min(masked, axis=2), axis=1)           # (S,)
+    s = jnp.arange(S)
+    gi = gi_per_rate[s, ri]
+
+    n_c = grid[s, gi]
+    best_no = n_o_eff[s, ri, gi]
+    best_dur = n_c.astype(T.dtype) + best_no
+    delivered = jnp.minimum(jnp.floor(T / best_dur) * n_c, N)
+    return {
+        "n_c": n_c,
+        "rate": rates[s, ri],
+        "bound_value": vals[s, ri, gi],
+        "p_err": p[s, ri],
+        "n_o_eff": best_no,
+        "full_transfer": delivered >= N,
+        "bound_grid": vals[s, ri],
+    }
+
+
+# ---------------------------------------------------------------------------
+# grid objectives: any value function of the (S, R, G) effective overhead
+# ---------------------------------------------------------------------------
+
+
+_GE_MODEL_ID = GilbertElliottLink.model_id
+
+
+def _ge_exact_arq_inflation(link_params, rates):
+    """(S, R) exact burst-aware ARQ inflation from packed GE parameters —
+    the jax mirror of ``GilbertElliottLink.exact_arq_inflation`` (same op
+    order).  Rows of other models produce garbage here; callers mask."""
+    beta, p_good, p_bad, p_gb, p_bg = (
+        link_params[:, k:k + 1] for k in range(5))            # (S, 1)
+    decay = jnp.exp(-beta * jnp.maximum(rates - 1.0, 0.0))
+    p_g = jnp.minimum(1.0 - (1.0 - p_good) * decay, P_ERR_MAX)
+    p_b = jnp.minimum(1.0 - (1.0 - p_bad) * decay, P_ERR_MAX)
+    den_g = 1.0 - p_g * (1.0 - p_gb)
+    den_b = 1.0 - p_b * (1.0 - p_bg)
+    det = den_g * den_b - p_g * p_gb * p_b * p_bg
+    t_g = (den_b + p_g * p_gb) / det
+    t_b = (den_g + p_b * p_bg) / det
+    pi_b = p_gb / (p_gb + p_bg)
+    return t_g + pi_b * (t_b - t_g)
+
+
+def _corollary1_values(g, N, T, n_o_eff, tau_p, sigma, e0, contraction):
+    """The Corollary-1 bound as a grid-objective value function."""
+    return corollary1_bound_jax(g, N=N, T=T, n_o=n_o_eff, tau_p=tau_p,
+                                sigma=sigma, e0=e0, contraction=contraction)
+
+
+def _build_grid_solve(branches, value_fn, exact_arq: bool):
+    """Jit a grid-objective solve closed over a link-kernel branch table.
+
+    Shapes: per-scenario vectors (S,), rate matrix (S, R), grid (S, G);
+    output per-scenario reductions.  ``exact_arq`` swaps the stationary
+    ARQ inflation for the exact Markov-reward block time on
+    non-degenerate Gilbert-Elliott rows.
+    """
+
+    @jax.jit
+    def _solve(N, T, union_no, tau_p, rates, rate_mask, grid,
+               link_model_id, link_params, sigma, e0, contraction):
+        rate = rates[:, :, None]                                   # (S, R, 1)
+        g = grid[:, None, :].astype(T.dtype)                       # (S, 1, G)
+
+        p = _switch_p_err(branches, link_model_id, link_params, rates)
+        p3 = p[:, :, None]
+
+        # expected_block_time under stop-and-wait ARQ, batched
+        raw = g / rate + union_no[:, None, None]                   # (S, R, G)
+        dur = raw / (1.0 - p3)
+        if exact_arq:
+            infl = _ge_exact_arq_inflation(link_params, rates)     # (S, R)
+            exact = ((link_model_id == _GE_MODEL_ID)
+                     & (link_params[:, 1] != link_params[:, 2]))
+            dur = jnp.where(exact[:, None, None],
+                            raw * infl[:, :, None], dur)
+        n_o_eff = dur - g
+
+        vals = value_fn(
+            g, N[:, None, None].astype(T.dtype), T[:, None, None],
+            n_o_eff, tau_p[:, None, None], sigma, e0, contraction)
+
+        return _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates,
+                                    rate_mask, grid)
+
+    return _solve
+
+
+@lru_cache(maxsize=16)
+def _grid_solve_for(link_version: int, value_fn, exact_arq: bool):
+    """Jitted grid solve for the CURRENT link-kernel table; keyed on the
+    registry version so later link plugins get their own trace.  Bounded:
+    stale versions' compiled programs are evicted rather than retained
+    for the life of a long-running server."""
+    del link_version  # cache key only
+    return _build_grid_solve(kernel_table(), value_fn, exact_arq)
+
+
+def grid_objective_builder(value_fn, exact_arq: bool = False) -> Callable:
+    """Kernel builder for any objective of the form ``vals = f(grid,
+    scenario params, effective overhead)`` — enough for most plugins.
+
+    ``value_fn(g, N, T, n_o_eff, tau_p, sigma, e0, contraction)`` receives
+    ``(S, R, G)``-broadcast jnp arrays (plus the three bound-constant
+    scalars) and returns the ``(S, R, G)`` objective values to minimise.
+    """
+
+    def build(objective):
+        def solve(arrays, consts, shard, batch):
+            fn = _grid_solve_for(kernel_table_version(), value_fn,
+                                 exact_arq)
+            S = arrays["N"].shape[0]
+            with enable_x64():
+                if shard:
+                    arrays = _maybe_shard(arrays, S)
+                out = fn(sigma=consts.variance_floor, e0=consts.init_gap,
+                         contraction=consts.contraction, **arrays)
+                return {k: np.asarray(v) for k, v in out.items()}
+        return solve
+
+    return build
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo objective: the empirical ridge loss, simulated in-batch
+# ---------------------------------------------------------------------------
+
+
+def pow2ceil(n: int) -> int:
+    """Smallest power of two >= n — the shared padding rule that bounds
+    how many compiled shapes (batch lengths, scan lengths) can exist."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@lru_cache(maxsize=8)
+def _mc_solve_for(objective, link_version: int):
+    """Jitted Monte-Carlo solve for one objective instance (its data and
+    hyperparameters are compile-time constants) and link-table version."""
+    del link_version  # cache key only
+    branches = kernel_table()
+    # float32 mirrors the scalar path, which runs OUTSIDE enable_x64 and
+    # downcasts the host float64 data on jnp.asarray
+    X = jnp.asarray(np.asarray(objective.X, np.float32))
+    y = jnp.asarray(np.asarray(objective.y, np.float32))
+    n, d = X.shape
+    lam = float(objective.lam)
+    alpha = float(objective.alpha)
+    n_runs = int(objective.n_runs)
+    seed0 = int(objective.seed)
+
+    @partial(jax.jit, static_argnames=("max_updates",))
+    def _solve(N, T, union_no, tau_p, rates, rate_mask, grid,
+               link_model_id, link_params, *, max_updates):
+        S, R = rates.shape
+        G = grid.shape[1]
+        rate = rates[:, :, None]
+        g = grid[:, None, :].astype(T.dtype)
+
+        p = _switch_p_err(branches, link_model_id, link_params, rates)
+        raw = g / rate + union_no[:, None, None]
+        dur = raw / (1.0 - p[:, :, None])                      # (S, R, G) f64
+        n_o_eff = dur - g
+        # the scalar path rebuilds the block duration as n_c + n_o_eff
+        # (NOT the raw dur) — replicate so the f64 timeline is bitwise
+        dur_sched = g + n_o_eff
+
+        # one simulation lane per (scenario, rate, grid point)
+        lane_nc = jnp.broadcast_to(grid[:, None, :], (S, R, G)).reshape(-1)
+        lane_dur = dur_sched.reshape(-1)
+        lane_tau = jnp.broadcast_to(tau_p[:, None, None], (S, R, G)).reshape(-1)
+        lane_total = jnp.broadcast_to(
+            jnp.floor(T / tau_p)[:, None, None], (S, R, G)).reshape(-1)
+        L = lane_nc.shape[0]
+
+        def per_seed(seed):
+            key = jax.random.PRNGKey(seed)
+            kp, kw, ks = jax.random.split(key, 3)
+            perm = jax.random.permutation(kp, n)
+            Xs, ys = X[perm], y[perm]
+            w0 = jax.random.normal(kw, (d,), jnp.float32)
+            W0 = jnp.broadcast_to(w0, (L, d))
+
+            def step(carry, j):
+                W, k = carry
+                k, sub = jax.random.split(k)
+                # samples available at update slot j (f64, mirrors the
+                # host-side BlockSchedule.updates_timeline bit-for-bit)
+                t = j.astype(lane_dur.dtype) * lane_tau
+                blocks = jnp.floor(t / lane_dur).astype(jnp.int64)
+                a = jnp.minimum(blocks * lane_nc, n)
+                a = jnp.where(j.astype(lane_dur.dtype) < lane_total,
+                              a, 0).astype(jnp.int32)
+                # same key for every lane: the scalar path consumes ONE
+                # split per update slot whatever the grid point
+                idx = jax.vmap(
+                    lambda b: jax.random.randint(sub, (), 0, b,
+                                                 dtype=jnp.int32)
+                )(jnp.maximum(a, 1))
+                grads = jax.vmap(ridge_grad_sample,
+                                 (0, 0, 0, None, None))(W, Xs[idx], ys[idx],
+                                                        lam, n)
+                W_new = W - alpha * grads
+                W = jnp.where((a > 0)[:, None], W_new, W)
+                return (W, k), None
+
+            (W_fin, _), _ = jax.lax.scan(step, (W0, ks),
+                                         jnp.arange(max_updates))
+            return jax.vmap(lambda w: ridge_loss_full(w, X, y, lam))(W_fin)
+
+        seeds = seed0 + 97 * jnp.arange(n_runs)
+        losses = jax.vmap(per_seed)(seeds)                     # (runs, L) f32
+        vals = jnp.mean(losses, axis=0).astype(T.dtype).reshape(S, R, G)
+
+        return _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates,
+                                    rate_mask, grid)
+
+    return _solve
+
+
+def montecarlo_builder(objective) -> Callable:
+    """Kernel builder for ``MonteCarloObjective``: pads the shared update
+    timeline to the next power of two over the batch (masked slots no-op,
+    so plans are unaffected) to bound how many scan lengths can compile.
+    Runs unsharded — the lane layout differs from the grid solves."""
+
+    def solve(arrays, consts, shard, batch):
+        del consts, shard  # empirical objective; lanes are not sharded
+        fn = _mc_solve_for(objective, kernel_table_version())
+        max_updates = pow2ceil(max(1, batch.max_updates))
+        with enable_x64():
+            out = fn(max_updates=max_updates, **arrays)
+            return {k: np.asarray(v) for k, v in out.items()}
+
+    return solve
+
+
+register_objective_kernel("corollary1",
+                          grid_objective_builder(_corollary1_values))
+register_objective_kernel("markov_arq",
+                          grid_objective_builder(_corollary1_values,
+                                                 exact_arq=True))
+register_objective_kernel("montecarlo", montecarlo_builder)

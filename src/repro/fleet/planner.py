@@ -1,47 +1,46 @@
-"""Batched Corollary-1 planning over a :class:`ScenarioBatch`.
+"""Batched planning over a :class:`ScenarioBatch`, for any registered objective.
 
 One jitted call evaluates the joint ``(rate, n_c)`` objective for EVERY
 scenario in the batch — shape ``(S, R, G)`` — and reduces it with the same
 rate-major argmin tie-breaking as the scalar
-:class:`~repro.core.scenario.BoundPlanner`, so the batched and scalar paths
-pick identical plans (enforced by the fleet property tests).
+:class:`~repro.core.scenario.ObjectivePlanner`, so the batched and scalar
+paths pick identical plans (enforced by the fleet property tests).
 
-The channel physics comes from the pluggable link registry: a vmapped
-``jax.lax.switch`` over the :mod:`~repro.fleet.link_kernels` branch table
-turns each scenario's ``(link_model_id, link_params)`` row into its loss
-probability, so a single compilation plans a fleet mixing every registered
-channel family (ideal / erasure / fading / Gilbert-Elliott / plugins).
-The jitted solve is cached per kernel-table version — registering a new
-model after import just triggers one retrace.
+Both pluggable registries meet here: the channel physics comes from the
+link registry (a vmapped ``jax.lax.switch`` over the
+:mod:`~repro.fleet.link_kernels` branch table turns each scenario's
+``(link_model_id, link_params)`` row into its loss probability) and the
+quantity being minimised comes from the OBJECTIVE registry
+(:mod:`repro.core.objectives` + :mod:`~repro.fleet.objective_kernels`):
+the closed-form Corollary-1 bound, the exact burst-aware Markov-ARQ
+variant, the empirical Monte-Carlo ridge objective, or any plugin.  A
+single compilation per objective plans a fleet mixing every registered
+channel family; jitted solves are cached per kernel-table version, so
+registering a new model after import just triggers one retrace.
 
 The whole computation runs under ``jax.experimental.enable_x64()`` to match
-the numpy reference bit-for-bit where the backend's libm allows, and is
-sharded across local devices via ``jax.sharding.NamedSharding`` over the
-scenario axis whenever more than one device is visible and ``S`` divides
-evenly.
+the numpy reference bit-for-bit where the backend's libm allows, and the
+grid objectives are sharded across local devices via
+``jax.sharding.NamedSharding`` over the scenario axis whenever more than
+one device is visible and ``S`` divides evenly.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass
-from functools import lru_cache
-from typing import List, Optional, Sequence, Union
+from typing import Any, List, Optional, Sequence, Union
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.experimental import enable_x64
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.bounds import BoundConstants
+from repro.core.objectives import BoundObjective
 from repro.core.planner import Plan, fleet_grid
 from repro.core.protocol import BlockSchedule
 from repro.core.scenario import Scenario
 
 from repro.fleet.batch import ScenarioBatch
-from repro.fleet.bounds_jax import corollary1_bound_jax
 from repro.fleet.cache import PlanCache
-from repro.fleet.link_kernels import kernel_table, kernel_table_version
+from repro.fleet.objective_kernels import fleet_solve, pow2ceil
 
 
 @dataclass(frozen=True)
@@ -107,86 +106,6 @@ class FleetPlan:
             objective=self.objective)
 
 
-def _build_solve_kernel(branches):
-    """Jit the fleet solve closed over a link-kernel branch table.
-
-    Shapes: per-scenario vectors (S,), rate matrix (S, R), grid (S, G);
-    output per-scenario reductions.  Equivalent to vmapping the scalar
-    planner over scenarios with the grid axes broadcast — written directly
-    in batch form so the argmin layout (rate-major, then grid) matches
-    ``repro.core.scenario._finish_plan`` exactly.
-    """
-
-    @jax.jit
-    def _solve_kernel(N, T, union_no, tau_p, rates, rate_mask, grid,
-                      link_model_id, link_params, sigma, e0, contraction):
-        S = rates.shape[0]
-        rate = rates[:, :, None]                                   # (S, R, 1)
-        g = grid[:, None, :].astype(T.dtype)                       # (S, 1, G)
-
-        # per-scenario link dispatch: lax.switch over the registered p_err
-        # kernels, vmapped over the batch (under vmap every branch runs and
-        # the result is selected — fine: p_err is O(R), the bound is O(R G))
-        def p_err_one(mid, params, rate_row):
-            return jax.lax.switch(mid, branches, params, rate_row)
-
-        p = jax.vmap(p_err_one)(link_model_id, link_params, rates)  # (S, R)
-
-        # expected_block_time under stop-and-wait ARQ, batched
-        p3 = p[:, :, None]
-        dur = (g / rate + union_no[:, None, None]) / (1.0 - p3)    # (S, R, G)
-        n_o_eff = dur - g
-
-        vals = corollary1_bound_jax(
-            g, N=N[:, None, None].astype(T.dtype), T=T[:, None, None],
-            n_o=n_o_eff, tau_p=tau_p[:, None, None],
-            sigma=sigma, e0=e0, contraction=contraction)           # (S, R, G)
-
-        # Two-stage argmin == flat rate-major argmin (ties: first grid point
-        # within a rate, then first rate), matching _finish_plan exactly.
-        masked = jnp.where(rate_mask[:, :, None], vals, jnp.inf)
-        gi_per_rate = jnp.argmin(masked, axis=2)                   # (S, R)
-        ri = jnp.argmin(jnp.min(masked, axis=2), axis=1)           # (S,)
-        s = jnp.arange(S)
-        gi = gi_per_rate[s, ri]
-
-        n_c = grid[s, gi]
-        best_no = n_o_eff[s, ri, gi]
-        best_dur = n_c.astype(T.dtype) + best_no
-        delivered = jnp.minimum(jnp.floor(T / best_dur) * n_c, N)
-        return {
-            "n_c": n_c,
-            "rate": rates[s, ri],
-            "bound_value": vals[s, ri, gi],
-            "p_err": p[s, ri],
-            "n_o_eff": best_no,
-            "full_transfer": delivered >= N,
-            "bound_grid": vals[s, ri],
-        }
-
-    return _solve_kernel
-
-
-@lru_cache(maxsize=4)
-def _solve_kernel_for(version: int):
-    """Jitted solve for the CURRENT link-kernel table; keyed on the
-    registry version so later plugin registrations get their own trace.
-    Bounded: stale versions' compiled programs are evicted rather than
-    retained for the life of a long-running server."""
-    del version  # cache key only
-    return _build_solve_kernel(kernel_table())
-
-
-def _maybe_shard(arrays: dict, S: int) -> dict:
-    """Lay the batch out across local devices over the scenario axis."""
-    devices = jax.local_devices()
-    if len(devices) <= 1 or S % len(devices) != 0:
-        return arrays
-    mesh = Mesh(np.asarray(devices), ("fleet",))
-    sharding = NamedSharding(mesh, P("fleet"))
-    return {k: jax.device_put(v, sharding) for k, v in arrays.items()}
-
-
 def _pad_batch(scenarios: List[Scenario],
                pad_to: Optional[int] = None) -> List[Scenario]:
     """Pad (repeating the last scenario) to a fixed length ``pad_to``, or
@@ -194,9 +113,7 @@ def _pad_batch(scenarios: List[Scenario],
     shapes a request stream can ever compile (one per pad length)."""
     n = len(scenarios)
     if pad_to is None:
-        pad_to = 1
-        while pad_to < n:
-            pad_to *= 2
+        pad_to = pow2ceil(n)
     elif pad_to < n:
         raise ValueError(f"pad_to={pad_to} < batch of {n}")
     return scenarios + [scenarios[-1]] * (pad_to - n)
@@ -204,32 +121,50 @@ def _pad_batch(scenarios: List[Scenario],
 
 @dataclass(frozen=True)
 class FleetPlanner:
-    """Batched Corollary-1 planner: thousands of scenarios per call.
+    """Batched planner: thousands of scenarios per call, any objective.
 
     ``grid_size`` is the per-scenario grid width G (every scenario gets its
     own log-spaced 1..N grid of that width via
     :func:`repro.core.planner.fleet_grid`); ``shard`` toggles the
-    NamedSharding layout across local devices.
+    NamedSharding layout across local devices; ``objective`` is the
+    default registered objective instance solved by ``plan_batch`` /
+    ``plan_many`` (``None`` means the Corollary-1
+    :class:`~repro.core.objectives.BoundObjective`), overridable per call.
     """
 
     grid_size: int = 128
     shard: bool = True
+    objective: Any = None
+
+    def _resolve_objective(self, override):
+        obj = override if override is not None else self.objective
+        return obj if obj is not None else BoundObjective()
 
     def plan_batch(self,
                    batch: Union[ScenarioBatch, Sequence[Scenario]],
                    consts: BoundConstants,
-                   grid: Optional[np.ndarray] = None) -> FleetPlan:
+                   grid: Optional[np.ndarray] = None,
+                   objective: Any = None) -> FleetPlan:
         """Solve every scenario in the batch in one jitted call.
 
         ``grid`` may be ``None`` (per-scenario default grids), a shared
-        ``(G,)`` vector, or a per-scenario ``(S, G)`` matrix.
+        ``(G,)`` vector, or a per-scenario ``(S, G)`` matrix;
+        ``objective`` overrides the planner's default objective.  With
+        ``grid=None``, an objective declaring ``default_grid_size`` (the
+        Monte-Carlo objective: simulating training per grid point is
+        expensive) caps the default grid width below ``grid_size``.
         """
         consts.validate()
+        objective = self._resolve_objective(objective)
         if not isinstance(batch, ScenarioBatch):
             batch = ScenarioBatch.from_scenarios(list(batch))
         S = len(batch)
         if grid is None:
-            grid = fleet_grid(batch.N, self.grid_size)
+            size = self.grid_size
+            own = getattr(objective, "default_grid_size", None)
+            if own is not None:
+                size = min(size, int(own))
+            grid = fleet_grid(batch.N, size)
         else:
             grid = np.asarray(grid, np.int64)
             if grid.ndim == 1:
@@ -249,14 +184,8 @@ class FleetPlanner:
             "link_model_id": np.asarray(batch.link_model_id, np.int32),
             "link_params": np.asarray(batch.link_params, np.float64),
         }
-        solve = _solve_kernel_for(kernel_table_version())
-        with enable_x64():
-            if self.shard:
-                arrays = _maybe_shard(arrays, S)
-            out = solve(
-                sigma=consts.variance_floor, e0=consts.init_gap,
-                contraction=consts.contraction, **arrays)
-            out = {k: np.asarray(v) for k, v in out.items()}
+        solve = fleet_solve(objective)
+        out = solve(arrays, consts, self.shard, batch)
 
         D = batch.n_devices
         with np.errstate(divide="ignore"):  # T == N -> inf boundary
@@ -270,12 +199,14 @@ class FleetPlanner:
             n_o_eff=out["n_o_eff"], full_transfer=out["full_transfer"],
             boundary=boundary,
             n_c_per_device=np.maximum(1, out["n_c"] // D),
-            grid=np.asarray(grid), bound_grid=out["bound_grid"])
+            grid=np.asarray(grid), bound_grid=out["bound_grid"],
+            objective=objective.objective_id)
 
     def plan_many(self, scenarios: Sequence[Scenario],
                   consts: BoundConstants,
                   cache: Optional[PlanCache] = None,
-                  pad_to: Optional[int] = None) -> List[PlanRecord]:
+                  pad_to: Optional[int] = None,
+                  objective: Any = None) -> List[PlanRecord]:
         """Plan a request list, deduplicating through the cache.
 
         Cache hits (and in-batch duplicates, up to key quantisation) skip
@@ -284,31 +215,38 @@ class FleetPlanner:
         kernel shape covers every batch), else to the next power of two —
         and solved in ONE ``plan_batch`` call.  Results come back in
         request order.  Cache entries are scoped to ``(consts,
-        grid_size)`` so one cache can serve several configurations
-        without cross-talk.
+        grid_size)`` AND the objective's ``cache_token()`` so one cache
+        can serve several configurations and objectives without
+        cross-talk.
         """
         scenarios = list(scenarios)
         if not scenarios:
             return []
+        objective = self._resolve_objective(objective)
         records: List[Optional[PlanRecord]] = [None] * len(scenarios)
         if cache is None:
-            fp = self.plan_batch(_pad_batch(scenarios, pad_to), consts)
+            fp = self.plan_batch(_pad_batch(scenarios, pad_to), consts,
+                                 objective=objective)
             return [fp.record(i) for i in range(len(scenarios))]
 
         ctx = (consts, self.grid_size)
         miss: "OrderedDict[tuple, List[int]]" = OrderedDict()
         for i, sc in enumerate(scenarios):
-            rec = cache.get(sc, context=ctx)
+            rec = cache.get(sc, context=ctx, objective=objective)
             if rec is not None:
                 records[i] = rec
             else:
-                miss.setdefault(cache.key(sc, context=ctx), []).append(i)
+                miss.setdefault(
+                    cache.key(sc, context=ctx, objective=objective),
+                    []).append(i)
         if miss:
             reps = [scenarios[idxs[0]] for idxs in miss.values()]
-            fp = self.plan_batch(_pad_batch(reps, pad_to), consts)
+            fp = self.plan_batch(_pad_batch(reps, pad_to), consts,
+                                 objective=objective)
             for j, idxs in enumerate(miss.values()):
                 rec = fp.record(j)
-                cache.put(scenarios[idxs[0]], rec, context=ctx)
+                cache.put(scenarios[idxs[0]], rec, context=ctx,
+                          objective=objective)
                 for i in idxs:
                     records[i] = rec
         return records  # type: ignore[return-value]

@@ -8,12 +8,14 @@ residual misses solved in one jitted ``FleetPlanner.plan_batch`` call per
 batch (padded to powers of two so only O(log batch) kernel shapes ever
 compile).  The stream may mix every registered link model — cache keys
 carry ``(model_id, params)`` and the kernel dispatches per scenario via
-``jax.lax.switch``, so a mixed-model stream solves in the same single
-compilation as a homogeneous one.
+``jax.lax.switch`` — AND every registered planning objective: each request
+may name the objective it wants (Corollary-1 bound, exact burst-aware
+Markov-ARQ, empirical Monte-Carlo), micro-batches group by objective, and
+cache keys carry the objective token so answers never cross objectives.
 
   PYTHONPATH=src python -m repro.launch.plan_server \
       --requests 4096 --batch 256 --grid 64 --dup 0.5 \
-      --models erasure,fading,gilbert_elliott
+      --models erasure,fading,gilbert_elliott --objective all
 
 The synthetic stream mimics a production mix: device classes are drawn
 from a finite catalogue with per-request jitter, so a fraction of requests
@@ -22,15 +24,18 @@ from a finite catalogue with per-request jitter, so a fraction of requests
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
 from repro.core.bounds import BoundConstants
 from repro.core.links import link_spec, link_spec_for
+from repro.core.objectives import (BoundObjective, MarkovARQObjective,
+                                   MonteCarloObjective)
 from repro.core.scenario import (ErasureLink, FadingLink, GilbertElliottLink,
                                  IdealLink, MultiDevice, Scenario,
                                  SingleDevice)
@@ -80,9 +85,53 @@ LINK_FACTORIES = {
 ALL_MODELS = tuple(LINK_FACTORIES)
 
 
+def _make_montecarlo_objective() -> MonteCarloObjective:
+    """Small deterministic ridge task (the canonical generator, scaled
+    down) for Monte-Carlo objective serving."""
+    from repro.data.synthetic import make_regression_dataset
+
+    X, y, _ = make_regression_dataset(n=256, d=8, seed=0)
+    return MonteCarloObjective(X=X, y=y, n_runs=2, alpha=1e-3, seed=0)
+
+
+#: Planning-objective factories, by registry id (--objective values).
+OBJECTIVE_FACTORIES = {
+    "corollary1": BoundObjective,
+    "markov_arq": MarkovARQObjective,
+    "montecarlo": _make_montecarlo_objective,
+}
+
+#: The full mixed-objective catalogue (every built-in objective).
+ALL_OBJECTIVES = tuple(OBJECTIVE_FACTORIES)
+
+
+def resolve_objectives(spec) -> Dict[str, Any]:
+    """Instantiate the requested objectives ONCE each (instance identity
+    keys the jitted Monte-Carlo kernel cache).  ``spec`` is "all", a
+    comma-separated string, or a sequence of registry ids; unknown names
+    raise ``ValueError`` with the available ids.
+    """
+    if spec == "all":
+        names: Sequence[str] = ALL_OBJECTIVES
+    elif isinstance(spec, str):
+        names = tuple(s.strip() for s in spec.split(",") if s.strip())
+    else:
+        names = tuple(spec)
+    unknown = [o for o in names if o not in OBJECTIVE_FACTORIES]
+    if unknown:
+        raise ValueError(
+            f"unregistered planning objective(s) {unknown}; "
+            f"available: {sorted(OBJECTIVE_FACTORIES)}")
+    if not names:
+        raise ValueError("no planning objective requested; "
+                         f"available: {sorted(OBJECTIVE_FACTORIES)}")
+    return {name: OBJECTIVE_FACTORIES[name]() for name in names}
+
+
 def synth_requests(n: int, *, seed: int = 0, dup_frac: float = 0.5,
                    n_classes: int = 64,
-                   models: Sequence[str] = ("erasure",)) -> List[Scenario]:
+                   models: Sequence[str] = ("erasure",),
+                   n_max: int = 32768) -> List[Scenario]:
     """Heterogeneous request stream over a catalogue of device classes.
 
     ``dup_frac`` of the requests resample a previously seen class with
@@ -90,18 +139,22 @@ def synth_requests(n: int, *, seed: int = 0, dup_frac: float = 0.5,
     draw a fresh class — so the achievable cache hit-rate is ~``dup_frac``.
     Each fresh class draws its link from one of ``models`` (keys of
     :data:`LINK_FACTORIES`) uniformly, so ``models=ALL_MODELS`` yields a
-    stream mixing every channel family.
+    stream mixing every channel family.  ``n_max`` caps the drawn dataset
+    sizes — Monte-Carlo serving simulates the update timeline, so its
+    streams use a small cap to bound the scan length.
     """
     unknown = [m for m in models if m not in LINK_FACTORIES]
     if unknown:
         raise ValueError(
             f"unknown link model name(s) {unknown}; "
             f"available: {sorted(LINK_FACTORIES)}")
+    if n_max <= 256:
+        raise ValueError(f"n_max must be > 256, got {n_max}")
     rng = np.random.default_rng(seed)
     classes: List[dict] = []
 
     def fresh_class() -> dict:
-        N = int(rng.integers(256, 32768))
+        N = int(rng.integers(256, n_max))
         return dict(
             N=N, T=float(rng.uniform(1.1, 3.0)) * N,
             n_o=float(rng.uniform(1.0, 1000.0)),
@@ -135,43 +188,109 @@ class ServeStats:
     cache_hit_rate: float
     #: request counts keyed by link model_id (registry ids)
     requests_per_model: Dict[int, int] = field(default_factory=dict)
+    #: request counts keyed by planning objective_id (registry ids)
+    requests_per_objective: Dict[str, int] = field(default_factory=dict)
 
 
 def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
           consts: BoundConstants, cache: Optional[PlanCache] = None,
-          batch_size: int = 256, warm: bool = True) -> ServeStats:
+          batch_size: int = 256, warm: bool = True,
+          objectives: Optional[Sequence[Any]] = None) -> ServeStats:
     """Micro-batch the request list and plan it end to end.
 
-    Every miss-batch is padded to ``batch_size`` (``plan_many(pad_to=)``)
-    so the whole stream exercises exactly ONE kernel shape, and
-    ``warm=True`` pre-plans one batch (uncached, untimed) to compile it —
-    reported throughput is steady-state, not jit compilation.
+    Single-objective streams pad every miss-batch to ``batch_size``
+    (``plan_many(pad_to=)``) so the stream exercises exactly ONE kernel
+    shape and ``warm=True`` compiles it up front — reported throughput is
+    steady-state, not jit compilation.  Mixed-objective streams pad each
+    per-objective sub-group to the next power of two instead (O(log
+    batch) shapes per objective, without re-solving ``batch_size``-wide
+    pad filler per group); warm-up replays the FIRST micro-batch window's
+    exact grouping plus one batch per remaining objective, so the common
+    shapes are precompiled but a first-seen pow2 shape later in the
+    stream still compiles inside the timed loop.
+
+    ``objectives`` assigns each request a planning objective: ``None``
+    (the planner's default for every request) or a per-request sequence
+    of objective INSTANCES (reuse one instance per distinct objective —
+    identity keys the jitted Monte-Carlo kernel cache; registry ids
+    resolve through :func:`resolve_objectives`).  Micro-batches group by
+    objective, so a mixed-objective stream dispatches every registered
+    kernel in one pass.
 
     The reported hit-rate covers THIS stream only (delta of the cache
     counters, not its lifetime totals) and is 0.0 — never NaN — on an
-    empty stream; ``requests_per_model`` counts requests by link
-    ``model_id`` so mixed-model traffic is visible in the stats.
+    empty stream; ``requests_per_model`` / ``requests_per_objective``
+    count requests by link ``model_id`` and ``objective_id`` so mixed
+    traffic is visible in the stats.
     """
     requests = list(requests)
     if batch_size < 1:
         raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+    if objectives is None:
+        objs: List[Any] = [None] * len(requests)
+    else:
+        objs = list(objectives)
+        if len(objs) != len(requests):
+            raise ValueError(
+                f"objectives has length {len(objs)}, want one per request "
+                f"({len(requests)})")
     per_model: Dict[int, int] = {}
-    for sc in requests:
+    per_objective: Dict[str, int] = {}
+    default_id = planner._resolve_objective(None).objective_id
+    for sc, obj in zip(requests, objs):
         mid = link_spec_for(sc.link).model_id
         per_model[mid] = per_model.get(mid, 0) + 1
+        oid = default_id if obj is None else obj.objective_id
+        per_objective[oid] = per_objective.get(oid, 0) + 1
+
+    def _grouped(idxs):
+        """Consecutive request indices grouped by objective identity,
+        first-seen order (one plan_many call per group)."""
+        groups: "Dict[int, List[int]]" = {}
+        order: List[int] = []
+        for i in idxs:
+            k = id(objs[i])
+            if k not in groups:
+                groups[k] = []
+                order.append(k)
+            groups[k].append(i)
+        return [groups[k] for k in order]
+
+    # single-objective streams pad every micro-batch to ONE kernel shape;
+    # mixed streams pad each per-objective sub-group to the next power of
+    # two instead (still O(log batch) shapes per objective, but no lanes
+    # wasted re-solving the pad filler batch_size-wide per group)
+    mixed = len({id(o) for o in objs}) > 1
+    pad_to = None if mixed else batch_size
     if warm and requests:
-        planner.plan_many(requests[:batch_size], consts, cache=None,
-                          pad_to=batch_size)
+        warmed = set()
+        # the first window's exact grouping: compiles the shapes the
+        # timed loop starts with
+        for idxs in _grouped(range(min(batch_size, len(requests)))):
+            planner.plan_many([requests[i] for i in idxs], consts,
+                              cache=None, pad_to=pad_to,
+                              objective=objs[idxs[0]])
+            warmed.add(id(objs[idxs[0]]))
+        # objectives absent from the first window still warm once
+        for idxs in _grouped(range(len(requests))):
+            if id(objs[idxs[0]]) not in warmed:
+                planner.plan_many([requests[i] for i in idxs[:batch_size]],
+                                  consts, cache=None, pad_to=pad_to,
+                                  objective=objs[idxs[0]])
     hits0, misses0 = (cache.hits, cache.misses) if cache is not None \
         else (0, 0)
-    records: List[PlanRecord] = []
+    records: List[Optional[PlanRecord]] = [None] * len(requests)
     n_batches = 0
     t0 = time.perf_counter()
     for lo in range(0, len(requests), batch_size):
-        records.extend(planner.plan_many(
-            requests[lo:lo + batch_size], consts, cache=cache,
-            pad_to=batch_size))
-        n_batches += 1
+        for idxs in _grouped(range(lo, min(lo + batch_size,
+                                           len(requests)))):
+            recs = planner.plan_many(
+                [requests[i] for i in idxs], consts, cache=cache,
+                pad_to=pad_to, objective=objs[idxs[0]])
+            for i, rec in zip(idxs, recs):
+                records[i] = rec
+            n_batches += 1
     dt = time.perf_counter() - t0
     if cache is not None:
         d_hits = cache.hits - hits0
@@ -182,7 +301,8 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
     return ServeStats(
         records=records, n_requests=len(requests), n_batches=n_batches,
         seconds=dt, plans_per_sec=len(requests) / dt if dt > 0 else 0.0,
-        cache_hit_rate=hit_rate, requests_per_model=per_model)
+        cache_hit_rate=hit_rate, requests_per_model=per_model,
+        requests_per_objective=per_objective)
 
 
 def _parse_models(spec: str) -> Sequence[str]:
@@ -191,7 +311,7 @@ def _parse_models(spec: str) -> Sequence[str]:
     return tuple(m.strip() for m in spec.split(",") if m.strip())
 
 
-def main(argv: Optional[Sequence[str]] = None) -> None:
+def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--requests", type=int, default=4096)
     ap.add_argument("--batch", type=int, default=256)
@@ -203,18 +323,35 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--models", default="erasure",
                     help="comma-separated link model mix, or 'all' "
                          f"({', '.join(ALL_MODELS)})")
+    ap.add_argument("--objective", default="corollary1",
+                    help="comma-separated planning-objective mix, or 'all' "
+                         f"({', '.join(ALL_OBJECTIVES)})")
+    ap.add_argument("--n-max", type=int, default=32768,
+                    help="cap on drawn dataset sizes (keep small when the "
+                         "mix includes the simulated montecarlo objective)")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    try:
+        catalogue = resolve_objectives(args.objective)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
     requests = synth_requests(args.requests, seed=args.seed,
                               dup_frac=args.dup,
-                              models=_parse_models(args.models))
+                              models=_parse_models(args.models),
+                              n_max=args.n_max)
+    instances = list(catalogue.values())
+    rng = np.random.default_rng(args.seed + 1)
+    objectives = [instances[int(rng.integers(len(instances)))]
+                  for _ in requests]
     planner = FleetPlanner(grid_size=args.grid)
     cache = None if args.no_cache else PlanCache(
         maxsize=args.cache_size, sig_digits=args.sig_digits)
     stats = serve(requests, planner=planner, consts=default_consts(),
-                  cache=cache, batch_size=args.batch)
+                  cache=cache, batch_size=args.batch, objectives=objectives)
     print(f"served {stats.n_requests} plan requests in {stats.n_batches} "
           f"micro-batches of <= {args.batch}")
     print(f"throughput: {stats.plans_per_sec:,.0f} plans/sec "
@@ -223,14 +360,20 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         f"{link_spec(mid).name}[{mid}]={n}"
         for mid, n in sorted(stats.requests_per_model.items()))
     print(f"request mix: {by_model}")
+    by_objective = ", ".join(
+        f"{oid}={n}"
+        for oid, n in sorted(stats.requests_per_objective.items()))
+    print(f"objective mix: {by_objective}")
     if cache is not None:
         print(f"cache: {cache.hits} hits / {cache.misses} misses "
               f"(hit rate {stats.cache_hit_rate:.1%}, {len(cache)} entries)")
     if stats.records:
         sample = stats.records[0]
         print(f"sample plan: n_c={sample.n_c} rate={sample.rate} "
+              f"objective={sample.objective} "
               f"bound={sample.bound_value:.4g}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

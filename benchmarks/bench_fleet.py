@@ -31,19 +31,38 @@ scaled-down one, emitting one plans/sec row per objective into the CSV
 artifact; the >= 50x floor applies to the ``corollary1`` bound objective.
 Unknown objective names exit with status 2 (like unknown bench names in
 ``benchmarks.run``).
+
+``--grid-mode`` (default: both modes) additionally runs the coarse->fine
+REFINEMENT comparison on fleet-scale tight-deadline populations: the
+dense single-pass and the two-pass refined solve of the same grids are
+timed per objective, the plans are asserted argmin-identical (up to the
+documented parity floors — the Monte-Carlo landscape is seed-noise
+ragged, so a small fraction of its refined plans land on a neighbouring
+near-tie within ``MC_REFINE_GAP_CEIL``), and the refined path must beat
+its dense path by >= 2x (``corollary1``) / >= 3x (``montecarlo``).  One
+plans/sec CSV row is emitted per (objective, grid mode) and the whole
+table is written to ``BENCH_fleet.json`` at the repo root (schema:
+objective, grid_mode, S, plans_per_sec, speedup) as the perf-trajectory
+artifact CI uploads.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+import numpy as np
 
 from benchmarks.common import emit, save_artifact
 from repro.core import BoundPlanner, MarkovARQObjective, ObjectivePlanner
 from repro.core.planner import fleet_grid
-from repro.fleet import FleetPlanner, PlanCache, ScenarioBatch
+from repro.core.scenario import MultiDevice, Scenario, SingleDevice
+from repro.fleet import GRID_MODES, FleetPlanner, PlanCache, ScenarioBatch
 from repro.launch.plan_server import (ALL_MODELS, ALL_OBJECTIVES,
-                                      _parse_models, default_consts,
+                                      LINK_FACTORIES, _parse_models,
+                                      default_consts, resolve_grid_modes,
                                       resolve_objectives, serve,
                                       synth_requests)
 
@@ -55,15 +74,165 @@ MC_SCENARIOS = 128           # the Monte-Carlo objective SIMULATES training
 MC_GRID_SIZE = 8             # per plan, so its population is scaled down
 MC_N_MAX = 2048
 
+# ---- coarse->fine refinement comparison ------------------------------------
+# Fleet-scale latency-constrained population (the paper's regime: deadline
+# close to the transfer floor).  The dense reference width matches the
+# density of the scalar planner's ~400-point default_grid; the two-pass
+# solve evaluates ~ G/k + (2k+1) + guarded-tail lanes, cutting per-plan
+# work ~3x for the closed-form bound (whose small-block-count sawtooth
+# tail stays densely evaluated) and ~4x for Monte Carlo (pure bracket —
+# every eliminated grid point is an eliminated training simulation, so
+# its comparison runs at width 128 to bound the dense simulation cost).
+REFINE_GRID_SIZE = 384
+MC_REFINE_GRID_SIZE = 128
+REFINE_SCENARIOS = 1024
+REFINE_SPEEDUP_FLOOR = 2.0       # refined corollary1 vs its dense path
+REFINE_PARITY_FLOOR = 0.99       # exact argmin parity fraction (corollary1)
+REFINE_GAP_CEIL = 0.10           # worst residual objective gap (corollary1)
+MC_REFINE_SCENARIOS = 16
+MC_REFINE_SPEEDUP_FLOOR = 3.0    # refined montecarlo vs its dense path
+MC_REFINE_PARITY_FLOOR = 0.5     # MC's landscape is seed-noise-ragged
+MC_REFINE_GAP_CEIL = 0.05
 
-def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES):
+#: perf-trajectory artifact written at the repo root (schema: one row per
+#: (objective, grid_mode) with plans/sec and refined-vs-dense speedup)
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_fleet.json")
+
+
+def _fleet_population(n: int, seed: int):
+    """Fleet-scale tight-deadline scenarios (N in [2^17, 2^20), T within
+    5-40% of the dataset transfer floor) mixing every channel family."""
+    rng = np.random.default_rng(seed)
+    factories = list(LINK_FACTORIES.values())
+    out = []
+    for _ in range(n):
+        N = int(rng.integers(1 << 17, 1 << 20))
+        D = int(rng.choice([1, 1, 2, 4, 8]))
+        out.append(Scenario(
+            N=N, T=float(rng.uniform(1.05, 1.4)) * N,
+            n_o=float(rng.uniform(10.0, 5000.0)),
+            tau_p=float(rng.choice([0.5, 1.0, 2.0])),
+            link=factories[int(rng.integers(len(factories)))](rng),
+            topology=MultiDevice(D) if D > 1 else SingleDevice()))
+    return out
+
+
+def _mc_refine_population(n: int, seed: int):
+    """Scaled-down tight-deadline population for the SIMULATED objective:
+    tau_p = 2 and N < 11k bound the shared scan at 8192 update slots."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        N = int(rng.integers(4096, 11000))
+        out.append(Scenario(
+            N=N, T=float(rng.uniform(1.05, 1.4)) * N,
+            n_o=float(rng.uniform(10.0, 2000.0)), tau_p=2.0,
+            link=LINK_FACTORIES["erasure"](rng)))
+    return out
+
+
+def _bench_refine(objective_id, objective, scenarios, grid_size, consts,
+                  repeats, *, speedup_floor, parity_floor, gap_ceil, rows):
+    """Time one objective's dense vs coarse->fine solve on the same grids,
+    assert plan parity + the refinement speedup floor, and append one row
+    per grid mode to the artifact ``rows``."""
+    batch = ScenarioBatch.from_scenarios(scenarios)
+    grids = fleet_grid(batch.N, grid_size)
+    S = len(batch)
+    planners = {mode: FleetPlanner(grid_size=grid_size, grid_mode=mode)
+                for mode in GRID_MODES}
+    plans, times = {}, {}
+    for mode, planner in planners.items():
+        def solve(planner=planner):
+            return planner.plan_batch(batch, consts, grid=grids,
+                                      objective=objective)
+        plans[mode] = solve()                       # compile + warm
+        times[mode] = min(_timed(solve) for _ in range(repeats))
+    dense, refined = plans["dense"], plans["refine"]
+    exact = float(np.mean((dense.n_c == refined.n_c)
+                          & (dense.rate == refined.rate)))
+    gap = float(np.max(np.abs(refined.bound_value / dense.bound_value - 1)))
+    speedup = times["dense"] / times["refine"]
+    for mode in GRID_MODES:
+        rows.append({"objective": objective_id, "grid_mode": mode,
+                     "S": S, "plans_per_sec": S / times[mode],
+                     "speedup": times["dense"] / times[mode]})
+        emit(f"fleet_refine_{objective_id}_{mode}", times[mode] * 1e6,
+             f"S={S} G={grid_size} {S / times[mode]:,.0f}plans/s "
+             f"speedup={times['dense'] / times[mode]:.2f}x "
+             f"parity={exact:.3f} maxgap={gap:.1e}")
+    assert exact >= parity_floor, (
+        f"refined {objective_id} plans diverge from dense: parity {exact:.3f}"
+        f" < {parity_floor} over {S} scenarios")
+    assert gap <= gap_ceil, (
+        f"refined {objective_id} residual objective gap {gap:.2e} exceeds "
+        f"{gap_ceil:.0e}")
+    assert speedup >= speedup_floor, (
+        f"refined {objective_id} only {speedup:.2f}x over its dense path "
+        f"(want >= {speedup_floor:.0f}x at S={S}, G={grid_size})")
+    return speedup
+
+
+def _write_bench_json(rows):
+    """Merge this run's rows into the repo-root artifact by
+    (objective, grid_mode, S), so a partial invocation (e.g.
+    ``--objective montecarlo``) refreshes its own rows without
+    clobbering the rest of the trajectory."""
+    merged = {}
+    try:
+        with open(BENCH_JSON) as f:
+            for row in json.load(f).get("rows", []):
+                merged[(row.get("objective"), row.get("grid_mode"),
+                        row.get("S"))] = row
+    except (OSError, ValueError):
+        pass
+    for row in rows:
+        merged[(row["objective"], row["grid_mode"], row["S"])] = row
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"bench": "fleet", "schema": ["objective", "grid_mode",
+                                                "S", "plans_per_sec",
+                                                "speedup"],
+                   "rows": list(merged.values())}, f, indent=1)
+
+
+def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES, grid_modes=GRID_MODES):
     consts = default_consts()
     # accept a pre-resolved {id: instance} catalogue (instances key the
     # jitted kernel caches, so resolve once) or names/"all"
     catalogue = (objectives if isinstance(objectives, dict)
                  else resolve_objectives(objectives))
+    grid_modes = resolve_grid_modes(grid_modes) \
+        if not isinstance(grid_modes, (tuple, list)) else tuple(grid_modes)
+    bench_rows = []
     objective_rows = {}
     speedup = stats = None
+
+    # ---- coarse->fine refinement vs the dense single-pass ------------------
+    # (needs both modes; emits one plans/sec row per (objective, mode) and
+    # asserts exact plan parity + the per-objective refinement floors)
+    if not set(GRID_MODES) <= set(grid_modes) and "refine" in grid_modes:
+        print("note: the refine-vs-dense comparison needs BOTH grid modes; "
+              "run with --grid-mode all (or dense,refine) — refined "
+              "sections skipped", file=sys.stderr)
+    if set(GRID_MODES) <= set(grid_modes):
+        if "corollary1" in catalogue:
+            _bench_refine(
+                "corollary1", catalogue["corollary1"],
+                _fleet_population(REFINE_SCENARIOS, seed=23),
+                REFINE_GRID_SIZE, consts, repeats=11,
+                speedup_floor=REFINE_SPEEDUP_FLOOR,
+                parity_floor=REFINE_PARITY_FLOOR,
+                gap_ceil=REFINE_GAP_CEIL, rows=bench_rows)
+        if "montecarlo" in catalogue:
+            _bench_refine(
+                "montecarlo", catalogue["montecarlo"],
+                _mc_refine_population(MC_REFINE_SCENARIOS, seed=29),
+                MC_REFINE_GRID_SIZE, consts, repeats=2,
+                speedup_floor=MC_REFINE_SPEEDUP_FLOOR,
+                parity_floor=MC_REFINE_PARITY_FLOOR,
+                gap_ceil=MC_REFINE_GAP_CEIL, rows=bench_rows)
     # dup_frac=0 -> every request is a distinct device class (worst case
     # for the cache, the right population for a raw-throughput comparison)
     scenarios = synth_requests(N_SCENARIOS, seed=11, dup_frac=0.0,
@@ -81,6 +250,10 @@ def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES):
                                               objective=markov))
             for _ in range(7))
         objective_rows["markov_arq"] = N_SCENARIOS / t_markov
+        bench_rows.append({"objective": "markov_arq", "grid_mode": "dense",
+                           "S": N_SCENARIOS,
+                           "plans_per_sec": N_SCENARIOS / t_markov,
+                           "speedup": None})
         # exact burst-aware picks must match the scalar objective planner
         for i in range(0, N_SCENARIOS, N_SCENARIOS // 8):
             sp = ObjectivePlanner(objective=MarkovARQObjective(),
@@ -110,6 +283,10 @@ def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES):
                                                  objective=mc))
             for _ in range(3))
         objective_rows["montecarlo"] = MC_SCENARIOS / t_mc
+        bench_rows.append({"objective": "montecarlo", "grid_mode": "dense",
+                           "S": MC_SCENARIOS,
+                           "plans_per_sec": MC_SCENARIOS / t_mc,
+                           "speedup": None})
         emit("fleet_plan_batch_montecarlo", t_mc * 1e6,
              f"S={MC_SCENARIOS} G={MC_GRID_SIZE} n_runs={mc.n_runs} "
              f"batched={MC_SCENARIOS / t_mc:,.0f}plans/s (simulated)")
@@ -120,6 +297,7 @@ def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES):
             "models": list(models), "model_ids_in_batch": model_mix,
             "objective_plans_per_sec": objective_rows,
         })
+        _write_bench_json(bench_rows)
         return speedup, stats
 
     # ---- batched: one jitted call, min over repeats ------------------------
@@ -131,6 +309,10 @@ def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES):
         _timed(lambda: planner.plan_batch(batch, consts, grid=grids))
         for _ in range(13))
     objective_rows["corollary1"] = N_SCENARIOS / t_batched
+    bench_rows.append({"objective": "corollary1", "grid_mode": "dense",
+                       "S": N_SCENARIOS,
+                       "plans_per_sec": N_SCENARIOS / t_batched,
+                       "speedup": None})
 
     # ---- scalar: the PR-1 planner in a Python loop -------------------------
     scalar_plans = []
@@ -175,6 +357,7 @@ def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES):
         "served_plans_per_sec": stats.plans_per_sec,
         "cache_hit_rate": stats.cache_hit_rate,
     })
+    _write_bench_json(bench_rows)
     emit("fleet_plan_batch", t_batched * 1e6,
          f"S={N_SCENARIOS} G={GRID_SIZE} models={len(model_mix)} "
          f"speedup={speedup:.0f}x "
@@ -213,11 +396,17 @@ if __name__ == "__main__":
     ap.add_argument("--objective", default="all",
                     help="comma-separated planning-objective mix, or 'all' "
                          f"({', '.join(ALL_OBJECTIVES)})")
+    ap.add_argument("--grid-mode", default="all",
+                    help="comma-separated grid-mode mix, or 'all' "
+                         f"({', '.join(GRID_MODES)}); the refine-vs-dense "
+                         "comparison sections need both modes")
     args = ap.parse_args()
     try:  # fail fast (exit 2, like an unknown bench name in benchmarks.run)
         catalogue = resolve_objectives(args.objective)
+        modes = resolve_grid_modes(args.grid_mode)
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         sys.exit(2)
     print("name,us_per_call,derived")
-    run(models=_parse_models(args.models), objectives=catalogue)
+    run(models=_parse_models(args.models), objectives=catalogue,
+        grid_modes=modes)

@@ -76,6 +76,109 @@ def fleet_grid(N, size: int = 128) -> np.ndarray:
     return np.maximum(np.round(10.0 ** expo).astype(np.int64), 1)
 
 
+def coarse_indices(G: int, stride: int) -> np.ndarray:
+    """Dense-grid indices evaluated by the coarse pass of the two-pass
+    (coarse -> fine) fleet solve: every ``stride``-th point PLUS the last
+    point.  Anchoring the last index matters: the full-transfer end of the
+    grid (``n_c = N``, the single-block plan) is frequently the optimum and
+    a plain ``::stride`` subsample never sees it.
+    """
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    idx = np.arange(0, G, stride, dtype=np.int64)
+    if idx[-1] != G - 1:
+        idx = np.append(idx, G - 1)
+    return idx
+
+
+def refine_window_bounds(centers: np.ndarray, stride: int, G: int,
+                         tail_start: Optional[np.ndarray] = None):
+    """Interval arithmetic shared by :func:`refine_grid` and the fused
+    on-device window builder in :mod:`repro.fleet.objective_kernels`
+    (which mirrors it op-for-op in ``jax.numpy``): the union of the
+    bracket ``[c - stride, c + stride]`` and the tail ``[t, G)`` as one
+    or two ascending index intervals.
+
+    Returns ``(lo, hi2, t2, len1, count)``, all ``(S, R)``: the first
+    interval is ``[lo, hi2]`` (``len1`` wide), the second ``[t2, G)``
+    (empty when ``t2 == G``), and ``count`` the total window width.
+    """
+    centers = np.asarray(centers, np.int64)
+    lo = np.maximum(centers - stride, 0)                       # (S, R)
+    hi = np.minimum(centers + stride, G - 1)
+    if tail_start is None:
+        t = np.full(centers.shape[0], G, np.int64)
+    else:
+        t = np.clip(np.asarray(tail_start, np.int64), 0, G)
+    t = np.broadcast_to(t[:, None], centers.shape)
+    # union of [lo, hi] and [t, G): one interval when they touch/overlap
+    single = t <= hi + 1
+    lo = np.where(single, np.minimum(lo, t), lo)
+    hi2 = np.where(single, G - 1, hi)
+    t2 = np.where(single, G, t)
+    len1 = hi2 - lo + 1
+    return lo, hi2, t2, len1, len1 + (G - t2)
+
+
+def refine_grid(grid: np.ndarray, centers: np.ndarray, stride: int,
+                tail_start: Optional[np.ndarray] = None,
+                width: Optional[int] = None, pad_multiple: int = 1):
+    """Per-rate fine-grid windows bracketing the coarse argmins.
+
+    The fine pass of the two-pass fleet solve evaluates, for every
+    ``(scenario, rate)`` lane, the dense indices in the union of
+
+      * the BRACKET ``[c - stride, c + stride]`` around that rate's coarse
+        argmin ``c`` (clamped at the grid edges) — under the bound's
+        unimodal-per-regime structure this contains the dense per-rate
+        argmin whenever the basin is resolved by the coarse grid; and
+      * the guarded TAIL ``[tail_start, G)`` — the small-block-count
+        suffix where the objective's floor arithmetic (``ceil(B_d)/B_d``
+        in Corollary 1) turns into a sawtooth that bracketing cannot
+        follow, so it is evaluated densely.
+
+    Both components are ascending index intervals, so the union is one or
+    two intervals and the window enumerates dense indices in ASCENDING
+    order — which is what keeps rate-major argmin tie-breaking identical
+    to the single-pass dense solve.  Trailing padding (up to the common
+    width ``W``) repeats the window's last real index; duplicates can
+    never win an argmin tie against their first occurrence.
+
+    ``grid`` is the dense ``(S, G)`` grid, ``centers`` the ``(S, R)``
+    dense indices of the per-rate coarse argmins, ``tail_start`` an
+    optional ``(S,)`` first tail index (``G`` disables the tail for that
+    scenario).  The padded width is the widest window rounded up to
+    ``width`` (if given) or to a multiple of ``pad_multiple`` — a serving
+    stream with per-scenario tails then compiles ``O(G / pad_multiple)``
+    fine-pass shapes instead of one per distinct tail length.  Returns
+    ``(win_idx, win_grid, count)`` with shapes ``(S, R, W)``,
+    ``(S, R, W)`` and ``(S, R)``.
+    """
+    grid = np.asarray(grid)
+    S, G = grid.shape
+    lo, hi2, t2, len1, count = refine_window_bounds(centers, stride, G,
+                                                    tail_start)
+    widest = int(count.max())
+    if width is None:
+        width = -(-widest // pad_multiple) * pad_multiple
+    W = min(int(width), G)
+    if W < widest:
+        raise ValueError(f"width={W} < widest window {widest}")
+    # positions j < len1 walk the bracket from lo, then jump to the tail
+    # at t2, then (j >= count) repeat the last real index as padding —
+    # expressed as two conditional jumps so only three (S, R, W)
+    # temporaries are materialised (this runs on the serving hot path)
+    j = np.arange(W, dtype=np.int32)
+    pad = np.where(t2 < G, G - 1, hi2)        # last REAL index of the window
+    win_idx = lo[..., None].astype(np.int32) + j
+    win_idx += (t2 - lo - len1)[..., None].astype(np.int32) \
+        * (j >= len1[..., None].astype(np.int32))
+    np.minimum(win_idx, pad[..., None].astype(np.int32), out=win_idx)
+    win_idx = win_idx.astype(np.int64)
+    win_grid = grid[np.arange(S)[:, None, None], win_idx]
+    return win_idx, win_grid, count
+
+
 def optimize_block_size(*, N: int, T: float, n_o: float, tau_p: float,
                         consts: BoundConstants,
                         grid: Optional[Sequence[int]] = None) -> Plan:

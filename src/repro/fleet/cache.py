@@ -12,12 +12,15 @@ grid resolution of optimal for every scenario in the same bucket.
 
 A plan is only reusable under the SAME planning configuration, so every
 cache operation also takes a hashable ``context`` — the planner passes
-``(consts, grid_size)`` — plus the planning ``objective``, whose
-``cache_token()`` (stable id + every optimum-relevant hyperparameter,
-e.g. the Monte-Carlo seed count and data digest) is folded into the key.
-Entries therefore never leak across bound constants, grid resolutions,
-or OBJECTIVES sharing one cache: a Corollary-1 plan can never answer a
-Monte-Carlo request for the same scenario.
+``(consts, grid_size, grid_mode)``, so dense and coarse->fine refined
+entries can never alias even when their plans coincide — plus the
+planning ``objective``, whose ``cache_token()`` (stable id + every
+optimum-relevant hyperparameter, e.g. the Monte-Carlo seed count and
+data digest) is folded into the key.  Entries therefore never leak
+across bound constants, grid resolutions, grid modes, or OBJECTIVES
+sharing one cache: a Corollary-1 plan can never answer a Monte-Carlo
+request, nor a refined plan a dense calibration request, for the same
+scenario.
 """
 from __future__ import annotations
 

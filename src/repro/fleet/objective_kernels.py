@@ -135,6 +135,15 @@ def _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates, rate_mask, grid):
     within a rate, then first rate), matching the scalar
     ``repro.core.scenario._finish_plan`` exactly.  Shared by every
     objective kernel so tie-breaking can never drift between objectives.
+
+    ``grid`` is the per-scenario ``(S, G)`` grid shared across rates, or
+    a per-rate ``(S, R, G)`` window grid — the fine pass of the
+    coarse->fine solve hands every rate its own bracket, whose ascending
+    dense-index order keeps the within-rate "first grid point" tie-break
+    identical to the single-pass dense reduction.  Per-rate grids
+    additionally return the chosen rate's window row (``sel_grid``), and
+    every reduction reports the per-rate argmin lanes (``gi_per_rate``) —
+    the coarse pass's output that the fine pass brackets around.
     """
     S = rates.shape[0]
     masked = jnp.where(rate_mask[:, :, None], vals, jnp.inf)
@@ -143,11 +152,11 @@ def _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates, rate_mask, grid):
     s = jnp.arange(S)
     gi = gi_per_rate[s, ri]
 
-    n_c = grid[s, gi]
+    n_c = grid[s, gi] if grid.ndim == 2 else grid[s, ri, gi]
     best_no = n_o_eff[s, ri, gi]
     best_dur = n_c.astype(T.dtype) + best_no
     delivered = jnp.minimum(jnp.floor(T / best_dur) * n_c, N)
-    return {
+    out = {
         "n_c": n_c,
         "rate": rates[s, ri],
         "bound_value": vals[s, ri, gi],
@@ -155,7 +164,11 @@ def _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates, rate_mask, grid):
         "n_o_eff": best_no,
         "full_transfer": delivered >= N,
         "bound_grid": vals[s, ri],
+        "gi_per_rate": gi_per_rate,
     }
+    if grid.ndim == 3:
+        out["sel_grid"] = grid[s, ri]
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -197,13 +210,22 @@ def _build_grid_solve(branches, value_fn, exact_arq: bool):
     output per-scenario reductions.  ``exact_arq`` swaps the stationary
     ARQ inflation for the exact Markov-reward block time on
     non-degenerate Gilbert-Elliott rows.
+
+    Returns ``(solve, solve_windows)``: the single-pass solve over a
+    ``(S, G)`` / per-rate ``(S, R, G)`` grid, and the FUSED fine pass of
+    the coarse->fine solve, which builds the per-rate bracket+tail
+    windows ON DEVICE from ``(centers, tail_start)`` — mirroring
+    :func:`repro.core.planner.refine_window_bounds` op-for-op — so the
+    serving hot path never materialises or transfers ``(S, R, W)``
+    window arrays from the host.
     """
 
-    @jax.jit
-    def _solve(N, T, union_no, tau_p, rates, rate_mask, grid,
-               link_model_id, link_params, sigma, e0, contraction):
+    def _core(N, T, union_no, tau_p, rates, rate_mask, grid,
+              link_model_id, link_params, sigma, e0, contraction):
         rate = rates[:, :, None]                                   # (S, R, 1)
-        g = grid[:, None, :].astype(T.dtype)                       # (S, 1, G)
+        # (S, G) shared grid broadcasts over rates; a (S, R, G) window
+        # grid (the coarse->fine pass) evaluates per-rate points
+        g = (grid[:, None, :] if grid.ndim == 2 else grid).astype(T.dtype)
 
         p = _switch_p_err(branches, link_model_id, link_params, rates)
         p3 = p[:, :, None]
@@ -226,12 +248,38 @@ def _build_grid_solve(branches, value_fn, exact_arq: bool):
         return _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates,
                                     rate_mask, grid)
 
-    return _solve
+    @partial(jax.jit, static_argnames=("stride", "width"))
+    def _solve_windows(N, T, union_no, tau_p, rates, rate_mask, grid,
+                       link_model_id, link_params, sigma, e0, contraction,
+                       centers, tail_start, *, stride, width):
+        S, G = grid.shape
+        # jnp mirror of repro.core.planner.refine_window_bounds (+ the
+        # refine_grid padding rule): integer ops, so both paths agree
+        # exactly and refine_grid stays the testable numpy reference
+        lo = jnp.maximum(centers - stride, 0)                      # (S, R)
+        hi = jnp.minimum(centers + stride, G - 1)
+        t = jnp.clip(tail_start, 0, G)[:, None]
+        t = jnp.broadcast_to(t, centers.shape)
+        single = t <= hi + 1
+        lo = jnp.where(single, jnp.minimum(lo, t), lo)
+        hi2 = jnp.where(single, G - 1, hi)
+        t2 = jnp.where(single, G, t)
+        len1 = hi2 - lo + 1
+        j = jnp.arange(width)
+        pad = jnp.where(t2 < G, G - 1, hi2)
+        win = lo[..., None] + j
+        win = win + (t2 - lo - len1)[..., None] * (j >= len1[..., None])
+        win = jnp.minimum(win, pad[..., None])                     # (S, R, W)
+        win_grid = grid[jnp.arange(S)[:, None, None], win]
+        return _core(N, T, union_no, tau_p, rates, rate_mask, win_grid,
+                     link_model_id, link_params, sigma, e0, contraction)
+
+    return jax.jit(_core), _solve_windows
 
 
 @lru_cache(maxsize=16)
 def _grid_solve_for(link_version: int, value_fn, exact_arq: bool):
-    """Jitted grid solve for the CURRENT link-kernel table; keyed on the
+    """Jitted grid solves for the CURRENT link-kernel table; keyed on the
     registry version so later link plugins get their own trace.  Bounded:
     stale versions' compiled programs are evicted rather than retained
     for the life of a long-running server."""
@@ -246,19 +294,35 @@ def grid_objective_builder(value_fn, exact_arq: bool = False) -> Callable:
     ``value_fn(g, N, T, n_o_eff, tau_p, sigma, e0, contraction)`` receives
     ``(S, R, G)``-broadcast jnp arrays (plus the three bound-constant
     scalars) and returns the ``(S, R, G)`` objective values to minimise.
+
+    The built solve advertises ``supports_refine_windows``: the planner's
+    coarse->fine fine pass then ships only ``(centers, tail_start)`` plus
+    the static ``(refine_stride, refine_width)`` and the windows are
+    gathered on device.
     """
 
     def build(objective):
         def solve(arrays, consts, shard, batch):
-            fn = _grid_solve_for(kernel_table_version(), value_fn,
-                                 exact_arq)
+            dense_fn, win_fn = _grid_solve_for(kernel_table_version(),
+                                               value_fn, exact_arq)
+            arrays = dict(arrays)
+            stride = arrays.pop("refine_stride", None)
+            width = arrays.pop("refine_width", None)
             S = arrays["N"].shape[0]
             with enable_x64():
                 if shard:
                     arrays = _maybe_shard(arrays, S)
-                out = fn(sigma=consts.variance_floor, e0=consts.init_gap,
-                         contraction=consts.contraction, **arrays)
+                if stride is None:
+                    out = dense_fn(sigma=consts.variance_floor,
+                                   e0=consts.init_gap,
+                                   contraction=consts.contraction, **arrays)
+                else:
+                    out = win_fn(sigma=consts.variance_floor,
+                                 e0=consts.init_gap,
+                                 contraction=consts.contraction,
+                                 stride=stride, width=width, **arrays)
                 return {k: np.asarray(v) for k, v in out.items()}
+        solve.supports_refine_windows = True
         return solve
 
     return build
@@ -294,13 +358,15 @@ def _mc_solve_for(objective, link_version: int):
     n_runs = int(objective.n_runs)
     seed0 = int(objective.seed)
 
-    @partial(jax.jit, static_argnames=("max_updates",))
+    @partial(jax.jit, static_argnames=("max_updates", "shard_lanes"))
     def _solve(N, T, union_no, tau_p, rates, rate_mask, grid,
-               link_model_id, link_params, *, max_updates):
+               link_model_id, link_params, *, max_updates,
+               shard_lanes=False):
         S, R = rates.shape
-        G = grid.shape[1]
+        G = grid.shape[-1]
         rate = rates[:, :, None]
-        g = grid[:, None, :].astype(T.dtype)
+        gi = grid[:, None, :] if grid.ndim == 2 else grid      # (S, R?, G)
+        g = gi.astype(T.dtype)
 
         p = _switch_p_err(branches, link_model_id, link_params, rates)
         raw = g / rate + union_no[:, None, None]
@@ -310,13 +376,23 @@ def _mc_solve_for(objective, link_version: int):
         # (NOT the raw dur) — replicate so the f64 timeline is bitwise
         dur_sched = g + n_o_eff
 
-        # one simulation lane per (scenario, rate, grid point)
-        lane_nc = jnp.broadcast_to(grid[:, None, :], (S, R, G)).reshape(-1)
+        # one simulation lane per (scenario, rate, grid point); the lane
+        # axis is scenario-major, so laying it out over the "fleet" mesh
+        # agrees with _maybe_shard's scenario-axis placement of the inputs
+        lane_nc = jnp.broadcast_to(gi, (S, R, G)).reshape(-1)
         lane_dur = dur_sched.reshape(-1)
         lane_tau = jnp.broadcast_to(tau_p[:, None, None], (S, R, G)).reshape(-1)
         lane_total = jnp.broadcast_to(
             jnp.floor(T / tau_p)[:, None, None], (S, R, G)).reshape(-1)
         L = lane_nc.shape[0]
+        if shard_lanes:
+            mesh = Mesh(np.asarray(jax.local_devices()), ("fleet",))
+            lanes = NamedSharding(mesh, P("fleet"))
+            constrain = partial(jax.lax.with_sharding_constraint,
+                                shardings=lanes)
+            lane_nc, lane_dur, lane_tau, lane_total = (
+                constrain(lane_nc), constrain(lane_dur),
+                constrain(lane_tau), constrain(lane_total))
 
         def per_seed(seed):
             key = jax.random.PRNGKey(seed)
@@ -367,14 +443,29 @@ def montecarlo_builder(objective) -> Callable:
     """Kernel builder for ``MonteCarloObjective``: pads the shared update
     timeline to the next power of two over the batch (masked slots no-op,
     so plans are unaffected) to bound how many scan lengths can compile.
-    Runs unsharded — the lane layout differs from the grid solves."""
+
+    Sharded like the grid solves: the batch arrays are laid out over the
+    local devices' "fleet" mesh on the scenario axis via ``_maybe_shard``,
+    and the kernel constrains its flattened scenario-major ``(S * R * G)``
+    simulation-lane axis to the same mesh, so every device simulates its
+    own scenarios' lanes.  Requires both ``S`` and the lane count to
+    divide the device count; otherwise the solve runs unsharded (single
+    device is the common case and is bitwise-unchanged by this path).
+    """
 
     def solve(arrays, consts, shard, batch):
-        del consts, shard  # empirical objective; lanes are not sharded
+        del consts  # empirical objective
         fn = _mc_solve_for(objective, kernel_table_version())
         max_updates = pow2ceil(max(1, batch.max_updates))
+        S = arrays["N"].shape[0]
+        n_dev = len(jax.local_devices())
+        lanes = S * arrays["rates"].shape[1] * arrays["grid"].shape[-1]
+        shard = bool(shard) and n_dev > 1 and S % n_dev == 0 \
+            and lanes % n_dev == 0
         with enable_x64():
-            out = fn(max_updates=max_updates, **arrays)
+            if shard:
+                arrays = _maybe_shard(arrays, S)
+            out = fn(max_updates=max_updates, shard_lanes=shard, **arrays)
             return {k: np.asarray(v) for k, v in out.items()}
 
     return solve

@@ -33,14 +33,20 @@ from typing import Any, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.bounds import BoundConstants
-from repro.core.objectives import BoundObjective
-from repro.core.planner import Plan, fleet_grid
+from repro.core.objectives import BoundObjective, refine_hints_for
+from repro.core.planner import (Plan, coarse_indices, fleet_grid,
+                                refine_grid, refine_window_bounds)
 from repro.core.protocol import BlockSchedule
 from repro.core.scenario import Scenario
 
 from repro.fleet.batch import ScenarioBatch
 from repro.fleet.cache import PlanCache
 from repro.fleet.objective_kernels import fleet_solve, pow2ceil
+
+#: Valid ``FleetPlanner.grid_mode`` values: ``"dense"`` (single-pass, the
+#: reference semantics and the documented escape hatch) and ``"refine"``
+#: (two-pass coarse -> fine; see ``FleetPlanner``).
+GRID_MODES = ("dense", "refine")
 
 
 @dataclass(frozen=True)
@@ -108,15 +114,20 @@ class FleetPlan:
 
 def _pad_batch(scenarios: List[Scenario],
                pad_to: Optional[int] = None) -> List[Scenario]:
-    """Pad (repeating the last scenario) to a fixed length ``pad_to``, or
-    to the next power of two — shape invariance bounds how many kernel
-    shapes a request stream can ever compile (one per pad length)."""
+    """Pad to a fixed length ``pad_to``, or to the next power of two —
+    shape invariance bounds how many kernel shapes a request stream can
+    ever compile (one per pad length).  Pad lanes repeat the batch's
+    smallest-``N`` scenario: their results are discarded either way, and
+    for simulated objectives (Monte Carlo scales with the update count,
+    which grows with ``N``) repeating an arbitrary scenario could fill
+    the padding with copies of the batch's most expensive simulation."""
     n = len(scenarios)
     if pad_to is None:
         pad_to = pow2ceil(n)
     elif pad_to < n:
         raise ValueError(f"pad_to={pad_to} < batch of {n}")
-    return scenarios + [scenarios[-1]] * (pad_to - n)
+    pad = min(scenarios, key=lambda sc: sc.N)
+    return scenarios + [pad] * (pad_to - n)
 
 
 @dataclass(frozen=True)
@@ -130,32 +141,75 @@ class FleetPlanner:
     default registered objective instance solved by ``plan_batch`` /
     ``plan_many`` (``None`` means the Corollary-1
     :class:`~repro.core.objectives.BoundObjective`), overridable per call.
+
+    ``grid_mode`` selects the solve strategy over the grid:
+
+      * ``"dense"`` (default, and the documented escape hatch): one pass
+        over the full grid — the reference semantics every equivalence
+        test is stated against.
+      * ``"refine"``: hierarchical coarse -> fine.  Pass 1 solves on the
+        coarse subsample ``grid[::k]`` + the anchored last point
+        (``k ~ sqrt(G/2)``); pass 2 re-solves per-rate bracket windows
+        around each rate's coarse argmin, extended by the objective's
+        guarded sawtooth tail (see
+        :class:`~repro.core.objectives.RefineHints`), cutting the
+        evaluated lanes roughly 2-4x.  Both passes run through the same
+        jitted ``fleet_solve`` kernels, so every registered objective —
+        including plugins built on ``grid_objective_builder`` — gets the
+        cut for free.  The refined argmin equals the dense argmin
+        (rate-major tie-breaking included) whenever the dense argmin lies
+        in the evaluated windows — guaranteed by the bracket for
+        coarse-resolved basins and by the dense tail guard for the
+        small-block-count sawtooth, and enforced by the refinement
+        parity tests; when a grid is too narrow to subsample
+        (``G < hints.min_grid``), windows would cover the grid anyway, or
+        a kernel does not expose per-rate argmins, the solve silently
+        falls back to the dense pass.
     """
 
     grid_size: int = 128
     shard: bool = True
     objective: Any = None
+    grid_mode: str = "dense"
+
+    def __post_init__(self):
+        if self.grid_mode not in GRID_MODES:
+            raise ValueError(
+                f"unknown grid_mode {self.grid_mode!r}; valid: {GRID_MODES}")
 
     def _resolve_objective(self, override):
         obj = override if override is not None else self.objective
         return obj if obj is not None else BoundObjective()
 
+    def _resolve_grid_mode(self, override: Optional[str]) -> str:
+        mode = override if override is not None else self.grid_mode
+        if mode not in GRID_MODES:
+            raise ValueError(
+                f"unknown grid_mode {mode!r}; valid: {GRID_MODES}")
+        return mode
+
     def plan_batch(self,
                    batch: Union[ScenarioBatch, Sequence[Scenario]],
                    consts: BoundConstants,
                    grid: Optional[np.ndarray] = None,
-                   objective: Any = None) -> FleetPlan:
-        """Solve every scenario in the batch in one jitted call.
+                   objective: Any = None,
+                   grid_mode: Optional[str] = None) -> FleetPlan:
+        """Solve every scenario in the batch against the objective.
 
         ``grid`` may be ``None`` (per-scenario default grids), a shared
         ``(G,)`` vector, or a per-scenario ``(S, G)`` matrix;
-        ``objective`` overrides the planner's default objective.  With
-        ``grid=None``, an objective declaring ``default_grid_size`` (the
-        Monte-Carlo objective: simulating training per grid point is
-        expensive) caps the default grid width below ``grid_size``.
+        ``objective`` and ``grid_mode`` override the planner's defaults
+        per call.  With ``grid=None``, an objective declaring
+        ``default_grid_size`` (the Monte-Carlo objective: simulating
+        training per grid point is expensive) caps the default grid width
+        below ``grid_size``.  In ``"refine"`` mode the returned
+        ``grid`` / ``bound_grid`` hold the evaluated fine window at each
+        scenario's chosen rate (ascending in ``n_c``) rather than the
+        full dense grid.
         """
         consts.validate()
         objective = self._resolve_objective(objective)
+        mode = self._resolve_grid_mode(grid_mode)
         if not isinstance(batch, ScenarioBatch):
             batch = ScenarioBatch.from_scenarios(list(batch))
         S = len(batch)
@@ -185,28 +239,104 @@ class FleetPlanner:
             "link_params": np.asarray(batch.link_params, np.float64),
         }
         solve = fleet_solve(objective)
-        out = solve(arrays, consts, self.shard, batch)
+        out = None
+        if mode == "refine":
+            out, fine_grid = self._refine_solve(solve, arrays, consts,
+                                                batch, objective, grid)
+        if out is None:  # dense mode, or refinement fell back
+            out = solve(arrays, consts, self.shard, batch)
+            fine_grid = np.asarray(grid)
 
         D = batch.n_devices
-        with np.errstate(divide="ignore"):  # T == N -> inf boundary
-            boundary = np.where(
-                batch.T <= batch.N, np.inf,
-                np.maximum(batch.N * out["n_o_eff"], 0.0)
-                / np.where(batch.T > batch.N, batch.T - batch.N, 1.0))
+        num = np.maximum(batch.N * out["n_o_eff"], 0.0)
+        den = batch.T - batch.N
+        # regime boundary N * n_o_eff / (T - N); T <= N means the full set
+        # can never arrive — clamp to +inf explicitly (matching the scalar
+        # boundary_n_c) so no inf/NaN arithmetic can leak into records
+        ratio = num / np.where(den > 0.0, den, 1.0)
+        boundary = np.where(den > 0.0, ratio, np.inf)
         return FleetPlan(
             n_c=out["n_c"], rate=out["rate"],
             bound_value=out["bound_value"], p_err=out["p_err"],
             n_o_eff=out["n_o_eff"], full_transfer=out["full_transfer"],
             boundary=boundary,
             n_c_per_device=np.maximum(1, out["n_c"] // D),
-            grid=np.asarray(grid), bound_grid=out["bound_grid"],
+            grid=fine_grid, bound_grid=out["bound_grid"],
             objective=objective.objective_id)
+
+    def _refine_solve(self, solve, arrays, consts, batch, objective, grid):
+        """The two-pass coarse -> fine solve; ``(None, None)`` signals a
+        dense fallback (grid too narrow, windows as wide as the grid, or
+        a custom kernel without per-rate argmins)."""
+        S, G = grid.shape
+        hints = refine_hints_for(objective)
+        if G < max(2, hints.min_grid):
+            return None, None
+        # an objective's explicit stride hint is honoured as-is (clamped
+        # to the grid); only the automatic work-minimising default applies
+        stride = hints.stride or int(round(np.sqrt(G / 2.0)))
+        stride = max(2, min(int(stride), G - 1))
+        cpos = coarse_indices(G, stride)
+        if cpos.size < 4:
+            return None, None
+
+        if hints.tail_blocks:
+            # first dense index inside the guarded sawtooth tail
+            # (N / n_c <= tail_blocks); rows of `grid` are ascending
+            tail = np.sum(
+                grid.astype(np.int64) * int(hints.tail_blocks)
+                < batch.N[:, None], axis=1)
+        else:
+            tail = None
+        # tail windows vary per scenario: round the padded width up to a
+        # multiple of 8 so a request stream compiles O(G / 8) fine-pass
+        # shapes, not one per distinct tail length
+        pad_multiple = 8 if tail is not None else 1
+        # upper-bound the fine width BEFORE the coarse solve: bracket +
+        # longest tail suffix (centers can only merge the two, never
+        # widen them), so an unprofitable batch — e.g. one small-N
+        # scenario whose guarded tail spans most of the log grid — costs
+        # nothing instead of a wasted coarse pass on top of the dense one
+        w_ub = 2 * stride + 1 + (G - int(tail.min()) if tail is not None
+                                 else 0)
+        if cpos.size + min(G, -(-w_ub // pad_multiple) * pad_multiple) >= G:
+            return None, None  # two passes would outwork the dense solve
+
+        arrays1 = dict(arrays,
+                       grid=np.ascontiguousarray(grid[:, cpos]))
+        out1 = solve(arrays1, consts, self.shard, batch)
+        centers1 = out1.get("gi_per_rate")
+        if centers1 is None:  # pre-refinement custom kernel
+            return None, None
+        centers = cpos[np.asarray(centers1, np.int64)]         # (S, R)
+
+        count = refine_window_bounds(centers, stride, G, tail)[-1]
+        W = min(G, -(-int(count.max()) // pad_multiple) * pad_multiple)
+        if cpos.size + W >= G:
+            return None, None  # the merged windows still cover the grid
+
+        if getattr(solve, "supports_refine_windows", False):
+            # fused fine pass: windows are built and gathered on device
+            # from (centers, tail_start); the host only sizes W
+            arrays2 = dict(
+                arrays,
+                centers=np.ascontiguousarray(centers),
+                tail_start=(np.zeros(S, np.int64) + G if tail is None
+                            else np.asarray(tail, np.int64)),
+                refine_stride=stride, refine_width=W)
+        else:  # e.g. the Monte-Carlo kernel: host-built (S, R, W) windows
+            _, win_grid, _ = refine_grid(grid, centers, stride,
+                                         tail_start=tail, width=W)
+            arrays2 = dict(arrays, grid=np.ascontiguousarray(win_grid))
+        out2 = solve(arrays2, consts, self.shard, batch)
+        return out2, np.asarray(out2["sel_grid"])
 
     def plan_many(self, scenarios: Sequence[Scenario],
                   consts: BoundConstants,
                   cache: Optional[PlanCache] = None,
                   pad_to: Optional[int] = None,
-                  objective: Any = None) -> List[PlanRecord]:
+                  objective: Any = None,
+                  grid_mode: Optional[str] = None) -> List[PlanRecord]:
         """Plan a request list, deduplicating through the cache.
 
         Cache hits (and in-batch duplicates, up to key quantisation) skip
@@ -214,22 +344,25 @@ class FleetPlanner:
         when given (a serving loop passes its micro-batch size so ONE
         kernel shape covers every batch), else to the next power of two —
         and solved in ONE ``plan_batch`` call.  Results come back in
-        request order.  Cache entries are scoped to ``(consts,
-        grid_size)`` AND the objective's ``cache_token()`` so one cache
-        can serve several configurations and objectives without
-        cross-talk.
+        request order.  Cache entries are scoped to ``(consts, grid_size,
+        grid_mode)`` AND the objective's ``cache_token()`` so one cache
+        can serve several configurations, objectives AND grid modes
+        without cross-talk: a refined plan can never answer a dense
+        calibration request for the same scenario, even when the two
+        coincide.
         """
         scenarios = list(scenarios)
         if not scenarios:
             return []
         objective = self._resolve_objective(objective)
+        mode = self._resolve_grid_mode(grid_mode)
         records: List[Optional[PlanRecord]] = [None] * len(scenarios)
         if cache is None:
             fp = self.plan_batch(_pad_batch(scenarios, pad_to), consts,
-                                 objective=objective)
+                                 objective=objective, grid_mode=mode)
             return [fp.record(i) for i in range(len(scenarios))]
 
-        ctx = (consts, self.grid_size)
+        ctx = (consts, self.grid_size, mode)
         miss: "OrderedDict[tuple, List[int]]" = OrderedDict()
         for i, sc in enumerate(scenarios):
             rec = cache.get(sc, context=ctx, objective=objective)
@@ -242,7 +375,7 @@ class FleetPlanner:
         if miss:
             reps = [scenarios[idxs[0]] for idxs in miss.values()]
             fp = self.plan_batch(_pad_batch(reps, pad_to), consts,
-                                 objective=objective)
+                                 objective=objective, grid_mode=mode)
             for j, idxs in enumerate(miss.values()):
                 rec = fp.record(j)
                 cache.put(scenarios[idxs[0]], rec, context=ctx,

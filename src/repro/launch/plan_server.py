@@ -12,10 +12,16 @@ carry ``(model_id, params)`` and the kernel dispatches per scenario via
 may name the objective it wants (Corollary-1 bound, exact burst-aware
 Markov-ARQ, empirical Monte-Carlo), micro-batches group by objective, and
 cache keys carry the objective token so answers never cross objectives.
+Each request also carries a GRID MODE — ``refine`` (two-pass
+coarse->fine) or ``dense`` (single-pass reference) — so serving policies
+can mix refined bound traffic with dense calibration traffic;
+micro-batches group by (objective, mode), the stats count requests per
+mode, and cache keys fold the mode in so the two streams never alias.
 
   PYTHONPATH=src python -m repro.launch.plan_server \
       --requests 4096 --batch 256 --grid 64 --dup 0.5 \
-      --models erasure,fading,gilbert_elliott --objective all
+      --models erasure,fading,gilbert_elliott --objective all \
+      --grid-mode all
 
 The synthetic stream mimics a production mix: device classes are drawn
 from a finite catalogue with per-request jitter, so a fraction of requests
@@ -39,9 +45,29 @@ from repro.core.objectives import (BoundObjective, MarkovARQObjective,
 from repro.core.scenario import (ErasureLink, FadingLink, GilbertElliottLink,
                                  IdealLink, MultiDevice, Scenario,
                                  SingleDevice)
-from repro.fleet import FleetPlanner, PlanCache, PlanRecord
+from repro.fleet import GRID_MODES, FleetPlanner, PlanCache, PlanRecord
 
 RATE_SET = (1.0, 1.25, 1.5, 2.0, 3.0)
+
+
+def resolve_grid_modes(spec) -> Sequence[str]:
+    """Validate a grid-mode mix: "all", one mode, or a comma list of
+    :data:`repro.fleet.GRID_MODES`.  Unknown names raise ``ValueError``
+    (the CLI maps that to exit code 2) — serving policies mix refined
+    bound traffic with dense calibration traffic, and a typo silently
+    falling back to one mode would skew both streams."""
+    if spec == "all":
+        return GRID_MODES
+    names = (tuple(s.strip() for s in spec.split(",") if s.strip())
+             if isinstance(spec, str) else tuple(spec))
+    unknown = [m for m in names if m not in GRID_MODES]
+    if unknown:
+        raise ValueError(
+            f"unknown grid mode(s) {unknown}; available: {list(GRID_MODES)}")
+    if not names:
+        raise ValueError(f"no grid mode requested; "
+                         f"available: {list(GRID_MODES)}")
+    return names
 
 
 def default_consts() -> BoundConstants:
@@ -190,12 +216,15 @@ class ServeStats:
     requests_per_model: Dict[int, int] = field(default_factory=dict)
     #: request counts keyed by planning objective_id (registry ids)
     requests_per_objective: Dict[str, int] = field(default_factory=dict)
+    #: request counts keyed by grid mode ("dense" / "refine")
+    requests_per_grid_mode: Dict[str, int] = field(default_factory=dict)
 
 
 def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
           consts: BoundConstants, cache: Optional[PlanCache] = None,
           batch_size: int = 256, warm: bool = True,
-          objectives: Optional[Sequence[Any]] = None) -> ServeStats:
+          objectives: Optional[Sequence[Any]] = None,
+          grid_modes: Optional[Sequence[str]] = None) -> ServeStats:
     """Micro-batch the request list and plan it end to end.
 
     Single-objective streams pad every miss-batch to ``batch_size``
@@ -213,15 +242,20 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
     (the planner's default for every request) or a per-request sequence
     of objective INSTANCES (reuse one instance per distinct objective —
     identity keys the jitted Monte-Carlo kernel cache; registry ids
-    resolve through :func:`resolve_objectives`).  Micro-batches group by
-    objective, so a mixed-objective stream dispatches every registered
-    kernel in one pass.
+    resolve through :func:`resolve_objectives`).  ``grid_modes``
+    likewise assigns each request a grid mode (``None`` means the
+    planner's default for every request; names resolve through
+    :func:`resolve_grid_modes`), so one stream can mix refined bound
+    traffic with dense calibration traffic.  Micro-batches group by
+    (objective, grid mode), so a mixed stream dispatches every
+    registered kernel and both solve strategies in one pass.
 
     The reported hit-rate covers THIS stream only (delta of the cache
     counters, not its lifetime totals) and is 0.0 — never NaN — on an
-    empty stream; ``requests_per_model`` / ``requests_per_objective``
-    count requests by link ``model_id`` and ``objective_id`` so mixed
-    traffic is visible in the stats.
+    empty stream; ``requests_per_model`` / ``requests_per_objective`` /
+    ``requests_per_grid_mode`` count requests by link ``model_id``,
+    ``objective_id`` and grid mode so mixed traffic is visible in the
+    stats.
     """
     requests = list(requests)
     if batch_size < 1:
@@ -234,33 +268,43 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
             raise ValueError(
                 f"objectives has length {len(objs)}, want one per request "
                 f"({len(requests)})")
+    if grid_modes is None:
+        modes: List[str] = [planner.grid_mode] * len(requests)
+    else:
+        modes = [planner._resolve_grid_mode(m) for m in grid_modes]
+        if len(modes) != len(requests):
+            raise ValueError(
+                f"grid_modes has length {len(modes)}, want one per request "
+                f"({len(requests)})")
     per_model: Dict[int, int] = {}
     per_objective: Dict[str, int] = {}
+    per_mode: Dict[str, int] = {}
     default_id = planner._resolve_objective(None).objective_id
-    for sc, obj in zip(requests, objs):
+    for sc, obj, mode in zip(requests, objs, modes):
         mid = link_spec_for(sc.link).model_id
         per_model[mid] = per_model.get(mid, 0) + 1
         oid = default_id if obj is None else obj.objective_id
         per_objective[oid] = per_objective.get(oid, 0) + 1
+        per_mode[mode] = per_mode.get(mode, 0) + 1
 
     def _grouped(idxs):
-        """Consecutive request indices grouped by objective identity,
-        first-seen order (one plan_many call per group)."""
-        groups: "Dict[int, List[int]]" = {}
-        order: List[int] = []
+        """Consecutive request indices grouped by (objective identity,
+        grid mode), first-seen order (one plan_many call per group)."""
+        groups: "Dict[tuple, List[int]]" = {}
+        order: List[tuple] = []
         for i in idxs:
-            k = id(objs[i])
+            k = (id(objs[i]), modes[i])
             if k not in groups:
                 groups[k] = []
                 order.append(k)
             groups[k].append(i)
         return [groups[k] for k in order]
 
-    # single-objective streams pad every micro-batch to ONE kernel shape;
-    # mixed streams pad each per-objective sub-group to the next power of
-    # two instead (still O(log batch) shapes per objective, but no lanes
-    # wasted re-solving the pad filler batch_size-wide per group)
-    mixed = len({id(o) for o in objs}) > 1
+    # single-group streams pad every micro-batch to ONE kernel shape;
+    # mixed streams pad each per-(objective, mode) sub-group to the next
+    # power of two instead (still O(log batch) shapes per group, but no
+    # lanes wasted re-solving the pad filler batch_size-wide per group)
+    mixed = len({(id(o), m) for o, m in zip(objs, modes)}) > 1
     pad_to = None if mixed else batch_size
     if warm and requests:
         warmed = set()
@@ -269,14 +313,16 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
         for idxs in _grouped(range(min(batch_size, len(requests)))):
             planner.plan_many([requests[i] for i in idxs], consts,
                               cache=None, pad_to=pad_to,
-                              objective=objs[idxs[0]])
-            warmed.add(id(objs[idxs[0]]))
-        # objectives absent from the first window still warm once
+                              objective=objs[idxs[0]],
+                              grid_mode=modes[idxs[0]])
+            warmed.add((id(objs[idxs[0]]), modes[idxs[0]]))
+        # groups absent from the first window still warm once
         for idxs in _grouped(range(len(requests))):
-            if id(objs[idxs[0]]) not in warmed:
+            if (id(objs[idxs[0]]), modes[idxs[0]]) not in warmed:
                 planner.plan_many([requests[i] for i in idxs[:batch_size]],
                                   consts, cache=None, pad_to=pad_to,
-                                  objective=objs[idxs[0]])
+                                  objective=objs[idxs[0]],
+                                  grid_mode=modes[idxs[0]])
     hits0, misses0 = (cache.hits, cache.misses) if cache is not None \
         else (0, 0)
     records: List[Optional[PlanRecord]] = [None] * len(requests)
@@ -287,7 +333,8 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
                                            len(requests)))):
             recs = planner.plan_many(
                 [requests[i] for i in idxs], consts, cache=cache,
-                pad_to=pad_to, objective=objs[idxs[0]])
+                pad_to=pad_to, objective=objs[idxs[0]],
+                grid_mode=modes[idxs[0]])
             for i, rec in zip(idxs, recs):
                 records[i] = rec
             n_batches += 1
@@ -302,7 +349,8 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
         records=records, n_requests=len(requests), n_batches=n_batches,
         seconds=dt, plans_per_sec=len(requests) / dt if dt > 0 else 0.0,
         cache_hit_rate=hit_rate, requests_per_model=per_model,
-        requests_per_objective=per_objective)
+        requests_per_objective=per_objective,
+        requests_per_grid_mode=per_mode)
 
 
 def _parse_models(spec: str) -> Sequence[str]:
@@ -326,6 +374,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--objective", default="corollary1",
                     help="comma-separated planning-objective mix, or 'all' "
                          f"({', '.join(ALL_OBJECTIVES)})")
+    ap.add_argument("--grid-mode", default="dense",
+                    help="comma-separated grid-mode mix, or 'all' "
+                         f"({', '.join(GRID_MODES)}); 'refine' is the "
+                         "two-pass coarse->fine solve, 'dense' the "
+                         "single-pass reference")
     ap.add_argument("--n-max", type=int, default=32768,
                     help="cap on drawn dataset sizes (keep small when the "
                          "mix includes the simulated montecarlo objective)")
@@ -335,6 +388,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     try:
         catalogue = resolve_objectives(args.objective)
+        mode_mix = resolve_grid_modes(args.grid_mode)
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -347,11 +401,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     rng = np.random.default_rng(args.seed + 1)
     objectives = [instances[int(rng.integers(len(instances)))]
                   for _ in requests]
+    grid_modes = [mode_mix[int(rng.integers(len(mode_mix)))]
+                  for _ in requests]
     planner = FleetPlanner(grid_size=args.grid)
     cache = None if args.no_cache else PlanCache(
         maxsize=args.cache_size, sig_digits=args.sig_digits)
     stats = serve(requests, planner=planner, consts=default_consts(),
-                  cache=cache, batch_size=args.batch, objectives=objectives)
+                  cache=cache, batch_size=args.batch, objectives=objectives,
+                  grid_modes=grid_modes)
     print(f"served {stats.n_requests} plan requests in {stats.n_batches} "
           f"micro-batches of <= {args.batch}")
     print(f"throughput: {stats.plans_per_sec:,.0f} plans/sec "
@@ -364,6 +421,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         f"{oid}={n}"
         for oid, n in sorted(stats.requests_per_objective.items()))
     print(f"objective mix: {by_objective}")
+    by_mode = ", ".join(
+        f"{mode}={n}"
+        for mode, n in sorted(stats.requests_per_grid_mode.items()))
+    print(f"grid-mode mix: {by_mode}")
     if cache is not None:
         print(f"cache: {cache.hits} hits / {cache.misses} misses "
               f"(hit rate {stats.cache_hit_rate:.1%}, {len(cache)} entries)")

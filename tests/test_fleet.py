@@ -378,6 +378,50 @@ def test_plan_many_pad_to_fixed_shape():
         FleetPlanner(grid_size=16).plan_many(scs, CONSTS, pad_to=2)
 
 
+def test_pad_batch_repeats_smallest_scenario():
+    """Padding repeats the batch's smallest-N scenario (for the simulated
+    Monte-Carlo objective an arbitrary pad pick could fill the padding
+    with the batch's most expensive training run), and padded/unpadded
+    batches return identical records."""
+    from repro.fleet.planner import _pad_batch
+
+    scs = _mixed_scenarios()
+    smallest = min(scs, key=lambda sc: sc.N)
+    padded = _pad_batch(scs, pad_to=16)
+    assert len(padded) == 16
+    assert padded[:len(scs)] == scs
+    assert all(sc == smallest for sc in padded[len(scs):])
+    # shape-only padding: records are unaffected by pad_to
+    planner = FleetPlanner(grid_size=16)
+    for pad_to in (None, 16, 32):
+        assert planner.plan_many(scs, CONSTS, pad_to=pad_to) == \
+            planner.plan_many(scs, CONSTS)
+
+
+def test_boundary_clamps_to_inf_at_deadline_equal_dataset():
+    """Regression: the T == N, zero-effective-overhead corner must report
+    the +inf regime boundary (matching the scalar ``boundary_n_c``), with
+    no NaN leaking from the masked division."""
+    from repro.core.protocol import boundary_n_c
+
+    scs = [
+        Scenario(N=64, T=64.0, n_o=0.0),                  # T == N, n_o == 0
+        Scenario(N=128, T=128.0, n_o=5.0),                # T == N, n_o > 0
+        Scenario(N=64, T=32.0, n_o=1.0),                  # T < N
+        Scenario(N=64, T=640.0, n_o=3.0),                 # T > N (finite)
+    ]
+    fp = FleetPlanner(grid_size=16).plan_batch(scs, CONSTS)
+    assert not np.isnan(fp.boundary).any()
+    assert np.isinf(fp.boundary[:3]).all()
+    assert np.isfinite(fp.boundary[3])
+    for i, sc in enumerate(scs):
+        want = boundary_n_c(sc.N, sc.T,
+                            float(sc.effective_overhead(int(fp.n_c[i]),
+                                                        float(fp.rate[i]))))
+        assert fp.boundary[i] == want or \
+            np.isclose(fp.boundary[i], want, rtol=1e-12)
+
+
 # ---------------------------------------------------------------------------
 # plan server
 # ---------------------------------------------------------------------------
@@ -538,9 +582,7 @@ print("SHARDED-OK")
 """
 
 
-def test_plan_batch_sharded_matches_unsharded():
-    """NamedSharding over 4 forced host devices returns bitwise-identical
-    plans (separate process: the device-count flag must precede jax init)."""
+def _run_forced_device_script(script: str, marker: str):
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     src = os.path.join(repo, "src")
     env = dict(os.environ,
@@ -548,7 +590,50 @@ def test_plan_batch_sharded_matches_unsharded():
                XLA_FLAGS="--xla_force_host_platform_device_count=4",
                PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH", ""))
     out = subprocess.run(
-        [sys.executable, "-c", _SHARD_SCRIPT],
+        [sys.executable, "-c", script],
         env=env, capture_output=True, text=True, timeout=300, cwd=repo)
     assert out.returncode == 0, out.stderr
-    assert "SHARDED-OK" in out.stdout
+    assert marker in out.stdout
+
+
+def test_plan_batch_sharded_matches_unsharded():
+    """NamedSharding over 4 forced host devices returns bitwise-identical
+    plans (separate process: the device-count flag must precede jax init)."""
+    _run_forced_device_script(_SHARD_SCRIPT, "SHARDED-OK")
+
+
+_MC_SHARD_SCRIPT = """
+import numpy as np, jax
+assert jax.device_count() == 4, jax.devices()
+from repro.core.objectives import MonteCarloObjective
+from repro.core.scenario import ErasureLink, Scenario
+from repro.fleet import FleetPlanner, ScenarioBatch
+from repro.launch.plan_server import default_consts
+rng = np.random.default_rng(0)
+X = rng.normal(size=(48, 4))
+y = X @ rng.normal(size=4) + 0.1 * rng.normal(size=48)
+mc = MonteCarloObjective(X=X, y=y, n_runs=2, alpha=1e-3, seed=0)
+scs = [Scenario(N=int(n), T=1.3 * n, n_o=float(o), tau_p=1.0,
+                link=ErasureLink(beta=0.4, p_base=0.05, rates=(1.0, 2.0)))
+       for n, o in zip((256, 384, 512, 320, 288, 448, 352, 400),
+                       (20, 90, 45, 150, 60, 10, 120, 75))]
+batch = ScenarioBatch.from_scenarios(scs)   # S = 8 divides 4 devices
+consts = default_consts()
+sharded = FleetPlanner(grid_size=8, shard=True).plan_batch(
+    batch, consts, objective=mc)
+local = FleetPlanner(grid_size=8, shard=False).plan_batch(
+    batch, consts, objective=mc)
+np.testing.assert_array_equal(sharded.n_c, local.n_c)
+np.testing.assert_array_equal(sharded.rate, local.rate)
+np.testing.assert_allclose(sharded.bound_value, local.bound_value,
+                           rtol=1e-7, atol=0.0)
+print("MC-SHARDED-OK")
+"""
+
+
+def test_montecarlo_sharded_kernel_matches_unsharded():
+    """ISSUE tentpole: the Monte-Carlo objective kernel lays its
+    (S, R, G) simulation-lane axis over the forced 4-device mesh
+    (scenario-sharded inputs + lane-axis sharding constraint) and its
+    plans match the unsharded kernel argmin-exactly."""
+    _run_forced_device_script(_MC_SHARD_SCRIPT, "MC-SHARDED-OK")

@@ -23,6 +23,8 @@ BENCHES = {
                    "paper Sec.-6 extensions: Th1 MC, noisy channel, multi-device"),
     "fleet": ("benchmarks.bench_fleet",
               "fleet engine: batched vs scalar-loop planning + cache hit-rate"),
+    "serve": ("benchmarks.bench_serve",
+              "always-on planning service: warmup, zero-trace SLO, latency"),
     # roofline (reads dry-run artifacts)
     "roofline": ("benchmarks.roofline_report", "roofline aggregation"),
 }

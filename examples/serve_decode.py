@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
-from repro.launch.serve import greedy_generate
+from repro.launch.serve_decode import greedy_generate
 from repro.models import init_params
 
 ap = argparse.ArgumentParser()

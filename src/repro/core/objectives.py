@@ -327,6 +327,12 @@ class MonteCarloObjective:
     n_runs: int = 3
     seed: int = 0
     grid_points: int = 12  # MC is expensive: default to a coarse grid
+    #: floor on the batched kernel's padded update-timeline length.  The
+    #: fleet kernel pads its shared ``lax.scan`` to the batch's largest
+    #: update count; a serving layer sets this floor so every batch below
+    #: it compiles to ONE scan length (padded slots no-op, so plans are
+    #: unchanged — deliberately NOT part of ``cache_token``).
+    min_updates: int = 0
 
     def __post_init__(self):
         if self.X is None or self.y is None:
@@ -334,6 +340,9 @@ class MonteCarloObjective:
                              "data: MonteCarloObjective(X=..., y=...)")
         if self.n_runs < 1:
             raise ValueError(f"n_runs must be >= 1, got {self.n_runs}")
+        if self.min_updates < 0:
+            raise ValueError(
+                f"min_updates must be >= 0, got {self.min_updates}")
 
     def evaluate(self, scenario, consts, grid, rates):
         from repro.core.montecarlo import montecarlo_objective_grid

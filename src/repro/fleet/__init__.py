@@ -36,6 +36,7 @@ from repro.fleet.objective_kernels import (fleet_solve,
                                            unregister_objective_kernel)
 from repro.fleet.planner import (GRID_MODES, FleetPlan, FleetPlanner,
                                  PlanRecord)
+from repro.fleet.tracing import record_trace, trace_count, trace_events
 
 __all__ = [
     "ScenarioBatch", "corollary1_bound_jax",
@@ -45,4 +46,5 @@ __all__ = [
     "kernel_table", "kernel_table_version",
     "register_objective_kernel", "unregister_objective_kernel",
     "objective_kernel_version", "grid_objective_builder", "fleet_solve",
+    "record_trace", "trace_count", "trace_events",
 ]

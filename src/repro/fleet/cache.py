@@ -25,8 +25,9 @@ scenario.
 from __future__ import annotations
 
 import math
+import threading
 from collections import OrderedDict
-from typing import Hashable, Tuple
+from typing import Dict, Hashable, Tuple
 
 from repro.core.links import link_spec_for
 from repro.core.scenario import Scenario
@@ -80,11 +81,28 @@ def scenario_key(scenario: Scenario, sig_digits: int = 3) -> Tuple:
     )
 
 
+def _objective_label(objective) -> str:
+    """Stats-counter label for an objective: its registry id, or
+    ``"default"`` for ``None`` (the planner's default objective)."""
+    if objective is None:
+        return "default"
+    return str(getattr(objective, "objective_id", type(objective).__name__))
+
+
 class PlanCache:
     """LRU map ``(context, scenario_key) -> PlanRecord`` with hit/miss
     accounting.  ``context`` is any hashable describing the planning
     configuration the record is valid under (constants, grid width);
-    records from one configuration are invisible to another."""
+    records from one configuration are invisible to another.
+
+    Observability (what a serving stats layer reports): lifetime ``hits``
+    / ``misses`` totals, the same split PER OBJECTIVE id
+    (``hits_by_objective`` / ``misses_by_objective``), ``evictions``
+    (LRU pressure) and ``invalidations`` (entries dropped by
+    :meth:`invalidate`, e.g. on link-drift re-planning), plus the live
+    entry count ``size``.  All operations take an internal lock, so one
+    cache can back concurrent serving workers.
+    """
 
     def __init__(self, maxsize: int = 4096, sig_digits: int = 3):
         if maxsize < 1:
@@ -92,8 +110,13 @@ class PlanCache:
         self.maxsize = maxsize
         self.sig_digits = sig_digits
         self._store: "OrderedDict[Hashable, object]" = OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+        self.hits_by_objective: Dict[str, int] = {}
+        self.misses_by_objective: Dict[str, int] = {}
 
     def key(self, scenario: Scenario, context: Hashable = (),
             objective=None) -> Tuple:
@@ -104,35 +127,84 @@ class PlanCache:
             objective=None):
         """Cached record for this (quantised) scenario, or None (counted)."""
         k = self.key(scenario, context, objective)
-        rec = self._store.get(k)
-        if rec is None:
-            self.misses += 1
-            return None
-        self._store.move_to_end(k)
-        self.hits += 1
-        return rec
+        label = _objective_label(objective)
+        with self._lock:
+            rec = self._store.get(k)
+            if rec is None:
+                self.misses += 1
+                self.misses_by_objective[label] = \
+                    self.misses_by_objective.get(label, 0) + 1
+                return None
+            self._store.move_to_end(k)
+            self.hits += 1
+            self.hits_by_objective[label] = \
+                self.hits_by_objective.get(label, 0) + 1
+            return rec
 
     def put(self, scenario: Scenario, record,
             context: Hashable = (), objective=None) -> None:
         k = self.key(scenario, context, objective)
-        self._store[k] = record
-        self._store.move_to_end(k)
-        while len(self._store) > self.maxsize:
-            self._store.popitem(last=False)
+        with self._lock:
+            self._store[k] = record
+            self._store.move_to_end(k)
+            while len(self._store) > self.maxsize:
+                self._store.popitem(last=False)
+                self.evictions += 1
+
+    def invalidate(self, scenario: Scenario, context: Hashable = (),
+                   objective=None) -> bool:
+        """Drop the entry for this (quantised) scenario under ``context``
+        and ``objective``, returning whether one existed.  The serving
+        layer calls this when a session's OBSERVED link quality drifts
+        from what the cached plan assumed: the prefix-keyed entry —
+        ``(context, objective_token, scenario_key)`` — is removed so the
+        re-enqueued scenario (and every other session collapsing onto the
+        same quantised key) re-plans instead of replaying a stale answer.
+        Neither a hit nor a miss is counted; ``invalidations`` is."""
+        k = self.key(scenario, context, objective)
+        with self._lock:
+            if self._store.pop(k, None) is None:
+                return False
+            self.invalidations += 1
+            return True
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
+
+    @property
+    def size(self) -> int:
+        """Live entry count (alias of ``len``, for stats reporting)."""
+        return len(self)
 
     def __contains__(self, scenario: Scenario) -> bool:
-        return any(k[-1] == scenario_key(scenario, self.sig_digits)
-                   for k in self._store)
+        sig = scenario_key(scenario, self.sig_digits)
+        with self._lock:
+            return any(k[-1] == sig for k in self._store)
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def stats(self) -> Dict[str, object]:
+        """Consistent snapshot of every counter (one lock acquisition)."""
+        with self._lock:
+            return {
+                "hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate, "size": len(self._store),
+                "maxsize": self.maxsize, "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "hits_by_objective": dict(self.hits_by_objective),
+                "misses_by_objective": dict(self.misses_by_objective),
+            }
+
     def clear(self) -> None:
-        self._store.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._store.clear()
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
+            self.invalidations = 0
+            self.hits_by_objective = {}
+            self.misses_by_objective = {}

@@ -61,6 +61,7 @@ from repro.core.objectives import objective_spec
 from repro.core.pipeline import ridge_grad_sample, ridge_loss_full
 from repro.fleet.bounds_jax import corollary1_bound_jax
 from repro.fleet.link_kernels import kernel_table, kernel_table_version
+from repro.fleet.tracing import record_trace
 
 _BUILDERS: Dict[str, Callable] = {}
 _VERSION = 0
@@ -222,6 +223,9 @@ def _build_grid_solve(branches, value_fn, exact_arq: bool):
 
     def _core(N, T, union_no, tau_p, rates, rate_mask, grid,
               link_model_id, link_params, sigma, e0, contraction):
+        # runs once per TRACE (both the dense jit and _solve_windows
+        # funnel through this body) — the serving layer's retrace audit
+        record_trace(("grid", int(exact_arq)) + tuple(grid.shape))
         rate = rates[:, :, None]                                   # (S, R, 1)
         # (S, G) shared grid broadcasts over rates; a (S, R, G) window
         # grid (the coarse->fine pass) evaluates per-rate points
@@ -362,6 +366,7 @@ def _mc_solve_for(objective, link_version: int):
     def _solve(N, T, union_no, tau_p, rates, rate_mask, grid,
                link_model_id, link_params, *, max_updates,
                shard_lanes=False):
+        record_trace(("montecarlo",) + tuple(grid.shape) + (max_updates,))
         S, R = rates.shape
         G = grid.shape[-1]
         rate = rates[:, :, None]
@@ -456,7 +461,12 @@ def montecarlo_builder(objective) -> Callable:
     def solve(arrays, consts, shard, batch):
         del consts  # empirical objective
         fn = _mc_solve_for(objective, kernel_table_version())
-        max_updates = pow2ceil(max(1, batch.max_updates))
+        # the objective's min_updates floor pins the padded scan length
+        # for serving: every batch below the floor shares ONE shape
+        # (padded slots no-op, so plans are unaffected)
+        max_updates = pow2ceil(max(1, batch.max_updates,
+                                   int(getattr(objective, "min_updates",
+                                               0) or 0)))
         S = arrays["N"].shape[0]
         n_dev = len(jax.local_devices())
         lanes = S * arrays["rates"].shape[1] * arrays["grid"].shape[-1]

@@ -42,6 +42,7 @@ from repro.core.scenario import Scenario
 from repro.fleet.batch import ScenarioBatch
 from repro.fleet.cache import PlanCache
 from repro.fleet.objective_kernels import fleet_solve, pow2ceil
+from repro.fleet.tracing import trace_count
 
 #: Valid ``FleetPlanner.grid_mode`` values: ``"dense"`` (single-pass, the
 #: reference semantics and the documented escape hatch) and ``"refine"``
@@ -171,6 +172,14 @@ class FleetPlanner:
     shard: bool = True
     objective: Any = None
     grid_mode: str = "dense"
+    #: Round refined fine-pass widths up to the next POWER OF TWO instead
+    #: of the default data-tight rule (multiples of 8 with a tail guard,
+    #: exact otherwise).  Padding only repeats already-evaluated window
+    #: points, so plans are unchanged — but the set of fine-pass widths a
+    #: request stream can compile becomes enumerable from ``(G, hints)``
+    #: alone, which is what lets :meth:`warm` precompile EVERY shape a
+    #: serving configuration admits (the "zero traces after warmup" SLO).
+    pow2_refine_widths: bool = False
 
     def __post_init__(self):
         if self.grid_mode not in GRID_MODES:
@@ -187,6 +196,38 @@ class FleetPlanner:
             raise ValueError(
                 f"unknown grid_mode {mode!r}; valid: {GRID_MODES}")
         return mode
+
+    def _default_grid(self, batch: ScenarioBatch, objective) -> np.ndarray:
+        """The per-scenario default grid for this objective: ``grid_size``
+        wide, capped by the objective's own ``default_grid_size``."""
+        size = self.grid_size
+        own = getattr(objective, "default_grid_size", None)
+        if own is not None:
+            size = min(size, int(own))
+        return fleet_grid(batch.N, size)
+
+    @staticmethod
+    def _solve_arrays(batch: ScenarioBatch, grid: np.ndarray) -> dict:
+        """The kernel input dict (np.asarray: no copy when dtypes match)."""
+        return {
+            "N": np.asarray(batch.N, np.int64),
+            "T": np.asarray(batch.T, np.float64),
+            "union_no": batch.union_overhead,
+            "tau_p": np.asarray(batch.tau_p, np.float64),
+            "rates": np.asarray(batch.rates, np.float64),
+            "rate_mask": batch.rate_mask,
+            "grid": np.ascontiguousarray(grid),
+            "link_model_id": np.asarray(batch.link_model_id, np.int32),
+            "link_params": np.asarray(batch.link_params, np.float64),
+        }
+
+    def _pad_width(self, x: int, pad_multiple: int) -> int:
+        """Fine-pass width padding: next power of two under
+        ``pow2_refine_widths`` (enumerable shapes, for serving warmup),
+        else the data-tight multiple-of-``pad_multiple`` rule."""
+        if self.pow2_refine_widths:
+            return pow2ceil(int(x))
+        return -(-int(x) // pad_multiple) * pad_multiple
 
     def plan_batch(self,
                    batch: Union[ScenarioBatch, Sequence[Scenario]],
@@ -214,11 +255,7 @@ class FleetPlanner:
             batch = ScenarioBatch.from_scenarios(list(batch))
         S = len(batch)
         if grid is None:
-            size = self.grid_size
-            own = getattr(objective, "default_grid_size", None)
-            if own is not None:
-                size = min(size, int(own))
-            grid = fleet_grid(batch.N, size)
+            grid = self._default_grid(batch, objective)
         else:
             grid = np.asarray(grid, np.int64)
             if grid.ndim == 1:
@@ -227,17 +264,7 @@ class FleetPlanner:
                 raise ValueError(
                     f"grid has leading dim {grid.shape[0]}, want {S}")
 
-        arrays = {  # np.asarray: no copy when the dtype already matches
-            "N": np.asarray(batch.N, np.int64),
-            "T": np.asarray(batch.T, np.float64),
-            "union_no": batch.union_overhead,
-            "tau_p": np.asarray(batch.tau_p, np.float64),
-            "rates": np.asarray(batch.rates, np.float64),
-            "rate_mask": batch.rate_mask,
-            "grid": np.ascontiguousarray(grid),
-            "link_model_id": np.asarray(batch.link_model_id, np.int32),
-            "link_params": np.asarray(batch.link_params, np.float64),
-        }
+        arrays = self._solve_arrays(batch, grid)
         solve = fleet_solve(objective)
         out = None
         if mode == "refine":
@@ -299,7 +326,7 @@ class FleetPlanner:
         # nothing instead of a wasted coarse pass on top of the dense one
         w_ub = 2 * stride + 1 + (G - int(tail.min()) if tail is not None
                                  else 0)
-        if cpos.size + min(G, -(-w_ub // pad_multiple) * pad_multiple) >= G:
+        if cpos.size + min(G, self._pad_width(w_ub, pad_multiple)) >= G:
             return None, None  # two passes would outwork the dense solve
 
         arrays1 = dict(arrays,
@@ -311,7 +338,7 @@ class FleetPlanner:
         centers = cpos[np.asarray(centers1, np.int64)]         # (S, R)
 
         count = refine_window_bounds(centers, stride, G, tail)[-1]
-        W = min(G, -(-int(count.max()) // pad_multiple) * pad_multiple)
+        W = min(G, self._pad_width(int(count.max()), pad_multiple))
         if cpos.size + W >= G:
             return None, None  # the merged windows still cover the grid
 
@@ -330,6 +357,91 @@ class FleetPlanner:
             arrays2 = dict(arrays, grid=np.ascontiguousarray(win_grid))
         out2 = solve(arrays2, consts, self.shard, batch)
         return out2, np.asarray(out2["sel_grid"])
+
+    def cache_context(self, consts: BoundConstants,
+                      grid_mode: Optional[str] = None) -> tuple:
+        """The cache-key PREFIX ``plan_many`` scopes its entries under —
+        ``(consts, grid width, grid mode[, width rule])``.  Exposed so a
+        serving layer can address the exact entry a drifted session's
+        plan lives at (``PlanCache.invalidate``) without re-deriving the
+        planner's keying scheme."""
+        mode = self._resolve_grid_mode(grid_mode)
+        # pow2-padded refine widths can evaluate (strictly more) window
+        # points than the data-tight rule, so the two never share entries
+        return (consts, self.grid_size, mode) + \
+            (("pow2w",) if self.pow2_refine_widths else ())
+
+    def _warm_widths(self, G: int, stride: int, n_coarse: int) -> List[int]:
+        """Every fine-pass width a stream of ``plan_batch`` calls over a
+        ``G``-wide grid can reach under pow2 width padding: powers of two
+        from the narrowest possible window (``stride + 1``, a fully
+        edge-clamped bracket) up to the dense-fallback threshold."""
+        widths: List[int] = []
+        w = pow2ceil(stride + 1)
+        while n_coarse + w < G:
+            widths.append(w)
+            w *= 2
+        return widths
+
+    def warm(self, scenarios: Sequence[Scenario], consts: BoundConstants,
+             objective: Any = None, grid_mode: Optional[str] = None,
+             pad_to: Optional[int] = None) -> int:
+        """AOT warmup: compile every kernel shape that ``plan_batch`` /
+        ``plan_many`` calls with this batch signature can hit, and return
+        the number of fresh traces it cost.
+
+        ``scenarios`` fixes the signature — the padded batch length ``S``
+        (via ``pad_to``, e.g. a serving bucket), the rate width ``R`` and,
+        for the Monte-Carlo objective, the padded scan length (pin it with
+        the objective's ``min_updates`` floor).  The sweep compiles the
+        dense solve (also the refine fallback) and, in ``"refine"`` mode,
+        the coarse pass plus the fine pass at every reachable width.  The
+        width sweep is exhaustive only under ``pow2_refine_widths`` (the
+        data-tight default admits data-dependent widths no sweep can
+        enumerate); a planning service therefore runs with pow2 widths,
+        warms each configured ``(objective, grid_mode, bucket)`` and gets
+        the zero-traces-after-warmup guarantee the serving tests assert.
+        Results are discarded; the cache is never touched.
+        """
+        consts.validate()
+        objective = self._resolve_objective(objective)
+        mode = self._resolve_grid_mode(grid_mode)
+        batch = ScenarioBatch.from_scenarios(
+            _pad_batch(list(scenarios), pad_to))
+        grid = self._default_grid(batch, objective)
+        arrays = self._solve_arrays(batch, grid)
+        solve = fleet_solve(objective)
+        t0 = trace_count()
+        # dense pass — the "dense" mode solve AND the refine fallback
+        solve(arrays, consts, self.shard, batch)
+        if mode == "refine":
+            S, G = grid.shape
+            hints = refine_hints_for(objective)
+            stride = hints.stride or int(round(np.sqrt(G / 2.0)))
+            stride = max(2, min(int(stride), G - 1))
+            if G >= max(2, hints.min_grid):
+                cpos = coarse_indices(G, stride)
+                widths = self._warm_widths(G, stride, cpos.size)
+                if cpos.size >= 4 and widths:
+                    arrays1 = dict(
+                        arrays, grid=np.ascontiguousarray(grid[:, cpos]))
+                    solve(arrays1, consts, self.shard, batch)  # coarse pass
+                    centers = np.zeros((S, batch.n_rates), np.int64)
+                    tail_start = np.full(S, G, np.int64)
+                    for W in widths:
+                        if getattr(solve, "supports_refine_windows", False):
+                            arrays2 = dict(arrays, centers=centers,
+                                           tail_start=tail_start,
+                                           refine_stride=stride,
+                                           refine_width=W)
+                        else:  # host-built windows (e.g. Monte-Carlo)
+                            _, win_grid, _ = refine_grid(grid, centers,
+                                                         stride, width=W)
+                            arrays2 = dict(
+                                arrays,
+                                grid=np.ascontiguousarray(win_grid))
+                        solve(arrays2, consts, self.shard, batch)
+        return trace_count() - t0
 
     def plan_many(self, scenarios: Sequence[Scenario],
                   consts: BoundConstants,
@@ -362,7 +474,7 @@ class FleetPlanner:
                                  objective=objective, grid_mode=mode)
             return [fp.record(i) for i in range(len(scenarios))]
 
-        ctx = (consts, self.grid_size, mode)
+        ctx = self.cache_context(consts, mode)
         miss: "OrderedDict[tuple, List[int]]" = OrderedDict()
         for i, sc in enumerate(scenarios):
             rec = cache.get(sc, context=ctx, objective=objective)

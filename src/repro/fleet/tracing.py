@@ -1,0 +1,47 @@
+"""Trace accounting for the jitted fleet kernels.
+
+A planning SERVICE promises that after warmup no request ever pays a
+``jax.jit`` trace + compile (hundreds of milliseconds on the serving
+path, against a sub-millisecond solve).  That promise is only auditable
+if traces are observable, so every fleet kernel body calls
+:func:`record_trace` as its first statement: a jitted function's Python
+body runs exactly once per trace (never on cached executions), which
+makes the counter an exact retrace detector — the property the serving
+tests and the CI smoke assert with "zero traces after warmup".
+
+Events are tagged with the kernel kind and its shape signature
+``(kind, S, R, G[, scan])``, so the service's stats layer can report
+per-bucket compile counts and a warmup sweep can verify it covered
+every shape its configuration admits.  Counters are process-global and
+lock-protected (the service traces from worker threads).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Tuple
+
+_LOCK = threading.Lock()
+_EVENTS: Dict[Tuple, int] = {}
+_TOTAL = 0
+
+
+def record_trace(tag: Tuple) -> None:
+    """Count one trace of the kernel identified by ``tag`` (a hashable
+    ``(kind, *shape)`` tuple).  Called from inside jitted function bodies:
+    executes during tracing only, so the count equals the trace count."""
+    global _TOTAL
+    with _LOCK:
+        _EVENTS[tag] = _EVENTS.get(tag, 0) + 1
+        _TOTAL += 1
+
+
+def trace_count() -> int:
+    """Total traces recorded since process start (monotone)."""
+    with _LOCK:
+        return _TOTAL
+
+
+def trace_events() -> Dict[Tuple, int]:
+    """Snapshot of per-tag trace counts ``{(kind, *shape): n}``."""
+    with _LOCK:
+        return dict(_EVENTS)

@@ -37,171 +37,26 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.configs.edge_ridge import EDGE_RIDGE_PARAMS as EP
 from repro.core.bounds import BoundConstants
 from repro.core.links import link_spec, link_spec_for
-from repro.core.objectives import (BoundObjective, MarkovARQObjective,
-                                   MonteCarloObjective)
-from repro.core.scenario import (ErasureLink, FadingLink, GilbertElliottLink,
-                                 IdealLink, MultiDevice, Scenario,
-                                 SingleDevice)
+from repro.core.scenario import Scenario
 from repro.fleet import GRID_MODES, FleetPlanner, PlanCache, PlanRecord
+# The shared serving catalogue now lives in repro.serve.catalogue (it
+# serves both this one-shot driver and the always-on PlanningService);
+# re-exported here so existing imports of the plan_server module keep
+# working.
+from repro.serve.batcher import group_requests
+from repro.serve.catalogue import (ALL_MODELS, ALL_OBJECTIVES,  # noqa: F401
+                                   LINK_FACTORIES, OBJECTIVE_FACTORIES,
+                                   RATE_SET, default_consts,
+                                   make_montecarlo_objective, parse_models,
+                                   resolve_grid_modes, resolve_objectives,
+                                   synth_requests)
+from repro.serve.stats import percentiles
 
-RATE_SET = (1.0, 1.25, 1.5, 2.0, 3.0)
-
-
-def resolve_grid_modes(spec) -> Sequence[str]:
-    """Validate a grid-mode mix: "all", one mode, or a comma list of
-    :data:`repro.fleet.GRID_MODES`.  Unknown names raise ``ValueError``
-    (the CLI maps that to exit code 2) — serving policies mix refined
-    bound traffic with dense calibration traffic, and a typo silently
-    falling back to one mode would skew both streams."""
-    if spec == "all":
-        return GRID_MODES
-    names = (tuple(s.strip() for s in spec.split(",") if s.strip())
-             if isinstance(spec, str) else tuple(spec))
-    unknown = [m for m in names if m not in GRID_MODES]
-    if unknown:
-        raise ValueError(
-            f"unknown grid mode(s) {unknown}; available: {list(GRID_MODES)}")
-    if not names:
-        raise ValueError(f"no grid mode requested; "
-                         f"available: {list(GRID_MODES)}")
-    return names
-
-
-def default_consts() -> BoundConstants:
-    """The paper's edge-ridge bound constants (Sec. 5)."""
-    return BoundConstants(L=EP.L, c=EP.c, M=EP.M, M_G=EP.M_G, D=1.0,
-                          alpha=EP.alpha)
-
-
-def _draw_ideal(rng) -> IdealLink:
-    return IdealLink(rates=RATE_SET)
-
-
-def _draw_erasure(rng) -> ErasureLink:
-    return ErasureLink(beta=float(rng.uniform(0.05, 1.5)),
-                       p_base=float(rng.uniform(0.0, 0.5)), rates=RATE_SET)
-
-
-def _draw_fading(rng) -> FadingLink:
-    return FadingLink(snr=float(rng.uniform(2.0, 50.0)), rates=RATE_SET)
-
-
-def _draw_gilbert_elliott(rng) -> GilbertElliottLink:
-    p_good = float(rng.uniform(0.0, 0.2))
-    return GilbertElliottLink(
-        p_gb=float(rng.uniform(0.01, 0.3)),
-        p_bg=float(rng.uniform(0.2, 0.9)),
-        p_good=p_good,
-        p_bad=float(rng.uniform(p_good, 0.9)),
-        beta=float(rng.uniform(0.05, 1.0)), rates=RATE_SET)
-
-
-#: Synthetic device-class link factories, by model name (--models values).
-LINK_FACTORIES = {
-    "ideal": _draw_ideal,
-    "erasure": _draw_erasure,
-    "fading": _draw_fading,
-    "gilbert_elliott": _draw_gilbert_elliott,
-}
-
-#: The full mixed-model catalogue (every built-in channel family).
-ALL_MODELS = tuple(LINK_FACTORIES)
-
-
-def _make_montecarlo_objective() -> MonteCarloObjective:
-    """Small deterministic ridge task (the canonical generator, scaled
-    down) for Monte-Carlo objective serving."""
-    from repro.data.synthetic import make_regression_dataset
-
-    X, y, _ = make_regression_dataset(n=256, d=8, seed=0)
-    return MonteCarloObjective(X=X, y=y, n_runs=2, alpha=1e-3, seed=0)
-
-
-#: Planning-objective factories, by registry id (--objective values).
-OBJECTIVE_FACTORIES = {
-    "corollary1": BoundObjective,
-    "markov_arq": MarkovARQObjective,
-    "montecarlo": _make_montecarlo_objective,
-}
-
-#: The full mixed-objective catalogue (every built-in objective).
-ALL_OBJECTIVES = tuple(OBJECTIVE_FACTORIES)
-
-
-def resolve_objectives(spec) -> Dict[str, Any]:
-    """Instantiate the requested objectives ONCE each (instance identity
-    keys the jitted Monte-Carlo kernel cache).  ``spec`` is "all", a
-    comma-separated string, or a sequence of registry ids; unknown names
-    raise ``ValueError`` with the available ids.
-    """
-    if spec == "all":
-        names: Sequence[str] = ALL_OBJECTIVES
-    elif isinstance(spec, str):
-        names = tuple(s.strip() for s in spec.split(",") if s.strip())
-    else:
-        names = tuple(spec)
-    unknown = [o for o in names if o not in OBJECTIVE_FACTORIES]
-    if unknown:
-        raise ValueError(
-            f"unregistered planning objective(s) {unknown}; "
-            f"available: {sorted(OBJECTIVE_FACTORIES)}")
-    if not names:
-        raise ValueError("no planning objective requested; "
-                         f"available: {sorted(OBJECTIVE_FACTORIES)}")
-    return {name: OBJECTIVE_FACTORIES[name]() for name in names}
-
-
-def synth_requests(n: int, *, seed: int = 0, dup_frac: float = 0.5,
-                   n_classes: int = 64,
-                   models: Sequence[str] = ("erasure",),
-                   n_max: int = 32768) -> List[Scenario]:
-    """Heterogeneous request stream over a catalogue of device classes.
-
-    ``dup_frac`` of the requests resample a previously seen class with
-    tiny parameter jitter (below the cache's quantisation step), the rest
-    draw a fresh class — so the achievable cache hit-rate is ~``dup_frac``.
-    Each fresh class draws its link from one of ``models`` (keys of
-    :data:`LINK_FACTORIES`) uniformly, so ``models=ALL_MODELS`` yields a
-    stream mixing every channel family.  ``n_max`` caps the drawn dataset
-    sizes — Monte-Carlo serving simulates the update timeline, so its
-    streams use a small cap to bound the scan length.
-    """
-    unknown = [m for m in models if m not in LINK_FACTORIES]
-    if unknown:
-        raise ValueError(
-            f"unknown link model name(s) {unknown}; "
-            f"available: {sorted(LINK_FACTORIES)}")
-    if n_max <= 256:
-        raise ValueError(f"n_max must be > 256, got {n_max}")
-    rng = np.random.default_rng(seed)
-    classes: List[dict] = []
-
-    def fresh_class() -> dict:
-        N = int(rng.integers(256, n_max))
-        return dict(
-            N=N, T=float(rng.uniform(1.1, 3.0)) * N,
-            n_o=float(rng.uniform(1.0, 1000.0)),
-            tau_p=float(rng.choice([0.5, 1.0, 2.0])),
-            link=LINK_FACTORIES[models[int(rng.integers(len(models)))]](rng),
-            D=int(rng.choice([1, 1, 2, 4, 8])))
-
-    out: List[Scenario] = []
-    for _ in range(n):
-        if classes and rng.random() < dup_frac:
-            c = classes[int(rng.integers(len(classes)))]
-        else:
-            c = fresh_class()
-            if len(classes) < n_classes:
-                classes.append(c)
-        jitter = 1.0 + rng.uniform(-1e-5, 1e-5)   # below quantisation step
-        out.append(Scenario(
-            N=c["N"], T=c["T"] * jitter, n_o=c["n_o"], tau_p=c["tau_p"],
-            link=c["link"],
-            topology=MultiDevice(c["D"]) if c["D"] > 1 else SingleDevice()))
-    return out
+# historic private aliases, kept for callers of the old module layout
+_parse_models = parse_models
+_make_montecarlo_objective = make_montecarlo_objective
 
 
 @dataclass(frozen=True)
@@ -218,6 +73,12 @@ class ServeStats:
     requests_per_objective: Dict[str, int] = field(default_factory=dict)
     #: request counts keyed by grid mode ("dense" / "refine")
     requests_per_grid_mode: Dict[str, int] = field(default_factory=dict)
+    #: wall-clock per-micro-batch solve latency percentiles (milliseconds);
+    #: 0.0 on an empty stream — the batch is the serving unit, so these
+    #: are what a per-request SLO inherits from batching
+    batch_p50_ms: float = 0.0
+    batch_p99_ms: float = 0.0
+    batch_max_ms: float = 0.0
 
 
 def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
@@ -289,16 +150,10 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
 
     def _grouped(idxs):
         """Consecutive request indices grouped by (objective identity,
-        grid mode), first-seen order (one plan_many call per group)."""
-        groups: "Dict[tuple, List[int]]" = {}
-        order: List[tuple] = []
-        for i in idxs:
-            k = (id(objs[i]), modes[i])
-            if k not in groups:
-                groups[k] = []
-                order.append(k)
-            groups[k].append(i)
-        return [groups[k] for k in order]
+        grid mode), first-seen order (one plan_many call per group) —
+        the same canonical grouping the always-on batcher uses."""
+        return group_requests(list(idxs),
+                              key=lambda i: (id(objs[i]), modes[i]))
 
     # single-group streams pad every micro-batch to ONE kernel shape;
     # mixed streams pad each per-(objective, mode) sub-group to the next
@@ -327,14 +182,17 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
         else (0, 0)
     records: List[Optional[PlanRecord]] = [None] * len(requests)
     n_batches = 0
+    batch_seconds: List[float] = []
     t0 = time.perf_counter()
     for lo in range(0, len(requests), batch_size):
         for idxs in _grouped(range(lo, min(lo + batch_size,
                                            len(requests)))):
+            tb = time.perf_counter()
             recs = planner.plan_many(
                 [requests[i] for i in idxs], consts, cache=cache,
                 pad_to=pad_to, objective=objs[idxs[0]],
                 grid_mode=modes[idxs[0]])
+            batch_seconds.append(time.perf_counter() - tb)
             for i, rec in zip(idxs, recs):
                 records[i] = rec
             n_batches += 1
@@ -345,12 +203,15 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
         hit_rate = d_hits / d_total if d_total else 0.0
     else:
         hit_rate = 0.0
+    b50, b99 = percentiles(batch_seconds)
     return ServeStats(
         records=records, n_requests=len(requests), n_batches=n_batches,
         seconds=dt, plans_per_sec=len(requests) / dt if dt > 0 else 0.0,
         cache_hit_rate=hit_rate, requests_per_model=per_model,
         requests_per_objective=per_objective,
-        requests_per_grid_mode=per_mode)
+        requests_per_grid_mode=per_mode,
+        batch_p50_ms=b50 * 1e3, batch_p99_ms=b99 * 1e3,
+        batch_max_ms=(max(batch_seconds) * 1e3 if batch_seconds else 0.0))
 
 
 def _parse_models(spec: str) -> Sequence[str]:
@@ -413,6 +274,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
           f"micro-batches of <= {args.batch}")
     print(f"throughput: {stats.plans_per_sec:,.0f} plans/sec "
           f"({stats.seconds * 1e3:.1f} ms total, grid={args.grid})")
+    print(f"micro-batch latency: p50={stats.batch_p50_ms:.2f} ms "
+          f"p99={stats.batch_p99_ms:.2f} ms max={stats.batch_max_ms:.2f} ms")
     by_model = ", ".join(
         f"{link_spec(mid).name}[{mid}]={n}"
         for mid, n in sorted(stats.requests_per_model.items()))

@@ -1,73 +1,170 @@
-"""Serving driver: prefill a batch of requests, then decode tokens.
+"""Always-on planning service driver: warm up, serve a mixed stream, report.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+Entry point for :class:`repro.serve.PlanningService` — the long-lived
+front end over the fleet planning engine.  It AOT-warms every configured
+(objective, grid mode, batch bucket) executable, then feeds a synthetic
+heterogeneous request stream (every registered link model, mixed
+objectives and grid modes, drift-prone Gilbert-Elliott sessions) through
+the continuous micro-batcher and prints the service stats: enqueue-to-
+plan p50/p99, plans/sec, per-bucket compile/request counters, cache
+hit/miss/invalidation counters and the post-warmup trace count (the
+zero-trace SLO).
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --requests 2048 --buckets 64,256 --flush-ms 10 --grid 64 \
+      --models all --objective corollary1,markov_arq --policy link_aware
+
+Unknown model/objective/grid-mode/policy names exit with code 2 (usage
+error), like the other launch drivers.  The LLM decode driver that
+previously lived at this path is now ``repro.launch.serve_decode``.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import sys
+from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.configs.base import InputShape
-from repro.models import init_params, make_decode_step, make_prefill_step
-from repro.models.decode import init_cache
-
-
-def greedy_generate(cfg, params, prompts, gen_tokens: int, max_len: int):
-    """prompts: (B, P) int32.  Returns (B, gen_tokens)."""
-    b, p = prompts.shape
-    shape = InputShape("serve", max_len, b, "decode")
-    cache = init_cache(cfg, shape)
-    # empty-cache start: mark all slots invalid, then prefill token-by-token
-    cache = dict(cache)
-    if "k_pos" in cache and cache["k_pos"] is not None:
-        cache["k_pos"] = jnp.full_like(cache["k_pos"], -1)
-    step = jax.jit(make_decode_step(cfg, shape), donate_argnums=(1,))
-
-    tok = prompts[:, :1]
-    out = []
-    for pos in range(p + gen_tokens - 1):
-        logits, cache = step(params, cache,
-                             {"token": tok, "pos": jnp.asarray(pos, jnp.int32)})
-        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        if pos + 1 < p:
-            tok = prompts[:, pos + 1: pos + 2]  # teacher-forced prefill
-        else:
-            tok = nxt
-            out.append(nxt)
-    return jnp.concatenate(out, axis=1)
+from repro.fleet import GRID_MODES
+from repro.serve import (ALL_MODELS, ALL_OBJECTIVES, PlanningService,
+                         ServiceConfig, mc_update_floor, parse_models,
+                         policy_spec, resolve_grid_modes, resolve_objectives,
+                         synth_requests)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+def _parse_buckets(spec: str):
+    try:
+        buckets = tuple(int(s) for s in spec.split(",") if s.strip())
+    except ValueError as e:
+        raise ValueError(f"bad bucket list {spec!r}: {e}") from None
+    if not buckets:
+        raise ValueError(f"bad bucket list {spec!r}: no buckets")
+    return buckets
+
+
+def run_service(args) -> int:
+    """Build/warm the service, push the stream through, print stats."""
+    try:
+        models = parse_models(args.models)
+        objective_ids = tuple(resolve_objectives(args.objective))
+        grid_modes = tuple(resolve_grid_modes(args.grid_mode))
+        policy_spec(args.policy)  # fail fast on a typo'd policy id
+        config = ServiceConfig(
+            grid_size=args.grid, batch_buckets=_parse_buckets(args.buckets),
+            flush_interval=args.flush_ms / 1e3, objective_ids=objective_ids,
+            grid_modes=grid_modes, policy_id=args.policy,
+            cache_size=args.cache_size, sig_digits=args.sig_digits,
+            n_max=args.n_max, warm_models=models)
+        requests = synth_requests(args.requests, seed=args.seed,
+                                  dup_frac=args.dup, models=models,
+                                  n_max=args.n_max)
+    except (KeyError, ValueError) as e:
+        # KeyError str() wraps its message in quotes; unwrap for the CLI
+        print(f"error: {e.args[0] if isinstance(e, KeyError) else e}",
+              file=sys.stderr)
+        return 2
+
+    service = PlanningService(config)
+    n_traces = service.warmup()
+    print(f"warmup: {n_traces} kernel traces in "
+          f"{service.warmup_seconds:.2f}s over "
+          f"{len(service.objectives)} objective(s) x "
+          f"{len(config.grid_modes)} grid mode(s) x "
+          f"{len(config.batch_buckets)} bucket(s)")
+
+    # round-robin some requests through explicit (objective, mode)
+    # assignments so the stream exercises every configured pair even if
+    # the admission policy wouldn't route there; the rest go through the
+    # policy (objective=None) like un-annotated production traffic
+    rng = np.random.default_rng(args.seed + 1)
+    instances = list(service.objectives.values())
+    with service:
+        futures = []
+        for i, scenario in enumerate(requests):
+            if rng.random() < args.policy_frac:
+                futures.append(service.submit(scenario))
+            else:
+                obj = instances[i % len(instances)]
+                mode = config.grid_modes[i % len(config.grid_modes)]
+                futures.append(service.submit(scenario, objective=obj,
+                                              grid_mode=mode))
+        records = [f.result(timeout=args.timeout) for f in futures]
+    stats = service.stats()
+
+    print(f"served {stats.n_planned} plans in {stats.n_batches} "
+          f"micro-batches (flush <= {config.max_batch} or "
+          f"{args.flush_ms:.0f} ms)")
+    print(f"throughput: {stats.plans_per_sec:,.0f} plans/sec; "
+          f"enqueue-to-plan latency p50={stats.latency_p50_ms:.2f} ms "
+          f"p99={stats.latency_p99_ms:.2f} ms "
+          f"max={stats.latency_max_ms:.2f} ms")
+    post = stats.counters.get("post_warmup_traces", 0)
+    print(f"post-warmup jit traces: {post} "
+          f"({'SLO met' if post == 0 else 'SLO VIOLATED'})")
+    for (oid, mode, bucket), slot in sorted(stats.buckets.items()):
+        print(f"  bucket {oid}/{mode}/{bucket}: "
+              f"{slot['requests']} requests, {slot['batches']} batches, "
+              f"{slot['compiles']} compiles")
+    cache = stats.cache
+    print(f"cache: {cache.get('hits', 0)} hits / "
+          f"{cache.get('misses', 0)} misses "
+          f"(hit rate {cache.get('hit_rate', 0.0):.1%}, "
+          f"{cache.get('size', 0)} entries, "
+          f"{cache.get('invalidations', 0)} invalidations)")
+    if records:
+        sample = records[0]
+        print(f"sample plan: n_c={sample.n_c} rate={sample.rate} "
+              f"objective={sample.objective} "
+              f"bound={sample.bound_value:.4g}")
+    return 0 if post == 0 else 1
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=2048)
+    ap.add_argument("--buckets", default="64,256",
+                    help="comma-separated pow2 micro-batch pad shapes; the "
+                         "largest is the flush size")
+    ap.add_argument("--flush-ms", type=float, default=10.0,
+                    help="deadline: flush when the oldest pending request "
+                         "has waited this long")
+    ap.add_argument("--grid", type=int, default=64)
+    ap.add_argument("--cache-size", type=int, default=8192)
+    ap.add_argument("--sig-digits", type=int, default=3)
+    ap.add_argument("--dup", type=float, default=0.5,
+                    help="fraction of requests hitting a known device class")
+    ap.add_argument("--models", default="all",
+                    help="comma-separated link model mix, or 'all' "
+                         f"({', '.join(ALL_MODELS)})")
+    ap.add_argument("--objective", default="corollary1,markov_arq",
+                    help="comma-separated served objectives, or 'all' "
+                         f"({', '.join(ALL_OBJECTIVES)}); montecarlo "
+                         "warmup cost scales with --n-max")
+    ap.add_argument("--grid-mode", default="all",
+                    help="comma-separated served grid modes, or 'all' "
+                         f"({', '.join(GRID_MODES)})")
+    ap.add_argument("--policy", default="link_aware",
+                    help="admission policy id for un-annotated requests")
+    ap.add_argument("--policy-frac", type=float, default=0.5,
+                    help="fraction of the stream routed by the admission "
+                         "policy (the rest cycles through every configured "
+                         "(objective, mode) pair explicitly)")
+    ap.add_argument("--n-max", type=int, default=32768,
+                    help="cap on drawn dataset sizes (keep small when the "
+                         "mix includes the simulated montecarlo objective)")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="per-request future timeout, seconds")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg)
-    params = init_params(cfg, args.seed)
-    key = jax.random.PRNGKey(args.seed)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size, jnp.int32)
-    t0 = time.time()
-    toks = greedy_generate(cfg, params, prompts, args.gen,
-                           max_len=args.prompt_len + args.gen)
-    dt = time.time() - t0
-    total = args.batch * (args.prompt_len + args.gen)
-    print(f"served {args.batch} requests ({total} tokens) in {dt:.1f}s "
-          f"({total/dt:.0f} tok/s incl. compile)")
-    print("sample generations:", toks[:2].tolist())
+    args = ap.parse_args(argv)
+    if "montecarlo" in args.objective and args.n_max > 4096:
+        # the MC scan floor is ~6 n_max slots; keep warmup tractable
+        print(f"note: clamping --n-max {args.n_max} -> 2048 for the "
+              f"montecarlo mix (scan floor {mc_update_floor(args.n_max)} "
+              "slots is too heavy to warm)", file=sys.stderr)
+        args.n_max = 2048
+    return run_service(args)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Always-on planning service over the fleet engine.
+
+The serving subsystem: a long-lived :class:`PlanningService` that
+ingests planning requests from any thread, forms continuous
+size-or-deadline micro-batches grouped by (objective, grid mode), pads
+them to power-of-two buckets whose executables were AOT-compiled during
+warmup (zero post-warmup ``jax.jit`` traces), routes un-annotated
+requests through a pluggable admission policy, and re-plans live
+sessions when their observed channel drifts away from what the cached
+plan priced.  See ``README.md`` ("Serving") for the architecture sketch.
+"""
+from repro.serve.batcher import MicroBatcher, PlanRequest, group_requests
+from repro.serve.catalogue import (ALL_MODELS, ALL_OBJECTIVES,
+                                   LINK_FACTORIES, OBJECTIVE_FACTORIES,
+                                   RATE_SET, default_consts, mc_update_floor,
+                                   parse_models, resolve_grid_modes,
+                                   resolve_objectives, synth_requests)
+from repro.serve.policy import (AdmissionDecision, LinkAwarePolicy,
+                                PolicySpec, StaticPolicy, policy_spec,
+                                register_policy, registered_policies,
+                                unregister_policy)
+from repro.serve.service import PlanningService, ServiceConfig
+from repro.serve.sessions import Session, SessionTracker, reestimate_link
+from repro.serve.stats import ServiceStats, StatsRecorder, percentiles
+
+__all__ = [
+    "ALL_MODELS", "ALL_OBJECTIVES", "AdmissionDecision", "LINK_FACTORIES",
+    "LinkAwarePolicy", "MicroBatcher", "OBJECTIVE_FACTORIES",
+    "PlanRequest", "PlanningService", "PolicySpec", "RATE_SET",
+    "ServiceConfig", "ServiceStats", "Session", "SessionTracker",
+    "StaticPolicy", "StatsRecorder", "default_consts", "group_requests",
+    "mc_update_floor", "parse_models", "percentiles", "policy_spec",
+    "reestimate_link", "register_policy", "registered_policies",
+    "resolve_grid_modes", "resolve_objectives", "synth_requests",
+    "unregister_policy",
+]

@@ -1,0 +1,141 @@
+"""Pluggable admission policies: which objective/grid-mode per device class.
+
+The serving-side mirror of the link registry (:mod:`repro.core.links`)
+and the objective registry (:mod:`repro.core.objectives`): an admission
+policy looks at an incoming scenario plus the service's load signal and
+decides HOW it should be planned — which registered objective and which
+grid mode.  Policies register under a stable string ``policy_id`` via
+:func:`register_policy`; the service resolves a policy by id, and a
+plugin registered at runtime is immediately selectable (no service code
+changes), exactly like a plugged link model or objective.
+
+A policy must expose::
+
+    policy_id: str                                   # registry id
+    def admit(scenario, *, load: float) -> AdmissionDecision
+
+``load`` is the service's current queue depth over its flush batch size
+(0.0 = idle, >= 1.0 = at least one full micro-batch is already waiting).
+
+Built-ins:
+
+  * ``static`` — one fixed (objective, grid mode) for every request;
+  * ``link_aware`` — the serving policy the ROADMAP sketches: exact
+    burst-aware ``markov_arq`` planning for STICKY Gilbert-Elliott links
+    (burst structure the stationary bound mis-prices), refined
+    ``corollary1`` under load (the coarse->fine solve trades a little
+    certainty at the basin edges for 2-4x fewer evaluated lanes), dense
+    ``corollary1`` otherwise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.core.links import GilbertElliottLink
+from repro.core.scenario import Scenario
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    """What the policy chose for one request."""
+
+    objective_id: str
+    grid_mode: str
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    policy_id: str
+    cls: type
+
+
+_POLICIES: Dict[str, PolicySpec] = {}
+
+
+def register_policy(cls: type) -> type:
+    """Class decorator: register an admission policy under its
+    ``policy_id``.  Verifies the interface up front — a policy failing on
+    the first request would take the whole ingestion path down."""
+    pid = getattr(cls, "policy_id", None)
+    if not isinstance(pid, str) or not pid:
+        raise TypeError(
+            f"{cls.__name__} needs a non-empty string policy_id class var")
+    admit = getattr(cls, "admit", None)
+    if not callable(admit):
+        raise TypeError(f"{cls.__name__} must define "
+                        "admit(scenario, *, load) -> AdmissionDecision")
+    prior = _POLICIES.get(pid)
+    if prior is not None and prior.cls is not cls:
+        raise ValueError(
+            f"policy_id {pid!r} already registered by {prior.cls.__name__}")
+    _POLICIES[pid] = PolicySpec(policy_id=pid, cls=cls)
+    return cls
+
+
+def unregister_policy(policy_id: str) -> None:
+    """Remove a policy (plugin teardown / tests).  No-op if absent."""
+    _POLICIES.pop(policy_id, None)
+
+
+def policy_spec(policy_id: str) -> PolicySpec:
+    spec = _POLICIES.get(policy_id)
+    if spec is None:
+        raise KeyError(
+            f"unregistered admission policy {policy_id!r}; available: "
+            f"{sorted(_POLICIES)}")
+    return spec
+
+
+def registered_policies() -> Tuple[PolicySpec, ...]:
+    return tuple(_POLICIES.values())
+
+
+@register_policy
+@dataclass(frozen=True)
+class StaticPolicy:
+    """Every request gets the same (objective, grid mode)."""
+
+    policy_id = "static"
+
+    objective_id: str = "corollary1"
+    grid_mode: str = "dense"
+
+    def admit(self, scenario: Scenario, *, load: float) -> AdmissionDecision:
+        del scenario, load
+        return AdmissionDecision(self.objective_id, self.grid_mode)
+
+
+@register_policy
+@dataclass(frozen=True)
+class LinkAwarePolicy:
+    """Route by channel physics and backpressure.
+
+    A Gilbert-Elliott link whose states actually differ
+    (``p_good != p_bad``) and whose chain is STICKY — second eigenvalue
+    ``1 - p_gb - p_bg`` at least ``sticky_persistence``, i.e. state
+    memory long enough that failures cluster — is planned with the exact
+    burst-aware ``markov_arq`` objective (same kernel cost as the bound;
+    the stationary approximation under-prices exactly these chains).
+    Everything else gets ``corollary1``; when the queue backs up past
+    ``load_threshold`` flush batches, the coarse->fine ``refine`` mode
+    cuts the evaluated lanes per plan, otherwise ``dense`` keeps the
+    reference semantics.
+    """
+
+    policy_id = "link_aware"
+
+    sticky_persistence: float = 0.2
+    load_threshold: float = 1.0
+    burst_objective_id: str = "markov_arq"
+    default_objective_id: str = "corollary1"
+
+    def admit(self, scenario: Scenario, *, load: float) -> AdmissionDecision:
+        link = scenario.link
+        objective_id = self.default_objective_id
+        if isinstance(link, GilbertElliottLink) \
+                and link.p_good != link.p_bad \
+                and 1.0 - link.p_gb - link.p_bg >= self.sticky_persistence:
+            objective_id = self.burst_objective_id
+        mode = "refine" if load >= self.load_threshold else "dense"
+        return AdmissionDecision(objective_id, mode)

@@ -1,0 +1,379 @@
+"""The always-on planning service: warmup, continuous batching, drift.
+
+:class:`PlanningService` is the long-lived front end over the fleet
+planning engine — the piece that turns "a fast batched solver"
+(:class:`~repro.fleet.planner.FleetPlanner`) into "a service an edge
+population talks to":
+
+  1. **Ingestion + continuous batching** — :meth:`submit` enqueues from
+     any thread and returns a future; the
+     :class:`~repro.serve.batcher.MicroBatcher` worker flushes
+     size-or-deadline micro-batches grouped by (objective, grid mode)
+     and pads each group to a configured power-of-two BUCKET, so the
+     whole request stream exercises a small, fixed set of kernel shapes.
+  2. **Bucketed AOT warmup** — :meth:`warmup` sweeps
+     ``FleetPlanner.warm`` over every configured (objective, grid mode,
+     bucket), compiling the dense solve, the coarse pass and every
+     reachable pow2 fine-pass width up front.  After warmup NO request
+     pays a ``jax.jit`` trace — audited end to end by the
+     :mod:`repro.fleet.tracing` counters, surfaced per bucket in
+     :meth:`stats`, and asserted by the serving tests and CI smoke.
+  3. **Admission policy** — requests that don't name an objective/mode
+     are routed by a pluggable policy (:mod:`repro.serve.policy`), e.g.
+     exact burst-aware ``markov_arq`` for sticky Gilbert-Elliott links
+     and refined ``corollary1`` under backpressure.
+  4. **Drift-triggered re-planning** — devices open sessions and stream
+     observed per-attempt loss outcomes in (:meth:`observe`); when a
+     session's loss EWMA drifts past the threshold, the service
+     re-estimates the link (:func:`repro.serve.sessions.reestimate_link`),
+     INVALIDATES the prefix-keyed cache entry the stale plan lives at,
+     and re-enqueues the corrected scenario through the same batcher.
+  5. **Stats** — p50/p99 enqueue-to-plan latency, throughput, queue
+     depth, per-bucket request/batch/compile counters and the cache's
+     hit/miss/eviction/invalidation counters, in one snapshot.
+
+Plans are bitwise-identical to direct ``FleetPlanner.plan_batch`` calls:
+the service adds routing, batching and caching around the solver, never
+arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.core.bounds import BoundConstants
+from repro.core.scenario import Scenario
+from repro.fleet import GRID_MODES, FleetPlanner, PlanCache
+from repro.fleet.objective_kernels import pow2ceil
+from repro.fleet.tracing import trace_count
+from repro.serve.batcher import MicroBatcher, PlanRequest
+from repro.serve.catalogue import (ALL_MODELS, default_consts,
+                                   mc_update_floor, resolve_objectives,
+                                   synth_requests)
+from repro.serve.policy import policy_spec
+from repro.serve.sessions import Session, SessionTracker, reestimate_link
+from repro.serve.stats import ServiceStats, StatsRecorder
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    """Static configuration of a :class:`PlanningService`.
+
+    ``batch_buckets`` are the micro-batch pad shapes (ascending powers
+    of two; the largest is also the flush size ``max_batch``) — the
+    complete set of batch lengths the service will ever compile.
+    ``objective_ids`` name the served objectives (``montecarlo`` is
+    opt-in: its simulated scan makes warmup cost scale with ``n_max``).
+    ``n_max`` bounds the dataset sizes the service expects — it sizes
+    the Monte-Carlo scan-length floor so MC streams compile ONE scan
+    shape — and ``grid_modes`` restricts which solve strategies the
+    admission layer may hand out.
+    """
+
+    grid_size: int = 64
+    batch_buckets: Tuple[int, ...] = (64, 256)
+    flush_interval: float = 0.01
+    objective_ids: Tuple[str, ...] = ("corollary1", "markov_arq")
+    grid_modes: Tuple[str, ...] = GRID_MODES
+    policy_id: str = "link_aware"
+    cache_size: int = 8192
+    sig_digits: int = 3
+    n_max: int = 32768
+    drift_threshold: float = 0.1
+    ewma_alpha: float = 0.05
+    min_observations: int = 20
+    shard: bool = True
+    warm_models: Tuple[str, ...] = ALL_MODELS
+
+    def __post_init__(self):
+        if not self.batch_buckets:
+            raise ValueError("batch_buckets must name >= 1 bucket")
+        for b in self.batch_buckets:
+            if b < 1 or pow2ceil(int(b)) != int(b):
+                raise ValueError(
+                    f"batch_buckets must be powers of two, got "
+                    f"{self.batch_buckets}")
+        if tuple(sorted(self.batch_buckets)) != tuple(self.batch_buckets):
+            raise ValueError(
+                f"batch_buckets must ascend, got {self.batch_buckets}")
+        unknown = [m for m in self.grid_modes if m not in GRID_MODES]
+        if unknown:
+            raise ValueError(
+                f"unknown grid mode(s) {unknown}; valid: {list(GRID_MODES)}")
+        if not self.grid_modes:
+            raise ValueError("grid_modes must name >= 1 mode")
+
+    @property
+    def max_batch(self) -> int:
+        return int(self.batch_buckets[-1])
+
+
+class PlanningService:
+    """Long-lived planning service over the fleet engine (see module
+    docstring).  Lifecycle: ``warmup()`` (optional but what the
+    zero-trace SLO needs) -> ``start()`` -> ``submit``/``open_session``/
+    ``observe`` from any thread -> ``stop()`` (drains by default).  Also
+    a context manager: ``with PlanningService() as svc: ...`` starts and
+    drains it."""
+
+    def __init__(self, config: Optional[ServiceConfig] = None,
+                 consts: Optional[BoundConstants] = None, *,
+                 objectives: Optional[Dict[str, Any]] = None,
+                 policy: Any = None):
+        self.config = config if config is not None else ServiceConfig()
+        self.consts = consts if consts is not None else default_consts()
+        self.consts.validate()
+        cfg = self.config
+        # pow2 refine widths: the width set becomes enumerable, which is
+        # what lets warmup() cover EVERY shape the stream can reach
+        self.planner = FleetPlanner(grid_size=cfg.grid_size,
+                                    shard=cfg.shard,
+                                    pow2_refine_widths=True)
+        self.cache = PlanCache(maxsize=cfg.cache_size,
+                               sig_digits=cfg.sig_digits)
+        if objectives is not None:
+            self.objectives = dict(objectives)
+        else:
+            self.objectives = resolve_objectives(
+                cfg.objective_ids,
+                mc_min_updates=(mc_update_floor(cfg.n_max)
+                                if "montecarlo" in cfg.objective_ids
+                                else 0))
+        self.policy = policy if policy is not None \
+            else policy_spec(cfg.policy_id).cls()
+        self.sessions = SessionTracker(
+            drift_threshold=cfg.drift_threshold,
+            ewma_alpha=cfg.ewma_alpha,
+            min_observations=cfg.min_observations)
+        self.recorder = StatsRecorder()
+        self.batcher = MicroBatcher(self._plan_group,
+                                    max_batch=cfg.max_batch,
+                                    flush_interval=cfg.flush_interval)
+        self._lock = threading.Lock()
+        self.warmed = False
+        self.warmup_traces = 0
+        self.warmup_seconds = 0.0
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "PlanningService":
+        self.batcher.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        self.batcher.stop(drain=drain)
+
+    def __enter__(self) -> "PlanningService":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop(drain=exc_type is None)
+
+    def warmup(self, scenarios: Optional[Sequence[Scenario]] = None) -> int:
+        """AOT-compile every (objective, grid mode, bucket) executable
+        the configuration admits; returns the total trace count it cost.
+
+        ``scenarios`` fixes the warm batch signature (rate width, update
+        counts); the default draws a small synthetic mix over
+        ``config.warm_models``.  Restarts the stats clock afterwards so
+        reported throughput is steady-state serving, not compilation.
+        """
+        cfg = self.config
+        if scenarios is None:
+            scenarios = synth_requests(
+                min(8, cfg.batch_buckets[0]), seed=0, dup_frac=0.0,
+                models=cfg.warm_models, n_max=cfg.n_max)
+        scenarios = list(scenarios)
+        t0 = time.perf_counter()
+        total = 0
+        for oid, objective in self.objectives.items():
+            for mode in cfg.grid_modes:
+                for bucket in cfg.batch_buckets:
+                    traces = self.planner.warm(
+                        scenarios[:bucket], self.consts,
+                        objective=objective, grid_mode=mode,
+                        pad_to=bucket)
+                    total += traces
+                    self.recorder.record_bucket(oid, mode, bucket,
+                                                compiles=traces)
+        self.warmup_seconds = time.perf_counter() - t0
+        self.warmup_traces = total
+        self.warmed = True
+        self.recorder.restart_clock()
+        return total
+
+    # -- request path -------------------------------------------------------
+
+    def _resolve_objective(self, objective) -> Tuple[str, Any]:
+        """(objective_id, instance) for an instance, a registry id, or
+        ``None`` (caller routes through the admission policy first)."""
+        if isinstance(objective, str):
+            inst = self.objectives.get(objective)
+            if inst is None:
+                raise KeyError(
+                    f"objective {objective!r} is not served; configured: "
+                    f"{sorted(self.objectives)}")
+            return objective, inst
+        oid = getattr(objective, "objective_id", None)
+        if oid is None:
+            raise TypeError(
+                f"{type(objective).__name__} is not a registered planning "
+                "objective (no objective_id)")
+        return str(oid), objective
+
+    def _admit(self, scenario: Scenario, objective, grid_mode):
+        """Fill whichever of (objective, grid_mode) the caller left to
+        the admission policy, and validate the result."""
+        cfg = self.config
+        if objective is None or grid_mode is None:
+            load = self.batcher.depth / cfg.max_batch
+            decision = self.policy.admit(scenario, load=load)
+            if objective is None:
+                objective = decision.objective_id
+            if grid_mode is None:
+                grid_mode = decision.grid_mode
+        oid, inst = self._resolve_objective(objective)
+        if grid_mode not in cfg.grid_modes:
+            raise ValueError(
+                f"grid mode {grid_mode!r} is not served; configured: "
+                f"{list(cfg.grid_modes)}")
+        return oid, inst, grid_mode
+
+    def submit(self, scenario: Scenario, *, objective: Any = None,
+               grid_mode: Optional[str] = None,
+               session_id: Optional[str] = None) -> "Future":
+        """Enqueue one planning request; returns a future resolving to
+        its :class:`~repro.fleet.planner.PlanRecord`.  ``objective`` may
+        be a served instance, a registry id, or ``None``/``grid_mode``
+        ``None`` to let the admission policy decide."""
+        _, inst, mode = self._admit(scenario, objective, grid_mode)
+        request = PlanRequest(scenario=scenario, objective=inst,
+                              grid_mode=mode, session_id=session_id)
+        self.recorder.count("requests")
+        self.batcher.submit(request)
+        return request.future
+
+    def _chunk_buckets(self, n: int):
+        """Greedy bucket cover of ``n`` requests: repeatedly the largest
+        configured bucket that fits, then one padded smallest bucket for
+        the remainder — so a 100-request group costs 64+64 solve lanes,
+        not a single 256-lane solve (wasted pad lanes are bounded by the
+        smallest bucket, and every chunk shape is a warmed executable)."""
+        buckets = self.config.batch_buckets
+        out = []
+        while n > 0:
+            b = next((b for b in reversed(buckets) if b <= n), buckets[0])
+            out.append(int(b))
+            n -= min(int(b), n)
+        return out
+
+    def _plan_group(self, requests) -> None:
+        """Worker-side: solve one (objective, grid mode)-homogeneous
+        micro-batch through the cache and resolve its futures."""
+        objective = requests[0].objective
+        mode = requests[0].grid_mode
+        oid, _ = self._resolve_objective(objective)
+        lo = 0
+        for bucket in self._chunk_buckets(len(requests)):
+            chunk = requests[lo:lo + bucket]
+            lo += len(chunk)
+            traces0 = trace_count()
+            records = self.planner.plan_many(
+                [r.scenario for r in chunk], self.consts, cache=self.cache,
+                pad_to=bucket, objective=objective, grid_mode=mode)
+            traces = trace_count() - traces0
+            now = time.perf_counter()
+            self.recorder.record_bucket(oid, mode, bucket,
+                                        requests=len(chunk), batches=1,
+                                        compiles=traces)
+            self.recorder.count("batches")
+            self.recorder.count("planned", len(chunk))
+            if traces and self.warmed:
+                self.recorder.count("post_warmup_traces", traces)
+            for request, record in zip(chunk, records):
+                self.recorder.record_latency(now - request.enqueue_t)
+                if request.session_id is not None:
+                    self._deliver_to_session(request.session_id, record)
+                request.future.set_result(record)
+
+    # -- sessions and drift -------------------------------------------------
+
+    def open_session(self, session_id: str, scenario: Scenario, *,
+                     objective: Any = None,
+                     grid_mode: Optional[str] = None) -> "Future":
+        """Register a live session and enqueue its first plan.  The
+        returned future resolves to the initial plan; the session keeps
+        tracking the latest one (``service.session(id).plan``)."""
+        _, inst, mode = self._admit(scenario, objective, grid_mode)
+        session = Session(session_id=session_id, scenario=scenario,
+                          objective=inst, grid_mode=mode)
+        self.sessions.open(session)
+        session.replan_pending = True
+        return self.submit(scenario, objective=inst, grid_mode=mode,
+                           session_id=session_id)
+
+    def session(self, session_id: str) -> Session:
+        return self.sessions.get(session_id)
+
+    def close_session(self, session_id: str) -> Optional[Session]:
+        return self.sessions.close(session_id)
+
+    def _deliver_to_session(self, session_id: str, record) -> None:
+        try:
+            session = self.sessions.get(session_id)
+        except KeyError:
+            return  # closed while its plan was in flight
+        with self._lock:
+            session.plan = record
+            session.generation += 1
+            session.replan_pending = False
+
+    def observe(self, session_id: str, losses) -> Optional["Future"]:
+        """Stream a session's observed per-attempt loss outcomes
+        (iterable of bools, e.g. sampled from
+        ``link.make_loss_process``).  When the observed EWMA drifts past
+        the threshold, re-estimates the link, invalidates the stale
+        prefix-keyed cache entry and re-enqueues the corrected scenario
+        — returning the re-plan future (else ``None``)."""
+        session = self.sessions.get(session_id)
+        session.observe(losses)
+        if not self.sessions.drifted(session):
+            return None
+        self.recorder.count("drift_detected")
+        new_link = reestimate_link(session.scenario.link,
+                                   session.plan.rate, session.ewma)
+        if new_link is None:
+            self.recorder.count("drift_unactionable")
+            return None
+        with self._lock:
+            if session.replan_pending:
+                return None  # a racing observe already re-enqueued
+            session.replan_pending = True
+            session.replans += 1
+            stale = session.scenario
+            session.scenario = dataclasses.replace(stale, link=new_link)
+        # drop the stale plan for EVERY session collapsing onto this
+        # quantised key — the whole device class drifted, not one radio
+        context = self.planner.cache_context(self.consts, session.grid_mode)
+        self.cache.invalidate(stale, context=context,
+                              objective=session.objective)
+        self.recorder.count("drift_replans")
+        return self.submit(session.scenario, objective=session.objective,
+                           grid_mode=session.grid_mode,
+                           session_id=session_id)
+
+    # -- observability ------------------------------------------------------
+
+    def stats(self) -> ServiceStats:
+        self.recorder.count("sessions_open", 0)  # ensure key exists
+        snapshot = self.recorder.snapshot(queue_depth=self.batcher.depth,
+                                          cache_stats=self.cache.stats())
+        snapshot.counters["sessions_open"] = len(self.sessions)
+        snapshot.counters["idle_ticks"] = self.batcher.idle_ticks
+        snapshot.counters.setdefault("post_warmup_traces", 0)
+        snapshot.counters["warmup_traces"] = self.warmup_traces
+        return snapshot

@@ -1,0 +1,165 @@
+"""Session tracking and drift-triggered re-planning signals.
+
+A PLAN is a bet on link statistics.  The planner prices a
+Gilbert-Elliott link by its stationary (or exact Markov-reward) loss;
+the realised channel — what :meth:`LinkModel.make_loss_process` samples,
+one outcome per ARQ attempt — can drift away from that bet mid-session:
+the chain gets stickier, the bad state gets worse, interference moves
+in.  A session registers with the service, streams its observed
+per-attempt loss outcomes in, and this module decides when the plan's
+assumed loss probability and the observed loss rate have diverged far
+enough that replaying the cached plan is worse than re-planning.
+
+Drift detection: an exponentially-weighted moving average of the loss
+indicators (smoothing ``ewma_alpha``), armed only after
+``min_observations`` outcomes (the EWMA of three packets is noise).
+Drift fires when ``|ewma - plan.p_err| > drift_threshold``.
+
+Re-estimation: :func:`reestimate_link` maps the drifted observation back
+into link-model parameters so the re-planned scenario actually reflects
+the observed channel —
+
+  * ``GilbertElliottLink``: the observed loss rate pins a new stationary
+    bad-state occupancy ``pi_bad`` (inverting ``p = p_g + pi (p_b -
+    p_g)`` at the session's rate); the chain's mixing speed ``p_gb +
+    p_bg`` is preserved and re-split to hit the new ``pi_bad`` — the
+    burst STRUCTURE is kept, its occupancy re-fit;
+  * ``ErasureLink``: ``p_base`` is re-fit so ``p_err(rate)`` equals the
+    observation;
+  * any link exposing ``reestimate(rate, observed_loss)`` (plugin hook)
+    is deferred to;
+  * otherwise ``None`` — the service counts the drift but keeps the plan
+    (re-planning the identical scenario would return the identical
+    answer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.links import P_ERR_MAX
+from repro.core.scenario import ErasureLink, GilbertElliottLink, Scenario
+from repro.fleet.planner import PlanRecord
+
+
+def reestimate_link(link, rate: float, observed_loss: float):
+    """A new link instance consistent with ``observed_loss`` at ``rate``,
+    or ``None`` when the model offers nothing to re-fit."""
+    observed_loss = float(np.clip(observed_loss, 0.0, P_ERR_MAX))
+    hook = getattr(link, "reestimate", None)
+    if callable(hook):
+        return hook(rate, observed_loss)
+    if isinstance(link, GilbertElliottLink):
+        p_g, p_b = (float(min(p, P_ERR_MAX))
+                    for p in link._state_p_err(rate))
+        if p_b == p_g:
+            return None  # degenerate chain: occupancy is unobservable
+        mix = link.p_gb + link.p_bg
+        pi = float(np.clip((observed_loss - p_g) / (p_b - p_g), 0.0, 1.0))
+        # keep the mixing speed, re-split it to hit the observed
+        # occupancy; clamps keep both probabilities in [0, 1] and the
+        # chain ergodic (mix > 0 is inherited from the valid source link)
+        p_gb = float(np.clip(pi * mix, max(0.0, mix - 1.0), min(1.0, mix)))
+        p_gb = min(max(p_gb, 1e-9 * mix), mix - 1e-9 * mix)
+        return dataclasses.replace(link, p_gb=p_gb, p_bg=mix - p_gb)
+    if isinstance(link, ErasureLink):
+        decay = float(np.exp(-link.beta * max(float(rate) - 1.0, 0.0)))
+        p_base = 1.0 - (1.0 - observed_loss) / decay
+        return dataclasses.replace(
+            link, p_base=float(np.clip(p_base, 0.0, P_ERR_MAX)))
+    return None
+
+
+@dataclass
+class Session:
+    """One device's live planning session."""
+
+    session_id: str
+    scenario: Scenario
+    objective: object = None
+    grid_mode: str = "dense"
+    plan: Optional[PlanRecord] = None
+    ewma: Optional[float] = None       # observed loss EWMA (None = no data)
+    n_observations: int = 0
+    generation: int = 0                # bumps every time a new plan lands
+    replans: int = 0                   # drift-triggered re-plans
+    replan_pending: bool = False
+    opened_t: float = field(default_factory=time.perf_counter)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+
+    def observe(self, losses) -> Optional[float]:
+        """Fold per-attempt loss outcomes (iterable of bools) into the
+        EWMA; returns the updated EWMA (None while below the arming
+        threshold is handled by the tracker, not here)."""
+        with self._lock:
+            for lost in losses:
+                x = 1.0 if lost else 0.0
+                self.ewma = x if self.ewma is None else \
+                    (1.0 - self.ewma_alpha) * self.ewma + self.ewma_alpha * x
+                self.n_observations += 1
+            return self.ewma
+
+    # class-level default, overridable per session by the tracker
+    ewma_alpha: float = 0.05
+
+
+class SessionTracker:
+    """Registry of live sessions + the drift decision.
+
+    The tracker only DECIDES; the service acts (cache invalidation and
+    re-enqueue live there, where the cache context and batcher are).
+    """
+
+    def __init__(self, *, drift_threshold: float = 0.1,
+                 ewma_alpha: float = 0.05, min_observations: int = 20):
+        if not 0.0 < drift_threshold < 1.0:
+            raise ValueError(
+                f"drift_threshold must be in (0, 1), got {drift_threshold}")
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError(
+                f"ewma_alpha must be in (0, 1], got {ewma_alpha}")
+        self.drift_threshold = drift_threshold
+        self.ewma_alpha = ewma_alpha
+        self.min_observations = max(1, int(min_observations))
+        self._lock = threading.Lock()
+        self._sessions: dict = {}
+
+    def open(self, session: Session) -> Session:
+        session.ewma_alpha = self.ewma_alpha
+        with self._lock:
+            if session.session_id in self._sessions:
+                raise ValueError(
+                    f"session {session.session_id!r} is already open")
+            self._sessions[session.session_id] = session
+        return session
+
+    def get(self, session_id: str) -> Session:
+        with self._lock:
+            session = self._sessions.get(session_id)
+        if session is None:
+            raise KeyError(f"unknown session {session_id!r}; open it first")
+        return session
+
+    def close(self, session_id: str) -> Optional[Session]:
+        with self._lock:
+            return self._sessions.pop(session_id, None)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._sessions)
+
+    def drifted(self, session: Session) -> bool:
+        """True when the session's observed loss EWMA has moved more than
+        ``drift_threshold`` away from its CURRENT plan's priced loss."""
+        if session.plan is None or session.ewma is None \
+                or session.replan_pending:
+            return False
+        if session.n_observations < self.min_observations:
+            return False
+        return abs(session.ewma - session.plan.p_err) > self.drift_threshold

@@ -1,0 +1,116 @@
+"""Serving statistics: latency percentiles, throughput, counters.
+
+The service's observability layer.  :class:`StatsRecorder` is the
+mutable, lock-protected sink the worker threads write into;
+:meth:`StatsRecorder.snapshot` freezes it into a :class:`ServiceStats`
+for reporting.  Latencies are ENQUEUE-TO-PLAN: the clock starts when a
+request enters the ingestion queue and stops when its plan record is
+resolved, so queueing delay, micro-batch formation wait, cache lookup
+and the jitted solve are all inside the measured number — the figure an
+SLO is actually stated against, not the solve time alone.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ServiceStats:
+    """Immutable snapshot of a running (or drained) planning service."""
+
+    n_requests: int            # accepted into the queue
+    n_planned: int             # futures resolved with a plan
+    n_batches: int             # micro-batches flushed
+    queue_depth: int           # requests waiting at snapshot time
+    uptime_s: float            # since the recorder (re)started its clock
+    plans_per_sec: float       # n_planned / uptime
+    latency_p50_ms: float      # enqueue-to-plan percentiles
+    latency_p99_ms: float
+    latency_max_ms: float
+    #: per-(objective_id, grid_mode, bucket) request/batch/compile counts
+    buckets: Dict[Tuple[str, str, int], Dict[str, int]] = \
+        field(default_factory=dict)
+    counters: Dict[str, int] = field(default_factory=dict)
+    cache: Dict[str, object] = field(default_factory=dict)
+
+
+def percentiles(samples, qs=(50.0, 99.0)) -> Tuple[float, ...]:
+    """Percentiles of a sample list; zeros when there are no samples yet
+    (a fresh service must report finite stats, never NaN)."""
+    if not len(samples):
+        return tuple(0.0 for _ in qs)
+    arr = np.asarray(samples, np.float64)
+    return tuple(float(np.percentile(arr, q)) for q in qs)
+
+
+class StatsRecorder:
+    """Thread-safe accumulator behind :class:`ServiceStats`.
+
+    ``max_samples`` bounds the latency reservoir: an always-on service
+    cannot keep every sample, so beyond the cap the buffer keeps the most
+    recent window (percentiles then describe recent traffic, which is
+    what an SLO dashboard wants anyway).
+    """
+
+    def __init__(self, max_samples: int = 65536):
+        if max_samples < 1:
+            raise ValueError(f"max_samples must be >= 1, got {max_samples}")
+        self._lock = threading.Lock()
+        self._max_samples = max_samples
+        self._latencies: list = []
+        self._counters: Dict[str, int] = {}
+        self._buckets: Dict[Tuple[str, str, int], Dict[str, int]] = {}
+        self._t0 = time.perf_counter()
+
+    def restart_clock(self) -> None:
+        """Reset the throughput clock (called after warmup so reported
+        plans/sec describes steady-state serving, not compilation)."""
+        with self._lock:
+            self._t0 = time.perf_counter()
+
+    def count(self, name: str, k: int = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + k
+
+    def record_latency(self, seconds: float) -> None:
+        with self._lock:
+            self._latencies.append(seconds)
+            if len(self._latencies) > self._max_samples:
+                del self._latencies[:len(self._latencies) // 2]
+
+    def record_bucket(self, objective_id: str, grid_mode: str, bucket: int,
+                      *, requests: int = 0, batches: int = 0,
+                      compiles: int = 0) -> None:
+        """Accumulate per-(objective, mode, bucket) serving counters."""
+        key = (objective_id, grid_mode, int(bucket))
+        with self._lock:
+            slot = self._buckets.setdefault(
+                key, {"requests": 0, "batches": 0, "compiles": 0})
+            slot["requests"] += requests
+            slot["batches"] += batches
+            slot["compiles"] += compiles
+
+    def snapshot(self, *, queue_depth: int = 0,
+                 cache_stats=None) -> ServiceStats:
+        with self._lock:
+            uptime = max(time.perf_counter() - self._t0, 1e-9)
+            p50, p99 = percentiles(self._latencies)
+            lat_max = max(self._latencies) if self._latencies else 0.0
+            counters = dict(self._counters)
+            buckets = {k: dict(v) for k, v in self._buckets.items()}
+        n_planned = counters.get("planned", 0)
+        return ServiceStats(
+            n_requests=counters.get("requests", 0),
+            n_planned=n_planned,
+            n_batches=counters.get("batches", 0),
+            queue_depth=queue_depth, uptime_s=uptime,
+            plans_per_sec=n_planned / uptime,
+            latency_p50_ms=p50 * 1e3, latency_p99_ms=p99 * 1e3,
+            latency_max_ms=lat_max * 1e3,
+            buckets=buckets, counters=counters,
+            cache=dict(cache_stats) if cache_stats else {})

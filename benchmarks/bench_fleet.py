@@ -55,7 +55,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, save_artifact
+from benchmarks.common import bench_stamp, emit, save_artifact
 from repro.core import BoundPlanner, MarkovARQObjective, ObjectivePlanner
 from repro.core.planner import fleet_grid
 from repro.core.scenario import MultiDevice, Scenario, SingleDevice
@@ -191,9 +191,10 @@ def _write_bench_json(rows):
     for row in rows:
         merged[(row["objective"], row["grid_mode"], row["S"])] = row
     with open(BENCH_JSON, "w") as f:
-        json.dump({"bench": "fleet", "schema": ["objective", "grid_mode",
-                                                "S", "plans_per_sec",
-                                                "speedup"],
+        json.dump({"bench": "fleet", **bench_stamp(),
+                   "schema": ["objective", "grid_mode",
+                              "S", "plans_per_sec",
+                              "speedup"],
                    "rows": list(merged.values())}, f, indent=1)
 
 

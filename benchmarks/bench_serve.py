@@ -11,14 +11,19 @@ Exercises :class:`repro.serve.PlanningService` the way production would:
      pushed through the continuous micro-batcher from a producer thread.
   3. **Assertions** — the serving SLOs this PR introduces:
 
-       * ZERO post-warmup jit traces (the warmup covered every shape the
-         stream can reach — audited by the kernel-side trace counters);
+       * ZERO post-warmup jit traces, read from the UNIFIED metrics
+         registry (the same series a Prometheus scrape sees — so the
+         gate also validates the export path end to end);
+       * per-request phase spans SUM EXACTLY (<= 1 µs) to the reported
+         enqueue-to-plan latency, and the device-fenced solve fraction
+         clears a sanity floor (the spans are attributing real compute,
+         not noise);
        * enqueue-to-plan p99 under a generous bound (the flush deadline
          plus a worst-case solve; this is a smoke floor, not a perf
          target — CI boxes are noisy);
        * service throughput >= 0.5x the one-shot ``plan_server`` driver
-         on the SAME stream (continuous batching pays queueing overhead
-         but must stay in the same class as offline batching);
+         on the SAME stream — with span recording on, so this floor is
+         also the <= 5% span-overhead budget's enforcement point;
        * plans BITWISE-identical to direct ``FleetPlanner.plan_many``
          calls (the service adds routing, never arithmetic).
 
@@ -36,7 +41,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, save_artifact
+from benchmarks.common import bench_stamp, emit, save_artifact
 from repro.fleet import FleetPlanner, PlanCache
 from repro.launch.plan_server import serve as oneshot_serve
 from repro.serve import (ALL_MODELS, PlanningService, ServiceConfig,
@@ -53,8 +58,17 @@ N_MAX = 8192
 #: below this; tripping it means batching stalled, not that a solve was
 #: slow.
 P99_CEILING_S = 2.0
-#: continuous batching must stay in the same class as offline batching
+#: continuous batching must stay in the same class as offline batching;
+#: spans/histograms/metrics are ON during the measured stream, so this
+#: floor also bounds the observability overhead (a >5% span-recording
+#: tax would show up here long before it hit 50%)
 THROUGHPUT_FLOOR = 0.5
+#: the spans must attribute REAL device compute: over a whole stream the
+#: fenced solve share of enqueue-to-plan latency cannot round to zero
+SOLVE_FRACTION_FLOOR = 1e-3
+#: phase intervals are cut from one monotonic clock: sums are exact up
+#: to float addition error
+PHASE_SUM_TOL_S = 1e-6
 
 #: perf-trajectory artifact written at the repo root
 BENCH_JSON = os.path.join(
@@ -104,15 +118,39 @@ def run():
     with service:
         records, stream_s = _mixed_stream(service, requests, seed=32)
     stats = service.stats()
-    post_traces = stats.counters.get("post_warmup_traces", 0)
     service_pps = N_REQUESTS / stream_s
 
     # ---- zero post-warmup traces (the tentpole SLO) ------------------------
+    # read through the unified metrics registry, not the raw counter: the
+    # value a Prometheus scrape would see is the value the gate checks,
+    # and taking the snapshot parses the full exposition (an export
+    # regression fails here, not on a dashboard later)
+    metrics = service.metrics_snapshot()
+    post_traces = int(metrics["repro_serve_post_warmup_traces_total"][()])
+    assert post_traces == stats.counters.get("post_warmup_traces", 0), (
+        "metrics registry and raw counter disagree on post-warmup traces")
     assert post_traces == 0, (
         f"{post_traces} jit trace(s) after warmup — the bucketed AOT sweep "
         f"missed a shape the stream reached: {stats.buckets}")
     assert stats.n_planned == N_REQUESTS, (
         f"planned {stats.n_planned} of {N_REQUESTS} requests")
+
+    # ---- span decomposition ------------------------------------------------
+    spans = service.spans.snapshot()
+    assert spans, "no request spans recorded"
+    worst = max(abs(s.phase_sum - s.latency_s) for s in spans)
+    assert worst <= PHASE_SUM_TOL_S, (
+        f"phase spans do not sum to enqueue-to-plan latency "
+        f"(max gap {worst * 1e6:.2f} µs > {PHASE_SUM_TOL_S * 1e6:.0f} µs) "
+        "— a phase interval is missing or double-counted")
+    phases = stats.phases
+    assert phases["batch_wait"] > 0.0, (
+        "zero cumulative batch-wait over a whole stream: spans are not "
+        "measuring queueing")
+    assert stats.solve_fraction >= SOLVE_FRACTION_FLOOR, (
+        f"device-fenced solve fraction {stats.solve_fraction:.5f} is below "
+        f"{SOLVE_FRACTION_FLOOR} — solve attribution lost the actual "
+        "compute")
 
     # ---- latency SLO -------------------------------------------------------
     p99_s = stats.latency_p99_ms / 1e3
@@ -175,6 +213,12 @@ def run():
          f"S={N_REQUESTS} {service_pps:,.0f}plans/s "
          f"p50={stats.latency_p50_ms:.1f}ms p99={stats.latency_p99_ms:.1f}ms "
          f"post_warm_traces={post_traces} vs_oneshot={ratio:.2f}x")
+    means = service.spans.phase_means_ms()
+    emit("serve_phases", means["latency"] * 1e3,
+         f"batch_wait={means['batch_wait']:.2f}ms pad={means['pad']:.2f}ms "
+         f"cache={means['cache_lookup']:.2f}ms "
+         f"solve={means['solve']:.2f}ms resolve={means['resolve']:.2f}ms "
+         f"solve_frac={stats.solve_fraction:.3f}")
 
     rows = [{"objective": oid, "grid_mode": mode, "bucket": bucket,
              "requests": slot["requests"], "batches": slot["batches"],
@@ -182,6 +226,7 @@ def run():
             for (oid, mode, bucket), slot in sorted(stats.buckets.items())]
     payload = {
         "bench": "serve",
+        **bench_stamp(),
         "n_requests": N_REQUESTS, "grid_size": GRID_SIZE,
         "buckets": list(BUCKETS), "flush_interval_s": FLUSH_INTERVAL,
         "warmup_traces": warm_traces,
@@ -192,6 +237,9 @@ def run():
         "latency_p50_ms": stats.latency_p50_ms,
         "latency_p99_ms": stats.latency_p99_ms,
         "latency_max_ms": stats.latency_max_ms,
+        "phase_means_ms": means,
+        "solve_fraction": stats.solve_fraction,
+        "solve_device_seconds": phases.get("solve_device", 0.0),
         "oneshot_plans_per_sec": oneshot.plans_per_sec,
         "throughput_vs_oneshot": ratio,
         "cache": stats.cache,

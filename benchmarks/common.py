@@ -3,9 +3,36 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import time
+from datetime import datetime, timezone
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+#: BENCH_*.json schema: 2 adds the bench_stamp() provenance fields
+#: (schema_version, generated_utc, git_commit) so runs from different
+#: commits can be lined up into one perf trajectory (make_report.py).
+SCHEMA_VERSION = 2
+
+
+def bench_stamp() -> dict:
+    """Provenance stamp merged into every BENCH_*.json payload:
+    schema version, UTC generation time, and the git commit (``None``
+    outside a git checkout — artifacts must still be writable there)."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        commit = None
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "generated_utc": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "git_commit": commit,
+    }
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

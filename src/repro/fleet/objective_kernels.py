@@ -47,6 +47,7 @@ retrace rather than stale-dispatch.
 """
 from __future__ import annotations
 
+import time
 from functools import lru_cache, partial
 from typing import Callable, Dict
 
@@ -62,6 +63,7 @@ from repro.core.pipeline import ridge_grad_sample, ridge_loss_full
 from repro.fleet.bounds_jax import corollary1_bound_jax
 from repro.fleet.link_kernels import kernel_table, kernel_table_version
 from repro.fleet.tracing import record_trace
+from repro.obs.runtime import record_solve
 
 _BUILDERS: Dict[str, Callable] = {}
 _VERSION = 0
@@ -316,6 +318,9 @@ def grid_objective_builder(value_fn, exact_arq: bool = False) -> Callable:
             with enable_x64():
                 if shard:
                     arrays = _maybe_shard(arrays, S)
+                # device/host attribution: the fence makes the jitted
+                # call's duration the device portion, asarray the host's
+                t0 = time.perf_counter()
                 if stride is None:
                     out = dense_fn(sigma=consts.variance_floor,
                                    e0=consts.init_gap,
@@ -325,7 +330,11 @@ def grid_objective_builder(value_fn, exact_arq: bool = False) -> Callable:
                                  e0=consts.init_gap,
                                  contraction=consts.contraction,
                                  stride=stride, width=width, **arrays)
-                return {k: np.asarray(v) for k, v in out.items()}
+                jax.block_until_ready(out)
+                t1 = time.perf_counter()
+                res = {k: np.asarray(v) for k, v in out.items()}
+                record_solve(t1 - t0, time.perf_counter() - t1)
+                return res
         solve.supports_refine_windows = True
         return solve
 
@@ -475,8 +484,13 @@ def montecarlo_builder(objective) -> Callable:
         with enable_x64():
             if shard:
                 arrays = _maybe_shard(arrays, S)
+            t0 = time.perf_counter()
             out = fn(max_updates=max_updates, shard_lanes=shard, **arrays)
-            return {k: np.asarray(v) for k, v in out.items()}
+            jax.block_until_ready(out)
+            t1 = time.perf_counter()
+            res = {k: np.asarray(v) for k, v in out.items()}
+            record_solve(t1 - t0, time.perf_counter() - t1)
+            return res
 
     return solve
 

@@ -26,9 +26,10 @@ one device is visible and ``S`` divides evenly.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Any, List, Optional, Sequence, Union
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -42,7 +43,7 @@ from repro.core.scenario import Scenario
 from repro.fleet.batch import ScenarioBatch
 from repro.fleet.cache import PlanCache
 from repro.fleet.objective_kernels import fleet_solve, pow2ceil
-from repro.fleet.tracing import trace_count
+from repro.fleet.tracing import trace_delta
 
 #: Valid ``FleetPlanner.grid_mode`` values: ``"dense"`` (single-pass, the
 #: reference semantics and the documented escape hatch) and ``"refine"``
@@ -411,7 +412,13 @@ class FleetPlanner:
         grid = self._default_grid(batch, objective)
         arrays = self._solve_arrays(batch, grid)
         solve = fleet_solve(objective)
-        t0 = trace_count()
+        with trace_delta() as traces:
+            self._warm_sweep(solve, arrays, consts, batch, grid, mode,
+                             objective)
+        return traces.total
+
+    def _warm_sweep(self, solve, arrays, consts, batch, grid, mode,
+                    objective) -> None:
         # dense pass — the "dense" mode solve AND the refine fallback
         solve(arrays, consts, self.shard, batch)
         if mode == "refine":
@@ -441,14 +448,15 @@ class FleetPlanner:
                                 arrays,
                                 grid=np.ascontiguousarray(win_grid))
                         solve(arrays2, consts, self.shard, batch)
-        return trace_count() - t0
 
     def plan_many(self, scenarios: Sequence[Scenario],
                   consts: BoundConstants,
                   cache: Optional[PlanCache] = None,
                   pad_to: Optional[int] = None,
                   objective: Any = None,
-                  grid_mode: Optional[str] = None) -> List[PlanRecord]:
+                  grid_mode: Optional[str] = None,
+                  timings: Optional[Dict[str, float]] = None
+                  ) -> List[PlanRecord]:
         """Plan a request list, deduplicating through the cache.
 
         Cache hits (and in-batch duplicates, up to key quantisation) skip
@@ -462,20 +470,37 @@ class FleetPlanner:
         without cross-talk: a refined plan can never answer a dense
         calibration request for the same scenario, even when the two
         coincide.
+
+        ``timings``, when given, receives the phase attribution the
+        serving spans report: ``cache_lookup_s`` (quantised-key probes +
+        in-batch dedup) and ``solve_s`` (the ``plan_batch`` call,
+        including result write-back) are ADDED into the dict, so a caller
+        can pass one dict across several calls and read totals.
         """
         scenarios = list(scenarios)
         if not scenarios:
             return []
         objective = self._resolve_objective(objective)
         mode = self._resolve_grid_mode(grid_mode)
+
+        def charge(phase: str, t0: float) -> float:
+            now = time.perf_counter()
+            if timings is not None:
+                timings[phase] = timings.get(phase, 0.0) + (now - t0)
+            return now
+
         records: List[Optional[PlanRecord]] = [None] * len(scenarios)
         if cache is None:
+            t0 = time.perf_counter()
             fp = self.plan_batch(_pad_batch(scenarios, pad_to), consts,
                                  objective=objective, grid_mode=mode)
-            return [fp.record(i) for i in range(len(scenarios))]
+            out = [fp.record(i) for i in range(len(scenarios))]
+            charge("solve_s", t0)
+            return out
 
         ctx = self.cache_context(consts, mode)
         miss: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        t0 = time.perf_counter()
         for i, sc in enumerate(scenarios):
             rec = cache.get(sc, context=ctx, objective=objective)
             if rec is not None:
@@ -484,6 +509,7 @@ class FleetPlanner:
                 miss.setdefault(
                     cache.key(sc, context=ctx, objective=objective),
                     []).append(i)
+        t0 = charge("cache_lookup_s", t0)
         if miss:
             reps = [scenarios[idxs[0]] for idxs in miss.values()]
             fp = self.plan_batch(_pad_batch(reps, pad_to), consts,
@@ -494,4 +520,5 @@ class FleetPlanner:
                           objective=objective)
                 for i in idxs:
                     records[i] = rec
+            charge("solve_s", t0)
         return records  # type: ignore[return-value]

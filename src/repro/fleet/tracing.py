@@ -18,7 +18,9 @@ lock-protected (the service traces from worker threads).
 from __future__ import annotations
 
 import threading
-from typing import Dict, Tuple
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, Tuple
 
 _LOCK = threading.Lock()
 _EVENTS: Dict[Tuple, int] = {}
@@ -45,3 +47,46 @@ def trace_events() -> Dict[Tuple, int]:
     """Snapshot of per-tag trace counts ``{(kind, *shape): n}``."""
     with _LOCK:
         return dict(_EVENTS)
+
+
+def trace_count_for(tag: Tuple) -> int:
+    """Traces recorded for one specific ``(kind, *shape)`` tag."""
+    with _LOCK:
+        return _EVENTS.get(tag, 0)
+
+
+@dataclass
+class TraceDelta:
+    """Traces recorded inside a :func:`trace_delta` block.  ``total`` and
+    ``by_tag`` are live while the block runs and frozen at exit;
+    ``by_tag`` keeps only tags whose count changed."""
+
+    total: int = 0
+    by_tag: Dict[Tuple, int] = field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return self.total > 0
+
+
+@contextmanager
+def trace_delta() -> Iterator[TraceDelta]:
+    """Count traces recorded within the block — the canonical replacement
+    for hand-rolled ``t0 = trace_count(); ...; trace_count() - t0``
+    subtraction, which silently double-counts when the two reads are
+    interleaved with another thread's bracket.  The delta here is still
+    process-global (traces ARE global state), but the bracketing is one
+    expression, so callers cannot mismatch the reads."""
+    with _LOCK:
+        total0 = _TOTAL
+        events0 = dict(_EVENTS)
+    delta = TraceDelta()
+    try:
+        yield delta
+    finally:
+        with _LOCK:
+            delta.total = _TOTAL - total0
+            delta.by_tag = {
+                tag: n - events0.get(tag, 0)
+                for tag, n in _EVENTS.items()
+                if n - events0.get(tag, 0)
+            }

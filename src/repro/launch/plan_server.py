@@ -46,6 +46,7 @@ from repro.fleet import GRID_MODES, FleetPlanner, PlanCache, PlanRecord
 # re-exported here so existing imports of the plan_server module keep
 # working.
 from repro.serve.batcher import group_requests
+from repro.serve.export import oneshot_metrics
 from repro.serve.catalogue import (ALL_MODELS, ALL_OBJECTIVES,  # noqa: F401
                                    LINK_FACTORIES, OBJECTIVE_FACTORIES,
                                    RATE_SET, default_consts,
@@ -244,6 +245,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="cap on drawn dataset sizes (keep small when the "
                          "mix includes the simulated montecarlo objective)")
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--metrics-textfile", default=None,
+                    help="write the run's Prometheus text exposition here "
+                         "(repro_plan_server_* families + cache + traces)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -296,6 +300,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"sample plan: n_c={sample.n_c} rate={sample.rate} "
               f"objective={sample.objective} "
               f"bound={sample.bound_value:.4g}")
+    if args.metrics_textfile:
+        oneshot_metrics(stats, cache).write_textfile(args.metrics_textfile)
+        print(f"metrics: wrote Prometheus textfile {args.metrics_textfile}")
     return 0
 
 

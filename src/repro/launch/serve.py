@@ -12,7 +12,17 @@ zero-trace SLO).
 
   PYTHONPATH=src python -m repro.launch.serve \
       --requests 2048 --buckets 64,256 --flush-ms 10 --grid 64 \
-      --models all --objective corollary1,markov_arq --policy link_aware
+      --models all --objective corollary1,markov_arq --policy link_aware \
+      --metrics-textfile metrics.prom --journal events.jsonl
+
+Observability hooks: ``--metrics-textfile`` dumps the unified Prometheus
+exposition (optionally every ``--metrics-interval`` seconds from a
+background thread, node-exporter textfile style, plus a final dump);
+``--journal`` appends every audit event (warmup, drift, session
+lifecycle) to a JSONL file; ``--profile-dir`` wraps the serving stream
+in a ``jax.profiler`` trace.  The final report includes the per-phase
+latency breakdown (batch-wait / pad / cache-lookup / solve / resolve)
+and the device-fenced solve fraction.
 
 Unknown model/objective/grid-mode/policy names exit with code 2 (usage
 error), like the other launch drivers.  The LLM decode driver that
@@ -22,11 +32,13 @@ from __future__ import annotations
 
 import argparse
 import sys
+import threading
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.fleet import GRID_MODES
+from repro.obs import profile_capture
 from repro.serve import (ALL_MODELS, ALL_OBJECTIVES, PlanningService,
                          ServiceConfig, mc_update_floor, parse_models,
                          policy_spec, resolve_grid_modes, resolve_objectives,
@@ -55,7 +67,8 @@ def run_service(args) -> int:
             flush_interval=args.flush_ms / 1e3, objective_ids=objective_ids,
             grid_modes=grid_modes, policy_id=args.policy,
             cache_size=args.cache_size, sig_digits=args.sig_digits,
-            n_max=args.n_max, warm_models=models)
+            n_max=args.n_max, warm_models=models,
+            journal_path=args.journal)
         requests = synth_requests(args.requests, seed=args.seed,
                                   dup_frac=args.dup, models=models,
                                   n_max=args.n_max)
@@ -79,17 +92,36 @@ def run_service(args) -> int:
     # policy (objective=None) like un-annotated production traffic
     rng = np.random.default_rng(args.seed + 1)
     instances = list(service.objectives.values())
-    with service:
-        futures = []
-        for i, scenario in enumerate(requests):
-            if rng.random() < args.policy_frac:
-                futures.append(service.submit(scenario))
-            else:
-                obj = instances[i % len(instances)]
-                mode = config.grid_modes[i % len(config.grid_modes)]
-                futures.append(service.submit(scenario, objective=obj,
-                                              grid_mode=mode))
-        records = [f.result(timeout=args.timeout) for f in futures]
+
+    # optional background metrics dumper: a node-exporter-style textfile
+    # refreshed every --metrics-interval seconds while the stream runs
+    dumper_stop = threading.Event()
+    dumper = None
+    if args.metrics_textfile and args.metrics_interval > 0:
+        def _dump_loop():
+            while not dumper_stop.wait(args.metrics_interval):
+                service.metrics.write_textfile(args.metrics_textfile)
+        dumper = threading.Thread(target=_dump_loop, daemon=True,
+                                  name="metrics-dumper")
+        dumper.start()
+
+    try:
+        with profile_capture(args.profile_dir), service:
+            futures = []
+            for i, scenario in enumerate(requests):
+                if rng.random() < args.policy_frac:
+                    futures.append(service.submit(scenario))
+                else:
+                    obj = instances[i % len(instances)]
+                    mode = config.grid_modes[i % len(config.grid_modes)]
+                    futures.append(service.submit(scenario, objective=obj,
+                                                  grid_mode=mode))
+            records = [f.result(timeout=args.timeout) for f in futures]
+    finally:
+        dumper_stop.set()
+        if dumper is not None:
+            dumper.join(timeout=5.0)
+        service.journal.close()
     stats = service.stats()
 
     print(f"served {stats.n_planned} plans in {stats.n_batches} "
@@ -102,6 +134,16 @@ def run_service(args) -> int:
     post = stats.counters.get("post_warmup_traces", 0)
     print(f"post-warmup jit traces: {post} "
           f"({'SLO met' if post == 0 else 'SLO VIOLATED'})")
+    means = service.spans.phase_means_ms()
+    breakdown = " ".join(f"{name}={means[name]:.2f}"
+                         for name in ("batch_wait", "pad", "cache_lookup",
+                                      "solve", "resolve"))
+    print(f"phase breakdown (mean ms/request): {breakdown} "
+          f"| latency={means['latency']:.2f}")
+    print(f"solve fraction: {stats.solve_fraction:.1%} of enqueue-to-plan "
+          f"latency (device-fenced "
+          f"{stats.phases.get('solve_device', 0.0):.3f}s of "
+          f"{stats.phases.get('solve', 0.0):.3f}s solve)")
     for (oid, mode, bucket), slot in sorted(stats.buckets.items()):
         print(f"  bucket {oid}/{mode}/{bucket}: "
               f"{slot['requests']} requests, {slot['batches']} batches, "
@@ -117,6 +159,13 @@ def run_service(args) -> int:
         print(f"sample plan: n_c={sample.n_c} rate={sample.rate} "
               f"objective={sample.objective} "
               f"bound={sample.bound_value:.4g}")
+    if args.metrics_textfile:
+        service.metrics.write_textfile(args.metrics_textfile)
+        print(f"metrics: wrote Prometheus textfile "
+              f"{args.metrics_textfile}")
+    if args.journal:
+        print(f"journal: {service.journal.emitted} events appended to "
+              f"{args.journal}")
     return 0 if post == 0 else 1
 
 
@@ -155,6 +204,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "mix includes the simulated montecarlo objective)")
     ap.add_argument("--timeout", type=float, default=120.0,
                     help="per-request future timeout, seconds")
+    ap.add_argument("--metrics-textfile", default=None,
+                    help="write the Prometheus text exposition here (final "
+                         "dump always; periodic with --metrics-interval)")
+    ap.add_argument("--metrics-interval", type=float, default=0.0,
+                    help="refresh --metrics-textfile every N seconds from "
+                         "a background thread while serving (0 = final "
+                         "dump only)")
+    ap.add_argument("--journal", default=None,
+                    help="append audit events (warmup, drift, session "
+                         "lifecycle) to this JSONL file")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the serving "
+                         "stream into this directory")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if "montecarlo" in args.objective and args.n_max > 4096:

@@ -1,0 +1,102 @@
+"""JSONL event journal: the serving audit log.
+
+Counters say HOW MANY drift re-plans happened; the journal says WHICH
+session drifted, when, from what observed loss, and what the service did
+— the record an operator replays after an incident.  Events are plain
+dicts stamped with a wall-clock ``ts`` and a ``kind``; they live in a
+bounded in-memory ring (for ``tail()`` and the per-kind counters the
+metrics layer exports) and, when a path is given, are appended to a
+JSONL file one event per line — the exporter format the CLI's
+``--journal`` flag wires up.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+
+def read_jsonl(path: str) -> List[dict]:
+    """Parse a JSONL file back into event dicts (strict: a malformed
+    line raises — an audit log that silently skips records is worse than
+    none)."""
+    out: List[dict] = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: bad JSONL line: {e}") \
+                    from None
+    return out
+
+
+class EventJournal:
+    """Thread-safe bounded event ring with optional JSONL file sink.
+
+    ``emit`` stamps ``ts`` (``time.time()``, wall clock: audit logs are
+    correlated with external systems, unlike the spans' monotonic clock)
+    and appends; the file (when configured) is opened lazily on first
+    emit and written line-buffered so a crash loses at most the final
+    event.  ``close()`` (or context-manager exit) flushes and detaches
+    the sink; in-memory emission keeps working afterwards.
+    """
+
+    def __init__(self, capacity: int = 4096, path: Optional[str] = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.path = path
+        self._lock = threading.Lock()
+        self._ring: Deque[dict] = deque(maxlen=capacity)
+        self._counts: Dict[str, int] = {}
+        self._count = 0
+        self._file = None
+        self._closed = False
+
+    def emit(self, kind: str, **fields) -> dict:
+        event = {"ts": time.time(), "kind": str(kind), **fields}
+        line = json.dumps(event, default=str, sort_keys=True)
+        with self._lock:
+            self._ring.append(event)
+            self._counts[event["kind"]] = \
+                self._counts.get(event["kind"], 0) + 1
+            self._count += 1
+            if self.path is not None and not self._closed:
+                if self._file is None:
+                    self._file = open(self.path, "a", buffering=1)
+                self._file.write(line + "\n")
+        return event
+
+    def counts(self) -> Dict[str, int]:
+        """Lifetime per-kind event counts (survive ring eviction)."""
+        with self._lock:
+            return dict(self._counts)
+
+    @property
+    def emitted(self) -> int:
+        with self._lock:
+            return self._count
+
+    def tail(self, n: int = 20) -> List[dict]:
+        """The most recent ``n`` events, oldest first."""
+        with self._lock:
+            events = list(self._ring)
+        return events[-max(0, int(n)):]
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            if self._file is not None:
+                self._file.close()
+                self._file = None
+
+    def __enter__(self) -> "EventJournal":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

@@ -1,0 +1,315 @@
+"""MetricsRegistry: one snapshot over every counter source, exportable.
+
+The serving stack grew counters in four places — ``StatsRecorder``,
+``PlanCache.stats()``, the ``repro.fleet.tracing`` trace events, and the
+session drift audit log — each with its own snapshot call and naming.
+:class:`MetricsRegistry` unifies them: sources register a zero-argument
+callable returning :class:`Metric` families, ``collect()`` merges them
+(same name + kind merge their samples; a name registered under two KINDS
+raises — that is a bug, not a merge), and the result renders as
+Prometheus text exposition (:func:`render_prometheus`).
+
+The registry's :meth:`~MetricsRegistry.snapshot` is deliberately
+``parse_exposition(render_prometheus(collect()))`` — every programmatic
+read round-trips through the wire format, so an export that stopped
+parsing fails the first test or CI gate that looks at any metric, not a
+Prometheus scrape three deploys later.
+
+:func:`parse_exposition` is a STRICT parser of the Prometheus text
+format (names, label escaping, float values, histogram structure:
+``le``-cumulative monotonicity and ``_sum``/``_count`` presence).  It is
+dependency-free on purpose: CI validates the textfile dump with it, and
+``prometheus_client`` — when installed — is only a cross-check in the
+test suite, never a requirement.
+"""
+from __future__ import annotations
+
+import math
+import re
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple, Union
+
+from repro.obs.hist import LogHistogram
+
+KINDS = ("counter", "gauge", "histogram")
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_NAME_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+# one sample line: name, optional {labels}, value (labels parsed apart)
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{(.*)\})?\s+(\S+)$")
+_LABEL_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+Labels = Tuple[Tuple[str, str], ...]
+Value = Union[float, LogHistogram]
+
+
+def _labels_key(labels: Dict[str, str]) -> Labels:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+@dataclass
+class Metric:
+    """One metric family: a name, a kind, and labelled samples.
+
+    ``samples`` maps a label dict to a float (counter/gauge) or a
+    :class:`~repro.obs.hist.LogHistogram` (histogram).  Counter names
+    follow the Prometheus convention of a ``_total`` suffix; histogram
+    values render as ``_bucket``/``_sum``/``_count`` series.
+    """
+
+    name: str
+    kind: str
+    help: str = ""
+    samples: List[Tuple[Dict[str, str], Value]] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not _NAME_RE.match(self.name):
+            raise ValueError(f"invalid metric name {self.name!r}")
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"invalid metric kind {self.kind!r}; valid: {KINDS}")
+
+    def add(self, value: Value, **labels) -> "Metric":
+        for k in labels:
+            if not _LABEL_NAME_RE.match(k):
+                raise ValueError(f"invalid label name {k!r}")
+        self.samples.append((dict(labels), value))
+        return self
+
+
+def _escape_label(v: str) -> str:
+    return v.replace("\\", r"\\").replace("\n", r"\n").replace('"', r'\"')
+
+
+def _escape_help(v: str) -> str:
+    return v.replace("\\", r"\\").replace("\n", r"\n")
+
+
+def _fmt_value(v: float) -> str:
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    f = float(v)
+    return repr(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+def _render_labels(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{_escape_label(str(v))}"'
+                     for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+def render_prometheus(metrics: Sequence[Metric]) -> str:
+    """Prometheus text exposition (format version 0.0.4) of the metric
+    families, deterministically ordered (by name, then label set) so
+    textfile dumps diff cleanly between scrapes."""
+    lines: List[str] = []
+    for m in sorted(metrics, key=lambda m: m.name):
+        if m.help:
+            lines.append(f"# HELP {m.name} {_escape_help(m.help)}")
+        lines.append(f"# TYPE {m.name} {m.kind}")
+        samples = sorted(m.samples, key=lambda s: _labels_key(s[0]))
+        for labels, value in samples:
+            if m.kind == "histogram":
+                if not isinstance(value, LogHistogram):
+                    raise TypeError(
+                        f"{m.name}: histogram samples must be LogHistogram, "
+                        f"got {type(value).__name__}")
+                for le, n in value.cumulative():
+                    ll = dict(labels)
+                    ll["le"] = "+Inf" if math.isinf(le) else _fmt_value(le)
+                    lines.append(
+                        f"{m.name}_bucket{_render_labels(ll)} {n}")
+                lines.append(f"{m.name}_sum{_render_labels(labels)} "
+                             f"{_fmt_value(value.sum)}")
+                lines.append(f"{m.name}_count{_render_labels(labels)} "
+                             f"{value.count}")
+            else:
+                lines.append(f"{m.name}{_render_labels(labels)} "
+                             f"{_fmt_value(float(value))}")
+    return "\n".join(lines) + "\n"
+
+
+def _unescape_label(v: str) -> str:
+    out, i = [], 0
+    while i < len(v):
+        c = v[i]
+        if c == "\\" and i + 1 < len(v):
+            nxt = v[i + 1]
+            out.append({"n": "\n", "\\": "\\", '"': '"'}.get(nxt, c + nxt))
+            i += 2
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+def _parse_value(tok: str) -> float:
+    if tok == "+Inf":
+        return math.inf
+    if tok == "-Inf":
+        return -math.inf
+    if tok == "NaN":
+        return math.nan
+    try:
+        return float(tok)
+    except ValueError:
+        raise ValueError(f"bad sample value {tok!r}") from None
+
+
+def parse_exposition(text: str) -> Dict[str, Dict[Labels, float]]:
+    """Strict parse of Prometheus text exposition back into
+    ``{metric_name: {sorted_label_tuple: value}}``.
+
+    Raises ``ValueError`` on anything malformed: bad names, unparseable
+    label pairs, non-float values, a histogram whose ``le``-cumulative
+    bucket counts decrease, or a histogram missing its ``_sum`` /
+    ``_count`` series.  The CI metrics smoke step runs this over the
+    dumped textfile, so an export regression fails the build.
+    """
+    out: Dict[str, Dict[Labels, float]] = OrderedDict()
+    types: Dict[str, str] = {}
+    for ln, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) >= 2 and parts[1] in ("HELP", "TYPE"):
+                if len(parts) < 3 or not _NAME_RE.match(parts[2]):
+                    raise ValueError(f"line {ln}: malformed {parts[1]} line")
+                if parts[1] == "TYPE":
+                    kind = parts[3] if len(parts) > 3 else ""
+                    if kind not in KINDS:
+                        raise ValueError(
+                            f"line {ln}: unknown metric type {kind!r}")
+                    types[parts[2]] = kind
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"line {ln}: malformed sample line {raw!r}")
+        name, _, label_blob, value_tok = m.groups()
+        labels: Dict[str, str] = {}
+        if label_blob:
+            consumed = 0
+            for lm in _LABEL_RE.finditer(label_blob):
+                labels[lm.group(1)] = _unescape_label(lm.group(2))
+                consumed = lm.end()
+            rest = label_blob[consumed:].strip().strip(",").strip()
+            if rest:
+                raise ValueError(
+                    f"line {ln}: malformed labels {label_blob!r}")
+        out.setdefault(name, OrderedDict())[_labels_key(labels)] = \
+            _parse_value(value_tok)
+
+    # histogram structure validation
+    for name, kind in types.items():
+        if kind != "histogram":
+            continue
+        buckets = out.get(name + "_bucket", {})
+        if not buckets:
+            raise ValueError(f"histogram {name} has no _bucket series")
+        if name + "_sum" not in out or name + "_count" not in out:
+            raise ValueError(f"histogram {name} missing _sum/_count")
+        by_series: Dict[Labels, List[Tuple[float, float]]] = {}
+        for labels, v in buckets.items():
+            rest = tuple((k, val) for k, val in labels if k != "le")
+            le = dict(labels)["le"]
+            by_series.setdefault(rest, []).append((_parse_value(le), v))
+        for rest, series in by_series.items():
+            series.sort(key=lambda t: t[0])
+            counts = [n for _, n in series]
+            if any(b < a for a, b in zip(counts, counts[1:])):
+                raise ValueError(
+                    f"histogram {name}{dict(rest)} has non-monotone "
+                    f"cumulative buckets: {counts}")
+            if not math.isinf(series[-1][0]):
+                raise ValueError(
+                    f"histogram {name}{dict(rest)} lacks a +Inf bucket")
+    return out
+
+
+class MetricsRegistry:
+    """Named metric sources behind one collect/snapshot/export surface.
+
+    A source is a zero-argument callable returning a list of
+    :class:`Metric`; sources are invoked at collect time, so they snapshot
+    live state (locks are the source's business).  Same-name same-kind
+    families from different sources merge their samples; a kind conflict
+    raises.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._sources: "OrderedDict[str, Callable[[], List[Metric]]]" = \
+            OrderedDict()
+
+    def register_source(self, name: str,
+                        fn: Callable[[], List[Metric]]) -> None:
+        with self._lock:
+            if name in self._sources:
+                raise ValueError(f"metric source {name!r} already registered")
+            self._sources[name] = fn
+
+    def unregister_source(self, name: str) -> None:
+        with self._lock:
+            if self._sources.pop(name, None) is None:
+                raise KeyError(f"unknown metric source {name!r}")
+
+    def sources(self) -> List[str]:
+        with self._lock:
+            return list(self._sources)
+
+    def collect(self) -> List[Metric]:
+        with self._lock:
+            sources = list(self._sources.items())
+        merged: "OrderedDict[str, Metric]" = OrderedDict()
+        for source_name, fn in sources:
+            for metric in fn():
+                have = merged.get(metric.name)
+                if have is None:
+                    merged[metric.name] = Metric(
+                        metric.name, metric.kind, metric.help,
+                        list(metric.samples))
+                elif have.kind != metric.kind:
+                    raise ValueError(
+                        f"metric {metric.name!r} registered as both "
+                        f"{have.kind!r} and {metric.kind!r} "
+                        f"(source {source_name!r})")
+                else:
+                    have.samples.extend(metric.samples)
+        return list(merged.values())
+
+    def prometheus_text(self) -> str:
+        return render_prometheus(self.collect())
+
+    def snapshot(self) -> Dict[str, Dict[Labels, float]]:
+        """Collect, render, and re-parse — the returned mapping is what a
+        Prometheus scrape would see, and taking it validates the export
+        end to end."""
+        return parse_exposition(self.prometheus_text())
+
+    def value(self, name: str, default: float = 0.0, **labels) -> float:
+        """One sample's value from a fresh snapshot (``default`` when the
+        series does not exist — absent counters read as zero)."""
+        series = self.snapshot().get(name)
+        if not series:
+            return default
+        return series.get(_labels_key(labels), default)
+
+    def write_textfile(self, path: str) -> str:
+        """Dump the exposition to ``path`` atomically (write-then-rename,
+        the node-exporter textfile-collector contract: a scrape never
+        sees a half-written file).  Returns the rendered text."""
+        import os
+        text = self.prometheus_text()
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+        return text

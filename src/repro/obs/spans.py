@@ -1,0 +1,141 @@
+"""Per-request lifecycle spans: the enqueue-to-plan latency, decomposed.
+
+A service that reports one opaque enqueue-to-plan number cannot be
+steered: 318 ms might be queue backlog (add workers), flush-deadline
+wait (shrink the interval), padding waste (re-bucket), or a slow solve
+(optimise the kernel) — four different fixes.  :class:`RequestSpan`
+attaches the decomposition to every request:
+
+    enqueue --(batch_wait)--> chunk start --(pad)--> plan_many
+            --(cache_lookup)--> --(solve [device|host])--> --(resolve)-->
+            future resolved
+
+The phases are CONTIGUOUS intervals cut from the same monotonic clock,
+so ``batch_wait + pad + cache_lookup + solve + resolve == latency``
+exactly (``resolve`` is defined as the remainder after the measured
+sub-intervals, absorbing per-chunk bookkeeping; the serving tests assert
+the sum).  ``admit_s`` — admission-policy routing BEFORE the request
+enters the queue — is recorded but sits outside the enqueue-to-plan
+window, matching how the SLO is stated.  ``solve_device_s <= solve_s``
+is the ``block_until_ready``-fenced device portion of the solve (see
+:mod:`repro.obs.runtime`).
+
+:class:`SpanRecorder` keeps completed spans in a fixed-capacity ring
+(old spans fall off; an always-on service cannot keep every trace) plus
+running phase TOTALS that survive ring eviction — the totals are what
+the solve-fraction SLO and the Prometheus export read, so they must
+cover the whole lifetime, not the window.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List
+
+#: Phase names, in lifecycle order.  Their durations partition the
+#: enqueue-to-plan latency exactly.
+PHASES = ("batch_wait", "pad", "cache_lookup", "solve", "resolve")
+
+
+@dataclass(frozen=True)
+class RequestSpan:
+    """One completed request trace.  Durations are seconds; chunk-level
+    phases (pad/cache/solve/resolve) are shared by every request solved
+    in the same micro-batch chunk, ``batch_wait`` is per-request."""
+
+    objective: str
+    grid_mode: str
+    bucket: int
+    enqueue_t: float        # perf_counter at enqueue (clock origin)
+    admit_s: float          # pre-enqueue admission routing (outside SLO)
+    batch_wait_s: float     # enqueue -> chunk taken by the worker
+    pad_s: float            # chunk formation + bucket selection
+    cache_lookup_s: float   # quantised-key cache probe inside plan_many
+    solve_s: float          # plan_batch wall clock (host view)
+    solve_device_s: float   # block_until_ready-fenced device portion
+    resolve_s: float        # record fan-out + future resolution remainder
+    latency_s: float        # enqueue -> future resolved (the SLO number)
+
+    @property
+    def phase_sum(self) -> float:
+        return (self.batch_wait_s + self.pad_s + self.cache_lookup_s
+                + self.solve_s + self.resolve_s)
+
+    def phases(self) -> Dict[str, float]:
+        return {"batch_wait": self.batch_wait_s, "pad": self.pad_s,
+                "cache_lookup": self.cache_lookup_s, "solve": self.solve_s,
+                "resolve": self.resolve_s}
+
+
+class SpanRecorder:
+    """Thread-safe fixed-capacity ring of :class:`RequestSpan` plus
+    lifetime phase totals.  One lock acquisition per request — the
+    overhead budget is <= 5% of serve-bench throughput, asserted by the
+    bench's throughput floor."""
+
+    def __init__(self, capacity: int = 8192):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._ring: Deque[RequestSpan] = deque(maxlen=capacity)
+        self._totals = {name: 0.0 for name in PHASES}
+        self._totals["admit"] = 0.0
+        self._totals["solve_device"] = 0.0
+        self._totals["latency"] = 0.0
+        self._count = 0
+
+    def record(self, span: RequestSpan) -> None:
+        with self._lock:
+            self._ring.append(span)
+            t = self._totals
+            t["batch_wait"] += span.batch_wait_s
+            t["pad"] += span.pad_s
+            t["cache_lookup"] += span.cache_lookup_s
+            t["solve"] += span.solve_s
+            t["resolve"] += span.resolve_s
+            t["admit"] += span.admit_s
+            t["solve_device"] += span.solve_device_s
+            t["latency"] += span.latency_s
+            self._count += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)
+
+    @property
+    def recorded(self) -> int:
+        """Lifetime span count (>= ring length once the ring wraps)."""
+        with self._lock:
+            return self._count
+
+    def snapshot(self) -> List[RequestSpan]:
+        """The ring's current window, oldest first."""
+        with self._lock:
+            return list(self._ring)
+
+    def totals(self) -> Dict[str, float]:
+        """Lifetime phase-duration totals (seconds) plus ``count``."""
+        with self._lock:
+            out = dict(self._totals)
+            out["count"] = self._count
+            return out
+
+    @property
+    def solve_fraction(self) -> float:
+        """Lifetime solve share of enqueue-to-plan latency — the number
+        that says whether the service is compute-bound (optimise the
+        kernel) or wait-bound (tune batching); 0.0 before any span."""
+        with self._lock:
+            lat = self._totals["latency"]
+            return self._totals["solve"] / lat if lat > 0.0 else 0.0
+
+    def phase_means_ms(self) -> Dict[str, float]:
+        """Mean per-request phase durations in milliseconds (the
+        human-readable breakdown the CLI and bench print)."""
+        with self._lock:
+            if self._count == 0:
+                return {name: 0.0 for name in (*PHASES, "latency")}
+            return {name: self._totals[name] / self._count * 1e3
+                    for name in (*PHASES, "latency")}

@@ -9,6 +9,7 @@ requests through a pluggable admission policy, and re-plans live
 sessions when their observed channel drifts away from what the cached
 plan priced.  See ``README.md`` ("Serving") for the architecture sketch.
 """
+from repro.serve import export
 from repro.serve.batcher import MicroBatcher, PlanRequest, group_requests
 from repro.serve.catalogue import (ALL_MODELS, ALL_OBJECTIVES,
                                    LINK_FACTORIES, OBJECTIVE_FACTORIES,
@@ -28,7 +29,8 @@ __all__ = [
     "LinkAwarePolicy", "MicroBatcher", "OBJECTIVE_FACTORIES",
     "PlanRequest", "PlanningService", "PolicySpec", "RATE_SET",
     "ServiceConfig", "ServiceStats", "Session", "SessionTracker",
-    "StaticPolicy", "StatsRecorder", "default_consts", "group_requests",
+    "StaticPolicy", "StatsRecorder", "default_consts", "export",
+    "group_requests",
     "mc_update_floor", "parse_models", "percentiles", "policy_spec",
     "reestimate_link", "register_policy", "registered_policies",
     "resolve_grid_modes", "resolve_objectives", "synth_requests",

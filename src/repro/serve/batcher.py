@@ -51,6 +51,9 @@ class PlanRequest:
     session_id: Optional[str] = None
     enqueue_t: float = field(default_factory=time.perf_counter)
     future: "Future" = field(default_factory=Future)
+    #: admission-policy routing time spent BEFORE enqueue (seconds);
+    #: reported on the request's span, outside the enqueue-to-plan SLO
+    admit_s: float = 0.0
 
     def group_key(self) -> Hashable:
         """Micro-batch grouping key: one jitted solve serves one
@@ -97,6 +100,11 @@ class MicroBatcher:
         self._drain = True
         self.flushes = 0          # micro-batches handed to plan_group
         self.idle_ticks = 0       # deadline wakes that found nothing to do
+        #: per-cause flush counts: "size" (max_batch pending), "deadline"
+        #: (oldest request waited out flush_interval), "drain" (shutdown
+        #: flush) — the signal separating a saturated service (size) from
+        #: a trickle paying the deadline on every batch
+        self.flush_causes = {"size": 0, "deadline": 0, "drain": 0}
 
     # -- producer side ------------------------------------------------------
 
@@ -151,6 +159,7 @@ class MicroBatcher:
         when stopped and (post-drain) empty."""
         with self._cv:
             while True:
+                cause = "drain"
                 while not self._queue and not self._stopping:
                     self._cv.wait()
                 if not self._queue:
@@ -176,7 +185,10 @@ class MicroBatcher:
                         # no-op tick and go back to sleep
                         self.idle_ticks += 1
                         continue
+                    cause = ("size" if len(self._queue) >= self.max_batch
+                             else "deadline")
                 n = min(self.max_batch, len(self._queue))
+                self.flush_causes[cause] += 1
                 return [self._queue.popleft() for _ in range(n)]
 
     def _run(self) -> None:

@@ -1,0 +1,263 @@
+"""Metric-source adapters: serving state -> ``repro.obs`` metric families.
+
+``repro.obs`` is deliberately standalone (no serve/fleet imports, so the
+kernels can use it without cycles); this module is the glue in the other
+direction — it knows the serving layer's snapshot shapes
+(:class:`~repro.serve.stats.ServiceStats`, ``PlanCache.stats()``,
+``SpanRecorder.totals()``, ``EventJournal.counts()``, the fleet trace
+events) and renders each as :class:`~repro.obs.metrics.Metric` families
+under a stable naming scheme:
+
+================================================  =========  ==========
+metric                                            kind       labels
+================================================  =========  ==========
+``repro_serve_<counter>_total``                   counter    —
+``repro_serve_sessions_open``                     gauge      —
+``repro_serve_queue_depth``                       gauge      —
+``repro_serve_uptime_seconds``                    gauge      —
+``repro_serve_plans_per_sec``                     gauge      —
+``repro_serve_bucket_{requests,batches,           counter    objective,
+compiles}_total``                                            grid_mode,
+                                                             bucket
+``repro_serve_latency_seconds``                   histogram  —
+``repro_serve_bucket_latency_seconds``            histogram  objective,
+                                                             grid_mode,
+                                                             bucket
+``repro_serve_cache_{hits,misses,evictions,       counter    —
+invalidations}_total``
+``repro_serve_cache_{hits,misses}                 counter    objective
+_by_objective_total``
+``repro_serve_cache_{entries,maxsize,hit_rate}``  gauge      —
+``repro_serve_phase_seconds_total``               counter    phase
+``repro_serve_solve_device_seconds_total``        counter    —
+``repro_serve_spans_recorded_total``              counter    —
+``repro_serve_solve_fraction``                    gauge      —
+``repro_serve_events_total``                      counter    kind
+``repro_fleet_kernel_traces_total``               counter    kind, shape
+``repro_fleet_traces_total``                      counter    —
+================================================  =========  ==========
+
+:func:`register_service_sources` wires a live
+:class:`~repro.serve.service.PlanningService` into its registry;
+:func:`oneshot_metrics` builds a standalone registry for the one-shot
+``plan_server`` driver; :func:`write_textfile` dumps any registry for
+the node-exporter textfile collector.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, List, Tuple
+
+from repro.fleet.tracing import trace_events
+from repro.obs import (EventJournal, LogHistogram, Metric, MetricsRegistry,
+                       SpanRecorder)
+from repro.serve.stats import ServiceStats
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only import
+    from repro.serve.service import PlanningService
+
+#: ``ServiceStats.counters`` entries that are levels, not monotone
+#: counts — exported as gauges without the ``_total`` suffix.
+GAUGE_COUNTERS = ("sessions_open",)
+
+
+def service_metrics(stats: ServiceStats) -> List[Metric]:
+    """The :class:`ServiceStats` snapshot as metric families: every
+    ``counters`` entry, the per-bucket counters, the cache counters and
+    the latency histograms.  Phase/span families come from
+    :func:`span_metrics` (the span recorder is the source of truth for
+    those; the copies on ``stats`` exist for JSON reporting)."""
+    out: List[Metric] = []
+    for name in sorted(stats.counters):
+        v = stats.counters[name]
+        if name in GAUGE_COUNTERS:
+            out.append(Metric(f"repro_serve_{name}", "gauge",
+                              f"service level {name}").add(float(v)))
+        else:
+            out.append(Metric(f"repro_serve_{name}_total", "counter",
+                              f"service counter {name}").add(float(v)))
+    out.append(Metric("repro_serve_queue_depth", "gauge",
+                      "requests waiting in the ingestion queue")
+               .add(float(stats.queue_depth)))
+    out.append(Metric("repro_serve_uptime_seconds", "gauge",
+                      "seconds since the stats clock (re)started")
+               .add(stats.uptime_s))
+    out.append(Metric("repro_serve_plans_per_sec", "gauge",
+                      "plans resolved per second since the clock restart")
+               .add(stats.plans_per_sec))
+
+    for field_name in ("requests", "batches", "compiles"):
+        m = Metric(f"repro_serve_bucket_{field_name}_total", "counter",
+                   f"per-(objective, grid_mode, bucket) {field_name}")
+        for (oid, mode, bucket), slot in sorted(stats.buckets.items()):
+            m.add(float(slot[field_name]), objective=oid, grid_mode=mode,
+                  bucket=str(bucket))
+        if m.samples:
+            out.append(m)
+
+    if stats.latency_hist:
+        out.append(Metric("repro_serve_latency_seconds", "histogram",
+                          "enqueue-to-plan latency")
+                   .add(LogHistogram.from_dict(stats.latency_hist)))
+    if stats.histograms:
+        m = Metric("repro_serve_bucket_latency_seconds", "histogram",
+                   "enqueue-to-plan latency per (objective, grid_mode, "
+                   "bucket)")
+        for key, hd in sorted(stats.histograms.items()):
+            oid, mode, bucket = key.rsplit("/", 2)
+            m.add(LogHistogram.from_dict(hd), objective=oid,
+                  grid_mode=mode, bucket=bucket)
+        out.append(m)
+
+    out.extend(cache_metrics(stats.cache))
+    return out
+
+
+def cache_metrics(cache_stats: Dict[str, object]) -> List[Metric]:
+    """``PlanCache.stats()`` (or ``ServiceStats.cache``) as families."""
+    if not cache_stats:
+        return []
+    out: List[Metric] = []
+    for name in ("hits", "misses", "evictions", "invalidations"):
+        if name in cache_stats:
+            out.append(Metric(f"repro_serve_cache_{name}_total", "counter",
+                              f"plan cache {name}")
+                       .add(float(cache_stats[name])))  # type: ignore[arg-type]
+    for name in ("hits", "misses"):
+        per = cache_stats.get(f"{name}_by_objective") or {}
+        if per:
+            m = Metric(f"repro_serve_cache_{name}_by_objective_total",
+                       "counter", f"plan cache {name} per objective")
+            for oid, v in sorted(per.items()):  # type: ignore[union-attr]
+                m.add(float(v), objective=str(oid))
+            out.append(m)
+    gauges = (("size", "entries", "live cache entries"),
+              ("maxsize", "maxsize", "cache capacity"),
+              ("hit_rate", "hit_rate", "lifetime cache hit rate"))
+    for src, dst, help_text in gauges:
+        if src in cache_stats:
+            out.append(Metric(f"repro_serve_cache_{dst}", "gauge",
+                              help_text)
+                       .add(float(cache_stats[src])))  # type: ignore[arg-type]
+    return out
+
+
+def tracing_metrics(events: Dict[Tuple, int] = None) -> List[Metric]:
+    """The fleet kernel trace counters (``None`` snapshots the live
+    process-global events) — the audit trail behind the
+    zero-traces-after-warmup SLO."""
+    if events is None:
+        events = trace_events()
+    per_tag = Metric("repro_fleet_kernel_traces_total", "counter",
+                     "jit traces per kernel (kind, shape)")
+    total = 0
+    for tag, n in sorted(events.items(), key=lambda kv: str(kv[0])):
+        kind = str(tag[0]) if tag else "unknown"
+        shape = ",".join(str(t) for t in tag[1:])
+        per_tag.add(float(n), kind=kind, shape=shape)
+        total += n
+    out = [Metric("repro_fleet_traces_total", "counter",
+                  "total jit traces across all fleet kernels")
+           .add(float(total))]
+    if per_tag.samples:
+        out.append(per_tag)
+    return out
+
+
+def span_metrics(spans: SpanRecorder) -> List[Metric]:
+    """Lifetime phase totals from the span recorder: the exact
+    decomposition of cumulative enqueue-to-plan latency."""
+    totals = spans.totals()
+    phase = Metric("repro_serve_phase_seconds_total", "counter",
+                   "cumulative request time per lifecycle phase "
+                   "(admit is pre-enqueue, outside the latency SLO)")
+    for name, v in sorted(totals.items()):
+        if name in ("count", "solve_device", "latency"):
+            continue
+        phase.add(v, phase=name)
+    return [
+        phase,
+        Metric("repro_serve_solve_device_seconds_total", "counter",
+               "block_until_ready-fenced device portion of solve time")
+        .add(totals["solve_device"]),
+        Metric("repro_serve_span_latency_seconds_total", "counter",
+               "cumulative enqueue-to-plan latency over all spans")
+        .add(totals["latency"]),
+        Metric("repro_serve_spans_recorded_total", "counter",
+               "request spans recorded (lifetime, ring may hold fewer)")
+        .add(float(totals["count"])),
+        Metric("repro_serve_solve_fraction", "gauge",
+               "lifetime solve share of enqueue-to-plan latency")
+        .add(spans.solve_fraction),
+    ]
+
+
+def journal_metrics(journal: EventJournal) -> List[Metric]:
+    """Lifetime per-kind event counts from the audit journal."""
+    m = Metric("repro_serve_events_total", "counter",
+               "journal events per kind")
+    for kind, n in sorted(journal.counts().items()):
+        m.add(float(n), kind=kind)
+    out = [Metric("repro_serve_events_emitted_total", "counter",
+                  "journal events emitted (lifetime)")
+           .add(float(journal.emitted))]
+    if m.samples:
+        out.append(m)
+    return out
+
+
+def register_service_sources(registry: MetricsRegistry,
+                             service: "PlanningService") -> None:
+    """Wire a live service's four counter surfaces into its registry.
+    Sources pull at collect time, so every export is a fresh snapshot."""
+    registry.register_source(
+        "service", lambda: service_metrics(service.stats()))
+    registry.register_source("tracing", tracing_metrics)
+    registry.register_source(
+        "spans", lambda: span_metrics(service.spans))
+    registry.register_source(
+        "events", lambda: journal_metrics(service.journal))
+
+
+def oneshot_metrics(stats, cache=None) -> MetricsRegistry:
+    """A standalone registry for the one-shot ``plan_server`` driver's
+    :class:`~repro.launch.plan_server.ServeStats` — same naming scheme,
+    ``repro_plan_server_`` prefix so a host running both exporters never
+    collides."""
+    def collect() -> List[Metric]:
+        out = [
+            Metric("repro_plan_server_requests_total", "counter",
+                   "requests served").add(float(stats.n_requests)),
+            Metric("repro_plan_server_batches_total", "counter",
+                   "micro-batches planned").add(float(stats.n_batches)),
+            Metric("repro_plan_server_seconds", "gauge",
+                   "serve loop wall clock").add(stats.seconds),
+            Metric("repro_plan_server_plans_per_sec", "gauge",
+                   "serve loop throughput").add(stats.plans_per_sec),
+            Metric("repro_plan_server_cache_hit_rate", "gauge",
+                   "stream cache hit rate").add(stats.cache_hit_rate),
+            Metric("repro_plan_server_batch_latency_p99_ms", "gauge",
+                   "per-micro-batch p99 latency").add(stats.batch_p99_ms),
+        ]
+        for label, per in (("model", stats.requests_per_model),
+                           ("objective", stats.requests_per_objective),
+                           ("grid_mode", stats.requests_per_grid_mode)):
+            if per:
+                m = Metric(f"repro_plan_server_requests_by_{label}_total",
+                           "counter", f"requests per {label}")
+                for k, v in sorted(per.items(), key=lambda kv: str(kv[0])):
+                    m.add(float(v), **{label: str(k)})
+                out.append(m)
+        if cache is not None:
+            out.extend(cache_metrics(cache.stats()))
+        out.extend(tracing_metrics())
+        return out
+
+    registry = MetricsRegistry()
+    registry.register_source("plan_server", collect)
+    return registry
+
+
+def write_textfile(registry: MetricsRegistry, path: str) -> str:
+    """Dump ``registry`` as a Prometheus textfile (atomic rename); the
+    parsed-on-read contract lives in ``MetricsRegistry.snapshot``."""
+    return registry.write_textfile(path)

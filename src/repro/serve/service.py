@@ -28,9 +28,17 @@ population talks to":
      re-estimates the link (:func:`repro.serve.sessions.reestimate_link`),
      INVALIDATES the prefix-keyed cache entry the stale plan lives at,
      and re-enqueues the corrected scenario through the same batcher.
-  5. **Stats** — p50/p99 enqueue-to-plan latency, throughput, queue
-     depth, per-bucket request/batch/compile counters and the cache's
-     hit/miss/eviction/invalidation counters, in one snapshot.
+  5. **Observability** — every request leaves a
+     :class:`~repro.obs.spans.RequestSpan` decomposing its
+     enqueue-to-plan latency exactly into batch-wait / pad / cache-lookup
+     / solve / resolve phases (with the solve's device portion fenced by
+     ``block_until_ready``); latencies aggregate into mergeable
+     log-histograms per (objective, grid mode, bucket); drift and
+     session lifecycle events land in a JSONL-exportable audit journal;
+     and ``service.metrics`` — a :class:`~repro.obs.metrics\
+     .MetricsRegistry` over the stats recorder, the plan cache, the
+     kernel trace counters, the span totals and the journal — renders
+     the whole picture as Prometheus text exposition in one call.
 
 Plans are bitwise-identical to direct ``FleetPlanner.plan_batch`` calls:
 the service adds routing, batching and caching around the solver, never
@@ -49,7 +57,10 @@ from repro.core.bounds import BoundConstants
 from repro.core.scenario import Scenario
 from repro.fleet import GRID_MODES, FleetPlanner, PlanCache
 from repro.fleet.objective_kernels import pow2ceil
-from repro.fleet.tracing import trace_count
+from repro.fleet.tracing import trace_delta
+from repro.obs import (EventJournal, MetricsRegistry, RequestSpan,
+                       SpanRecorder, solve_delta)
+from repro.serve import export
 from repro.serve.batcher import MicroBatcher, PlanRequest
 from repro.serve.catalogue import (ALL_MODELS, default_consts,
                                    mc_update_floor, resolve_objectives,
@@ -88,6 +99,13 @@ class ServiceConfig:
     min_observations: int = 20
     shard: bool = True
     warm_models: Tuple[str, ...] = ALL_MODELS
+    #: span ring capacity (lifetime phase TOTALS are kept regardless;
+    #: the ring holds the most recent complete traces)
+    span_capacity: int = 8192
+    #: event-journal ring capacity (per-kind counts are lifetime)
+    journal_capacity: int = 4096
+    #: when set, every journal event is also appended to this JSONL file
+    journal_path: Optional[str] = None
 
     def __post_init__(self):
         if not self.batch_buckets:
@@ -150,9 +168,14 @@ class PlanningService:
             ewma_alpha=cfg.ewma_alpha,
             min_observations=cfg.min_observations)
         self.recorder = StatsRecorder()
+        self.spans = SpanRecorder(capacity=cfg.span_capacity)
+        self.journal = EventJournal(capacity=cfg.journal_capacity,
+                                    path=cfg.journal_path)
         self.batcher = MicroBatcher(self._plan_group,
                                     max_batch=cfg.max_batch,
                                     flush_interval=cfg.flush_interval)
+        self.metrics = MetricsRegistry()
+        export.register_service_sources(self.metrics, self)
         self._lock = threading.Lock()
         self.warmed = False
         self.warmup_traces = 0
@@ -203,6 +226,11 @@ class PlanningService:
         self.warmup_seconds = time.perf_counter() - t0
         self.warmup_traces = total
         self.warmed = True
+        self.journal.emit("warmup", traces=total,
+                          seconds=round(self.warmup_seconds, 6),
+                          objectives=sorted(self.objectives),
+                          grid_modes=list(cfg.grid_modes),
+                          buckets=list(cfg.batch_buckets))
         self.recorder.restart_clock()
         return total
 
@@ -250,9 +278,12 @@ class PlanningService:
         its :class:`~repro.fleet.planner.PlanRecord`.  ``objective`` may
         be a served instance, a registry id, or ``None``/``grid_mode``
         ``None`` to let the admission policy decide."""
+        t_admit = time.perf_counter()
         _, inst, mode = self._admit(scenario, objective, grid_mode)
+        admit_s = time.perf_counter() - t_admit
         request = PlanRequest(scenario=scenario, objective=inst,
-                              grid_mode=mode, session_id=session_id)
+                              grid_mode=mode, session_id=session_id,
+                              admit_s=admit_s)
         self.recorder.count("requests")
         self.batcher.submit(request)
         return request.future
@@ -273,7 +304,18 @@ class PlanningService:
 
     def _plan_group(self, requests) -> None:
         """Worker-side: solve one (objective, grid mode)-homogeneous
-        micro-batch through the cache and resolve its futures."""
+        micro-batch through the cache, resolve its futures, and record
+        one :class:`RequestSpan` per request.
+
+        Phase attribution: every phase is a contiguous interval cut from
+        the same ``perf_counter`` timeline — ``batch_wait`` (enqueue ->
+        chunk start, per request), then the chunk-shared ``pad`` /
+        ``cache_lookup`` / ``solve`` (``plan_many`` reports the latter
+        two; ``pad`` is its remaining interior: batch formation and pad
+        lanes) and ``resolve`` (everything after ``plan_many`` returns:
+        session delivery and future resolution, defined as the remainder
+        so the five phases sum EXACTLY to the enqueue-to-plan latency).
+        """
         objective = requests[0].objective
         mode = requests[0].grid_mode
         oid, _ = self._resolve_objective(objective)
@@ -281,24 +323,45 @@ class PlanningService:
         for bucket in self._chunk_buckets(len(requests)):
             chunk = requests[lo:lo + bucket]
             lo += len(chunk)
-            traces0 = trace_count()
-            records = self.planner.plan_many(
-                [r.scenario for r in chunk], self.consts, cache=self.cache,
-                pad_to=bucket, objective=objective, grid_mode=mode)
-            traces = trace_count() - traces0
-            now = time.perf_counter()
+            t_chunk = time.perf_counter()
+            timings: Dict[str, float] = {}
+            with trace_delta() as traces, solve_delta() as solve:
+                records = self.planner.plan_many(
+                    [r.scenario for r in chunk], self.consts,
+                    cache=self.cache, pad_to=bucket, objective=objective,
+                    grid_mode=mode, timings=timings)
+            t_planned = time.perf_counter()
             self.recorder.record_bucket(oid, mode, bucket,
                                         requests=len(chunk), batches=1,
-                                        compiles=traces)
+                                        compiles=traces.total)
             self.recorder.count("batches")
             self.recorder.count("planned", len(chunk))
-            if traces and self.warmed:
-                self.recorder.count("post_warmup_traces", traces)
+            if traces.total and self.warmed:
+                self.recorder.count("post_warmup_traces", traces.total)
             for request, record in zip(chunk, records):
-                self.recorder.record_latency(now - request.enqueue_t)
                 if request.session_id is not None:
                     self._deliver_to_session(request.session_id, record)
                 request.future.set_result(record)
+            t_end = time.perf_counter()
+
+            cache_s = timings.get("cache_lookup_s", 0.0)
+            solve_s = timings.get("solve_s", 0.0)
+            pad_s = max(0.0, (t_planned - t_chunk) - cache_s - solve_s)
+            resolve_s = max(0.0, (t_end - t_chunk)
+                            - (pad_s + cache_s + solve_s))
+            device_s = min(solve.device_s, solve_s)
+            key = (oid, mode, bucket)
+            for request in chunk:
+                latency = t_end - request.enqueue_t
+                self.recorder.record_latency(latency, key=key)
+                self.spans.record(RequestSpan(
+                    objective=oid, grid_mode=mode, bucket=bucket,
+                    enqueue_t=request.enqueue_t,
+                    admit_s=request.admit_s,
+                    batch_wait_s=t_chunk - request.enqueue_t,
+                    pad_s=pad_s, cache_lookup_s=cache_s,
+                    solve_s=solve_s, solve_device_s=device_s,
+                    resolve_s=resolve_s, latency_s=latency))
 
     # -- sessions and drift -------------------------------------------------
 
@@ -313,6 +376,9 @@ class PlanningService:
                           objective=inst, grid_mode=mode)
         self.sessions.open(session)
         session.replan_pending = True
+        self.journal.emit("session_open", session_id=session_id,
+                          objective=getattr(inst, "objective_id", None),
+                          grid_mode=mode)
         return self.submit(scenario, objective=inst, grid_mode=mode,
                            session_id=session_id)
 
@@ -320,7 +386,13 @@ class PlanningService:
         return self.sessions.get(session_id)
 
     def close_session(self, session_id: str) -> Optional[Session]:
-        return self.sessions.close(session_id)
+        session = self.sessions.close(session_id)
+        if session is not None:
+            self.journal.emit("session_close", session_id=session_id,
+                              generation=session.generation,
+                              replans=session.replans,
+                              observations=session.n_observations)
+        return session
 
     def _deliver_to_session(self, session_id: str, record) -> None:
         try:
@@ -344,10 +416,15 @@ class PlanningService:
         if not self.sessions.drifted(session):
             return None
         self.recorder.count("drift_detected")
+        self.journal.emit("drift_detected", session_id=session_id,
+                          ewma=round(session.ewma, 6),
+                          planned_p_err=round(session.plan.p_err, 6))
         new_link = reestimate_link(session.scenario.link,
                                    session.plan.rate, session.ewma)
         if new_link is None:
             self.recorder.count("drift_unactionable")
+            self.journal.emit("drift_unactionable", session_id=session_id,
+                              ewma=round(session.ewma, 6))
             return None
         with self._lock:
             if session.replan_pending:
@@ -362,6 +439,9 @@ class PlanningService:
         self.cache.invalidate(stale, context=context,
                               objective=session.objective)
         self.recorder.count("drift_replans")
+        self.journal.emit("drift_replan", session_id=session_id,
+                          replans=session.replans,
+                          ewma=round(session.ewma, 6))
         return self.submit(session.scenario, objective=session.objective,
                            grid_mode=session.grid_mode,
                            session_id=session_id)
@@ -376,4 +456,18 @@ class PlanningService:
         snapshot.counters["idle_ticks"] = self.batcher.idle_ticks
         snapshot.counters.setdefault("post_warmup_traces", 0)
         snapshot.counters["warmup_traces"] = self.warmup_traces
-        return snapshot
+        for cause, n in self.batcher.flush_causes.items():
+            snapshot.counters[f"flushes_{cause}"] = n
+        return dataclasses.replace(
+            snapshot, phases=self.spans.totals(),
+            solve_fraction=self.spans.solve_fraction)
+
+    def prometheus_text(self) -> str:
+        """The full Prometheus text exposition across every source."""
+        return self.metrics.prometheus_text()
+
+    def metrics_snapshot(self) -> Dict[str, Dict[tuple, float]]:
+        """Every exported series as ``{name: {label_tuple: value}}`` —
+        the render/parse round-trip, so reading it also validates the
+        export (see :meth:`MetricsRegistry.snapshot`)."""
+        return self.metrics.snapshot()

@@ -81,3 +81,32 @@ def test_shape_info_parser(case, _salt):
     s, expected = case
     got, _ = shape_info(s)
     assert got == expected
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    chunks=st.lists(st.lists(st.floats(1e-7, 1e4), min_size=0, max_size=40),
+                    min_size=3, max_size=3),
+)
+def test_log_histogram_merge_associative_commutative(chunks):
+    """Histogram merge is associative AND commutative AND equals the
+    single-histogram record of the union — the algebra the per-bucket ->
+    service -> fleet roll-up depends on."""
+    from repro.obs import LogHistogram
+
+    def hist(samples):
+        h = LogHistogram(per_decade=7)
+        for s in samples:
+            h.record(s)
+        return h
+
+    a, b, c = (hist(ch) for ch in chunks)
+    left = a.copy().merge(b).merge(c)
+    right = a.copy().merge(b.copy().merge(c))
+    swapped = c.copy().merge(a).merge(b)
+    union = hist([s for ch in chunks for s in ch])
+    for other in (right, swapped, union):
+        assert left.counts == other.counts
+        assert left.count == other.count
+        assert left.max == other.max
+        np.testing.assert_allclose(left.sum, other.sum, rtol=1e-9)

@@ -403,3 +403,132 @@ def test_plan_server_reports_batch_latency_percentiles():
                   cache=PlanCache(maxsize=64), batch_size=4)
     assert stats.batch_p99_ms >= stats.batch_p50_ms > 0.0
     assert stats.batch_max_ms >= stats.batch_p99_ms
+
+
+# ---------------------------------------------------------------------------
+# Observability: spans, metrics export, flush causes, CLI wiring
+# ---------------------------------------------------------------------------
+
+def test_batcher_counts_flush_causes():
+    b, batches = _collecting_batcher(max_batch=2, flush_interval=0.02)
+    b.start()
+    try:
+        futs = [b.submit(PlanRequest(scenario=i)) for i in range(4)]
+        for f in futs:
+            f.result(timeout=5.0)       # two full batches -> size flushes
+        last = b.submit(PlanRequest(scenario=9))
+        last.result(timeout=5.0)        # partial batch -> deadline flush
+    finally:
+        b.stop()
+    assert b.flush_causes["size"] >= 1
+    assert b.flush_causes["deadline"] >= 1
+    assert sum(b.flush_causes.values()) == len(batches)
+
+
+def test_service_spans_sum_to_latency(warm_service):
+    service = warm_service
+    requests = synth_requests(12, seed=40, dup_frac=0.0, n_classes=12,
+                              models=("erasure", "fading"), n_max=512)
+    futures = [service.submit(sc) for sc in requests]
+    for f in futures:
+        f.result(timeout=60)
+    spans = service.spans.snapshot()
+    assert spans and service.spans.recorded >= 12
+    for span in spans:
+        # the phases partition the enqueue-to-plan latency exactly:
+        # contiguous intervals cut from one monotonic clock
+        assert abs(span.phase_sum - span.latency_s) <= 1e-6, span
+        assert span.solve_device_s <= span.solve_s + 1e-9
+        assert all(v >= 0.0 for v in span.phases().values())
+        assert span.bucket in warm_service.config.batch_buckets
+        assert span.objective in SMALL["objective_ids"]
+    totals = service.spans.totals()
+    assert 0.0 < service.spans.solve_fraction <= 1.0
+    phase_sum = sum(totals[p] for p in ("batch_wait", "pad", "cache_lookup",
+                                        "solve", "resolve"))
+    assert phase_sum == pytest.approx(totals["latency"], rel=1e-9)
+
+
+def test_service_metrics_round_trip_all_counters(warm_service):
+    from repro.serve.export import GAUGE_COUNTERS
+    service = warm_service
+    requests = synth_requests(8, seed=41, dup_frac=0.0, n_classes=8,
+                              models=("erasure",), n_max=512)
+    for f in [service.submit(sc) for sc in requests]:
+        f.result(timeout=60)
+    stats = service.stats()
+    snap = service.metrics_snapshot()   # parses the rendered exposition
+
+    # EVERY ServiceStats counter is reachable through the export
+    for name, v in stats.counters.items():
+        if name in GAUGE_COUNTERS:
+            assert snap[f"repro_serve_{name}"][()] == v, name
+        else:
+            assert snap[f"repro_serve_{name}_total"][()] == v, name
+    assert {"flushes_size", "flushes_deadline", "flushes_drain"} \
+        <= set(stats.counters)
+
+    # per-bucket counters carry their (objective, grid_mode, bucket) labels
+    for (oid, mode, bucket), slot in stats.buckets.items():
+        labels = (("bucket", str(bucket)), ("grid_mode", mode),
+                  ("objective", oid))
+        assert snap["repro_serve_bucket_requests_total"][labels] \
+            == slot["requests"]
+
+    # one span and one histogram sample per planned request, and the
+    # exported phase totals re-partition the exported latency total
+    assert snap["repro_serve_spans_recorded_total"][()] \
+        == snap["repro_serve_latency_seconds_count"][()]
+    phase_total = sum(
+        v for labels, v in snap["repro_serve_phase_seconds_total"].items()
+        if dict(labels)["phase"] != "admit")
+    assert phase_total == pytest.approx(
+        snap["repro_serve_span_latency_seconds_total"][()], rel=1e-6)
+    assert snap["repro_serve_solve_device_seconds_total"][()] > 0.0
+    assert 0.0 < snap["repro_serve_solve_fraction"][()] <= 1.0
+    # the zero-trace SLO series a scrape would alert on
+    assert snap["repro_serve_post_warmup_traces_total"][()] == 0
+    assert snap["repro_fleet_traces_total"][()] > 0
+    assert service.metrics.value("repro_serve_planned_total") \
+        == stats.n_planned
+
+
+def test_service_journal_records_session_lifecycle(warm_service):
+    service = warm_service
+    before = service.journal.counts()
+    sc = _scenario(seed=51, n=640)
+    service.open_session("obs-1", sc, objective="corollary1",
+                         grid_mode="dense").result(timeout=60)
+    service.close_session("obs-1")
+    counts = service.journal.counts()
+    assert counts.get("session_open", 0) == before.get("session_open", 0) + 1
+    assert counts.get("session_close", 0) \
+        == before.get("session_close", 0) + 1
+    kinds = [e["kind"] for e in service.journal.tail(50)]
+    assert "session_open" in kinds and "session_close" in kinds
+    closes = [e for e in service.journal.tail(50)
+              if e["kind"] == "session_close"
+              and e["session_id"] == "obs-1"]
+    assert closes and closes[-1]["generation"] == 1
+
+
+def test_serve_cli_writes_metrics_textfile_and_journal(tmp_path):
+    from repro.launch.serve import main
+    from repro.obs import parse_exposition, read_jsonl
+    metrics_path = tmp_path / "metrics.prom"
+    journal_path = tmp_path / "events.jsonl"
+    # --policy-frac 0: the link_aware policy may route to "refine",
+    # which this one-mode config does not serve
+    rc = main(["--requests", "6", "--buckets", "4", "--grid", "8",
+               "--n-max", "512", "--models", "erasure",
+               "--objective", "corollary1", "--grid-mode", "dense",
+               "--policy-frac", "0",
+               "--metrics-textfile", str(metrics_path),
+               "--journal", str(journal_path)])
+    assert rc == 0
+    snap = parse_exposition(metrics_path.read_text())
+    assert snap["repro_serve_planned_total"][()] == 6
+    assert snap["repro_serve_post_warmup_traces_total"][()] == 0
+    assert snap["repro_serve_latency_seconds_count"][()] == 6
+    events = read_jsonl(str(journal_path))
+    assert any(e["kind"] == "warmup" for e in events)

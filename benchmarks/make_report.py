@@ -4,8 +4,9 @@ Two subcommands:
 
   * ``roofline`` (default, for backward compatibility) — inject the
     generated roofline tables into ``EXPERIMENTS.md`` placeholders.
-  * ``trajectory`` — merge the repo-root ``BENCH_fleet.json`` and
-    ``BENCH_serve.json`` perf artifacts (schema v2: stamped with
+  * ``trajectory`` — merge the repo-root ``BENCH_fleet.json``,
+    ``BENCH_serve.json`` and ``BENCH_federated.json`` perf artifacts
+    (schema v2: stamped with
     ``schema_version`` / ``generated_utc`` / ``git_commit`` by
     ``benchmarks.common.bench_stamp``) into ONE markdown table, so two
     runs' artifacts can be diffed commit-to-commit as a trajectory:
@@ -56,9 +57,11 @@ def trajectory_table():
     either artifact being absent (a partial bench run still reports) and
     pre-v2 payloads without the provenance stamp."""
     fleet, serve = _load("BENCH_fleet.json"), _load("BENCH_serve.json")
+    federated = _load("BENCH_federated.json")
     lines = ["# Benchmark trajectory", ""]
     for name, payload in (("BENCH_fleet.json", fleet),
-                          ("BENCH_serve.json", serve)):
+                          ("BENCH_serve.json", serve),
+                          ("BENCH_federated.json", federated)):
         if payload is None:
             lines.append(f"_{name}: absent (run its bench to generate)_")
             lines.append("")
@@ -100,6 +103,21 @@ def trajectory_table():
                 (serve.get("phase_means_ms") or {}).items()):
             lines.append(f"| serve | mixed | mixed | phase mean ms: "
                          f"{phase} | {_fmt(ms, '.3f')} |")
+    if federated:
+        S = federated.get("population")
+        for metric, value in [
+                (f"rounds/sec (S={S})",
+                 _fmt(federated.get("rounds_per_sec"), ".1f")),
+                (f"devices/sec (S={S})",
+                 _fmt(federated.get("devices_per_sec"))),
+                ("speedup vs scalar loop",
+                 _fmt(federated.get("speedup_vs_scalar"), ".1f")),
+                ("post-warmup traces",
+                 _fmt(federated.get("post_warmup_traces"))),
+        ]:
+            lines.append(
+                f"| federated | federated_corollary1 | dense "
+                f"| {metric} | {value} |")
     return "\n".join(lines) + "\n"
 
 

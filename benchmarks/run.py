@@ -25,6 +25,8 @@ BENCHES = {
               "fleet engine: batched vs scalar-loop planning + cache hit-rate"),
     "serve": ("benchmarks.bench_serve",
               "always-on planning service: warmup, zero-trace SLO, latency"),
+    "federated": ("benchmarks.bench_federated",
+                  "federated round planner: joint selection + (rate, n_c)"),
     # roofline (reads dry-run artifacts)
     "roofline": ("benchmarks.roofline_report", "roofline aggregation"),
 }

@@ -11,30 +11,87 @@ round-robin TDMA the union prefix grows exactly like a SINGLE device with
 block size D*n_c and overhead D*n_o — so the paper's Corollary-1 planner
 applies to the multi-device system after this reduction, and per-device
 block sizes come out as n_c_tilde / D.
+
+Shards need not be equal: ``split_samples`` hands out a remainder-exact
+split (first ``N % D`` devices carry one extra sample), and
+:class:`MultiDeviceSchedule` accepts explicit per-device ``shard_sizes``
+— the union accounting caps each device at ITS shard, so uneven fleets
+(including the federated round simulator's data split) are modelled
+exactly instead of silently rounded to an even split.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
-
-import numpy as np
+from typing import Optional, Tuple
 
 from repro.core.bounds import BoundConstants
 from repro.core.protocol import BlockSchedule
 
 
+def split_samples(N: int, n_devices: int) -> Tuple[int, ...]:
+    """Remainder-exact split of ``N`` samples over ``n_devices`` disjoint
+    shards: sizes differ by at most one, sum exactly to ``N``, and the
+    first ``N % n_devices`` devices take the extra sample."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if N < n_devices:
+        raise ValueError(
+            f"cannot split N={N} samples over {n_devices} devices "
+            "(every shard needs at least one sample)")
+    base, extra = divmod(int(N), int(n_devices))
+    return tuple(base + (1 if d < extra else 0)
+                 for d in range(int(n_devices)))
+
+
 @dataclass(frozen=True)
 class MultiDeviceSchedule:
     n_devices: int
-    samples_per_device: int
-    n_c: int          # per-device block size
+    samples_per_device: int   # the LARGEST shard (uniform when even split)
+    n_c: int                  # per-device block size
     n_o: float
     T: float
     tau_p: float
+    #: per-device shard sizes; ``None`` normalises to the uniform split
+    #: ``(samples_per_device,) * n_devices``
+    shard_sizes: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.n_devices < 1:
+            raise ValueError(
+                f"n_devices must be >= 1, got {self.n_devices}")
+        if self.samples_per_device < 1:
+            raise ValueError(f"samples_per_device must be >= 1, got "
+                             f"{self.samples_per_device}")
+        if self.n_c < 1:
+            raise ValueError(f"n_c must be >= 1, got {self.n_c}")
+        if self.n_o < 0:
+            raise ValueError(f"n_o must be >= 0, got {self.n_o}")
+        if self.T <= 0:
+            raise ValueError(f"T must be > 0, got {self.T}")
+        if self.tau_p <= 0:
+            raise ValueError(f"tau_p must be > 0, got {self.tau_p}")
+        if self.shard_sizes is None:
+            object.__setattr__(
+                self, "shard_sizes",
+                (self.samples_per_device,) * self.n_devices)
+        else:
+            object.__setattr__(self, "shard_sizes",
+                               tuple(int(s) for s in self.shard_sizes))
+        if len(self.shard_sizes) != self.n_devices:
+            raise ValueError(
+                f"{len(self.shard_sizes)} shard sizes for "
+                f"{self.n_devices} devices")
+        if any(s < 1 for s in self.shard_sizes):
+            raise ValueError(f"every shard needs at least one sample, "
+                             f"got {self.shard_sizes}")
+        if max(self.shard_sizes) != self.samples_per_device:
+            raise ValueError(
+                f"samples_per_device={self.samples_per_device} must be "
+                f"the largest shard, got shards {self.shard_sizes}")
 
     @property
     def N_total(self) -> int:
-        return self.n_devices * self.samples_per_device
+        return sum(self.shard_sizes)
 
     def equivalent_single_device(self) -> BlockSchedule:
         """Round-robin TDMA union == one device with (D n_c, D n_o)."""
@@ -44,30 +101,48 @@ class MultiDeviceSchedule:
 
     def available_at(self, t: float) -> int:
         """Union of samples delivered across devices at time t (exact
-        slot-level accounting, for validating the reduction)."""
+        slot-level accounting, for validating the reduction).  Each
+        device is capped at its OWN shard size — with uneven shards the
+        union saturates at ``N_total``, not at ``D * max_shard``."""
         slot = self.n_c + self.n_o
         slots_done = int(t // slot)
         per_dev_blocks = [slots_done // self.n_devices
                           + (1 if d < slots_done % self.n_devices else 0)
                           for d in range(self.n_devices)]
-        return sum(min(b * self.n_c, self.samples_per_device)
-                   for b in per_dev_blocks)
+        return sum(min(b * self.n_c, s)
+                   for b, s in zip(per_dev_blocks, self.shard_sizes))
 
 
-def plan_multi_device(*, n_devices: int, samples_per_device: int, T: float,
-                      n_o: float, tau_p: float, consts: BoundConstants) -> dict:
+def plan_multi_device(*, n_devices: int, samples_per_device: int = None,
+                      N: int = None, T: float, n_o: float, tau_p: float,
+                      consts: BoundConstants) -> dict:
     """Plan per-device block size via the single-device reduction.
 
     Compatibility wrapper over ``BoundPlanner`` on a ``MultiDevice``
     scenario (the TDMA reduction now lives in
-    :class:`repro.core.scenario.Scenario`)."""
+    :class:`repro.core.scenario.Scenario`).  Give either
+    ``samples_per_device`` (the historical uniform-split form) or a total
+    ``N``: the latter plans the EXACT total and splits it
+    remainder-exactly over the devices (``split_samples``) instead of
+    silently rounding the population to an even multiple of the device
+    count."""
     from repro.core.scenario import BoundPlanner, MultiDevice, Scenario
 
-    scenario = Scenario(N=n_devices * samples_per_device, T=T, n_o=n_o,
-                        tau_p=tau_p, topology=MultiDevice(n_devices))
+    if (samples_per_device is None) == (N is None):
+        raise ValueError(
+            "give exactly one of samples_per_device= or N=")
+    if N is None:
+        shards = (int(samples_per_device),) * int(n_devices)
+        N = n_devices * samples_per_device
+    else:
+        shards = split_samples(int(N), int(n_devices))
+
+    scenario = Scenario(N=int(N), T=T, n_o=n_o, tau_p=tau_p,
+                        topology=MultiDevice(n_devices))
     plan = BoundPlanner().plan(scenario, consts)
     return {"n_c_union": plan.n_c, "n_c_per_device": plan.n_c_per_device,
-            "bound": plan.bound_value,
+            "bound": plan.bound_value, "shard_sizes": shards,
             "schedule": MultiDeviceSchedule(
-                n_devices=n_devices, samples_per_device=samples_per_device,
-                n_c=plan.n_c_per_device, n_o=n_o, T=T, tau_p=tau_p)}
+                n_devices=n_devices, samples_per_device=max(shards),
+                n_c=plan.n_c_per_device, n_o=n_o, T=T, tau_p=tau_p,
+                shard_sizes=shards)}

@@ -1,0 +1,24 @@
+"""Federated round planning: joint device selection + per-participant
+``(rate, n_c)`` operating points under a shared round deadline.
+
+The device-count axis on top of the fleet engine: one jitted call
+evaluates every candidate device's feasibility-masked joint grid and
+solves participation with a sort-and-prefix-scan (see
+:mod:`repro.federated.round_kernels` for the model), validated
+end-to-end by :class:`FederatedSimulator`'s sharded local-SGD rounds
+with deadline-gated aggregation.
+"""
+from repro.federated.round import (FEDERATED_TOKEN, RoundPlan, RoundPlanner,
+                                   RoundRecord, plan_round_bruteforce,
+                                   plan_round_reference, population_key)
+from repro.federated.round_kernels import round_solve
+from repro.federated.simulator import (FederatedRoundReport,
+                                       FederatedSimulator,
+                                       ParticipantResult)
+
+__all__ = [
+    "FEDERATED_TOKEN", "RoundPlan", "RoundPlanner", "RoundRecord",
+    "plan_round_bruteforce", "plan_round_reference", "population_key",
+    "round_solve", "FederatedRoundReport", "FederatedSimulator",
+    "ParticipantResult",
+]

@@ -151,6 +151,41 @@ class PlanCache:
                 self._store.popitem(last=False)
                 self.evictions += 1
 
+    def get_by_key(self, key: Hashable, label: str = "default"):
+        """Cached record under a caller-built raw key (counted under
+        ``label`` in the per-objective stats), or ``None``.
+
+        The escape hatch for workloads whose request is NOT one scenario
+        — the federated round path keys on ``(round context,
+        FEDERATED_TOKEN, population_key(...))``.  Raw keys share the LRU
+        with scenario entries but can never collide with them: a
+        scenario key's last element is a tuple of quantised scalars,
+        a population key's a tuple of whole scenario signatures (and the
+        federated token differs from every ``Objective.cache_token()``).
+        """
+        with self._lock:
+            rec = self._store.get(key)
+            if rec is None:
+                self.misses += 1
+                self.misses_by_objective[label] = \
+                    self.misses_by_objective.get(label, 0) + 1
+                return None
+            self._store.move_to_end(key)
+            self.hits += 1
+            self.hits_by_objective[label] = \
+                self.hits_by_objective.get(label, 0) + 1
+            return rec
+
+    def put_by_key(self, key: Hashable, record) -> None:
+        """Store a record under a caller-built raw key (see
+        :meth:`get_by_key`)."""
+        with self._lock:
+            self._store[key] = record
+            self._store.move_to_end(key)
+            while len(self._store) > self.maxsize:
+                self._store.popitem(last=False)
+                self.evictions += 1
+
     def invalidate(self, scenario: Scenario, context: Hashable = (),
                    objective=None) -> bool:
         """Drop the entry for this (quantised) scenario under ``context``

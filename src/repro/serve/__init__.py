@@ -12,20 +12,24 @@ plan priced.  See ``README.md`` ("Serving") for the architecture sketch.
 from repro.serve import export
 from repro.serve.batcher import MicroBatcher, PlanRequest, group_requests
 from repro.serve.catalogue import (ALL_MODELS, ALL_OBJECTIVES,
-                                   LINK_FACTORIES, OBJECTIVE_FACTORIES,
-                                   RATE_SET, default_consts, mc_update_floor,
+                                   FEDERATED_KIND, LINK_FACTORIES,
+                                   OBJECTIVE_FACTORIES, RATE_SET,
+                                   default_consts, mc_update_floor,
                                    parse_models, resolve_grid_modes,
-                                   resolve_objectives, synth_requests)
+                                   resolve_objectives, synth_population,
+                                   synth_requests)
 from repro.serve.policy import (AdmissionDecision, LinkAwarePolicy,
                                 PolicySpec, StaticPolicy, policy_spec,
                                 register_policy, registered_policies,
                                 unregister_policy)
 from repro.serve.service import PlanningService, ServiceConfig
 from repro.serve.sessions import Session, SessionTracker, reestimate_link
-from repro.serve.stats import ServiceStats, StatsRecorder, percentiles
+from repro.serve.stats import (FederatedRecorder, ServiceStats,
+                               StatsRecorder, percentiles)
 
 __all__ = [
-    "ALL_MODELS", "ALL_OBJECTIVES", "AdmissionDecision", "LINK_FACTORIES",
+    "ALL_MODELS", "ALL_OBJECTIVES", "AdmissionDecision", "FEDERATED_KIND",
+    "FederatedRecorder", "LINK_FACTORIES",
     "LinkAwarePolicy", "MicroBatcher", "OBJECTIVE_FACTORIES",
     "PlanRequest", "PlanningService", "PolicySpec", "RATE_SET",
     "ServiceConfig", "ServiceStats", "Session", "SessionTracker",
@@ -33,6 +37,6 @@ __all__ = [
     "group_requests",
     "mc_update_floor", "parse_models", "percentiles", "policy_spec",
     "reestimate_link", "register_policy", "registered_policies",
-    "resolve_grid_modes", "resolve_objectives", "synth_requests",
-    "unregister_policy",
+    "resolve_grid_modes", "resolve_objectives", "synth_population",
+    "synth_requests", "unregister_policy",
 ]

@@ -36,6 +36,12 @@ from repro.fleet.objective_kernels import pow2ceil
 
 RATE_SET = (1.0, 1.25, 1.5, 2.0, 3.0)
 
+#: Request kind for federated round planning (the population-level
+#: workload served by ``PlanningService.submit_round``); also the leading
+#: element of the federated cache key, so round entries can never alias
+#: per-device plan entries.
+FEDERATED_KIND = "federated_round"
+
 
 def default_consts() -> BoundConstants:
     """The paper's edge-ridge bound constants (Sec. 5)."""
@@ -216,3 +222,37 @@ def synth_requests(n: int, *, seed: int = 0, dup_frac: float = 0.5,
             link=c["link"],
             topology=MultiDevice(c["D"]) if c["D"] > 1 else SingleDevice()))
     return out
+
+
+def synth_population(n_devices: int, *, seed: int = 0,
+                     models: Sequence[str] = ALL_MODELS,
+                     n_max: int = 4096, deadline_frac: float = 1.6):
+    """Synthetic federated-round candidate population.
+
+    Draws ``n_devices`` heterogeneous devices (dataset size, overhead,
+    update period and a link from ``models`` — Gilbert-Elliott rows are
+    the natural stragglers) and one SHARED round deadline
+    ``deadline_frac * median(N)``; every scenario carries the deadline as
+    its own ``T``, so :meth:`RoundPlanner.resolve_deadline` (the
+    population minimum) recovers it.  Returns ``(population, deadline)``.
+    Unknown model names raise ``ValueError`` (CLIs map that to exit 2).
+    """
+    unknown = [m for m in models if m not in LINK_FACTORIES]
+    if unknown:
+        raise ValueError(
+            f"unknown link model name(s) {unknown}; "
+            f"available: {sorted(LINK_FACTORIES)}")
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if n_max <= 256:
+        raise ValueError(f"n_max must be > 256, got {n_max}")
+    rng = np.random.default_rng(seed)
+    Ns = [int(rng.integers(256, n_max)) for _ in range(n_devices)]
+    deadline = float(deadline_frac) * float(np.median(Ns))
+    population = [
+        Scenario(N=N, T=deadline, n_o=float(rng.uniform(1.0, 1000.0)),
+                 tau_p=float(rng.choice([0.5, 1.0, 2.0])),
+                 link=LINK_FACTORIES[
+                     models[int(rng.integers(len(models)))]](rng))
+        for N in Ns]
+    return population, deadline

@@ -35,6 +35,11 @@ _by_objective_total``
 ``repro_serve_events_total``                      counter    kind
 ``repro_fleet_kernel_traces_total``               counter    kind, shape
 ``repro_fleet_traces_total``                      counter    —
+``repro_federated_rounds_total``                  counter    —
+``repro_federated_participants_total``            counter    —
+``repro_federated_infeasible_rounds_total``       counter    —
+``repro_federated_round_latency_seconds``         histogram  —
+``repro_federated_round_time_seconds``            histogram  —
 ================================================  =========  ==========
 
 :func:`register_service_sources` wires a live
@@ -191,6 +196,33 @@ def span_metrics(spans: SpanRecorder) -> List[Metric]:
     ]
 
 
+def federated_metrics(recorder) -> List[Metric]:
+    """The federated round path's counters and distributions (a
+    :class:`~repro.serve.stats.FederatedRecorder` snapshot) as
+    ``repro_federated_*`` families."""
+    snap = recorder.snapshot()
+    out = [
+        Metric("repro_federated_rounds_total", "counter",
+               "federated rounds planned").add(float(snap["rounds"])),
+        Metric("repro_federated_participants_total", "counter",
+               "participants selected across all rounds")
+        .add(float(snap["participants"])),
+        Metric("repro_federated_infeasible_rounds_total", "counter",
+               "rounds with no deadline-feasible participant")
+        .add(float(snap["infeasible_rounds"])),
+    ]
+    if snap["latency_hist"]:
+        out.append(Metric("repro_federated_round_latency_seconds",
+                          "histogram", "submit_round latency")
+                   .add(LogHistogram.from_dict(snap["latency_hist"])))
+    if snap["round_time_hist"]:
+        out.append(Metric("repro_federated_round_time_seconds",
+                          "histogram",
+                          "planned straggler-bounded round time")
+                   .add(LogHistogram.from_dict(snap["round_time_hist"])))
+    return out
+
+
 def journal_metrics(journal: EventJournal) -> List[Metric]:
     """Lifetime per-kind event counts from the audit journal."""
     m = Metric("repro_serve_events_total", "counter",
@@ -216,6 +248,8 @@ def register_service_sources(registry: MetricsRegistry,
         "spans", lambda: span_metrics(service.spans))
     registry.register_source(
         "events", lambda: journal_metrics(service.journal))
+    registry.register_source(
+        "federated", lambda: federated_metrics(service.federated))
 
 
 def oneshot_metrics(stats, cache=None) -> MetricsRegistry:

@@ -55,6 +55,8 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 from repro.core.bounds import BoundConstants
 from repro.core.scenario import Scenario
+from repro.federated.round import (FEDERATED_TOKEN, RoundPlanner,
+                                   RoundRecord, population_key)
 from repro.fleet import GRID_MODES, FleetPlanner, PlanCache
 from repro.fleet.objective_kernels import pow2ceil
 from repro.fleet.tracing import trace_delta
@@ -62,12 +64,13 @@ from repro.obs import (EventJournal, MetricsRegistry, RequestSpan,
                        SpanRecorder, solve_delta)
 from repro.serve import export
 from repro.serve.batcher import MicroBatcher, PlanRequest
-from repro.serve.catalogue import (ALL_MODELS, default_consts,
-                                   mc_update_floor, resolve_objectives,
+from repro.serve.catalogue import (ALL_MODELS, FEDERATED_KIND,
+                                   default_consts, mc_update_floor,
+                                   resolve_objectives, synth_population,
                                    synth_requests)
 from repro.serve.policy import policy_spec
 from repro.serve.sessions import Session, SessionTracker, reestimate_link
-from repro.serve.stats import ServiceStats, StatsRecorder
+from repro.serve.stats import FederatedRecorder, ServiceStats, StatsRecorder
 
 
 @dataclass(frozen=True)
@@ -99,6 +102,12 @@ class ServiceConfig:
     min_observations: int = 20
     shard: bool = True
     warm_models: Tuple[str, ...] = ALL_MODELS
+    #: federated-round population pad shapes (ascending powers of two).
+    #: Empty (the default) leaves the round path cold: ``submit_round``
+    #: still works, but the first round at each population shape pays a
+    #: trace.  Non-empty buckets are AOT-warmed like batch buckets, so
+    #: round requests inside the largest bucket hit compiled code only.
+    population_buckets: Tuple[int, ...] = ()
     #: span ring capacity (lifetime phase TOTALS are kept regardless;
     #: the ring holds the most recent complete traces)
     span_capacity: int = 8192
@@ -118,6 +127,16 @@ class ServiceConfig:
         if tuple(sorted(self.batch_buckets)) != tuple(self.batch_buckets):
             raise ValueError(
                 f"batch_buckets must ascend, got {self.batch_buckets}")
+        for b in self.population_buckets:
+            if b < 1 or pow2ceil(int(b)) != int(b):
+                raise ValueError(
+                    f"population_buckets must be powers of two, got "
+                    f"{self.population_buckets}")
+        if tuple(sorted(self.population_buckets)) != \
+                tuple(self.population_buckets):
+            raise ValueError(
+                f"population_buckets must ascend, got "
+                f"{self.population_buckets}")
         unknown = [m for m in self.grid_modes if m not in GRID_MODES]
         if unknown:
             raise ValueError(
@@ -163,6 +182,9 @@ class PlanningService:
                                 else 0))
         self.policy = policy if policy is not None \
             else policy_spec(cfg.policy_id).cls()
+        self.round_planner = RoundPlanner(grid_size=cfg.grid_size,
+                                          shard=cfg.shard)
+        self.federated = FederatedRecorder()
         self.sessions = SessionTracker(
             drift_threshold=cfg.drift_threshold,
             ewma_alpha=cfg.ewma_alpha,
@@ -223,6 +245,19 @@ class PlanningService:
                     total += traces
                     self.recorder.record_bucket(oid, mode, bucket,
                                                 compiles=traces)
+        if cfg.population_buckets:
+            # federated rounds use the catalogue rate set too, but draw
+            # through synth_population so the warm batch carries the
+            # round-request signature (shared deadline, D = 1)
+            pop, _ = synth_population(cfg.population_buckets[0], seed=0,
+                                      models=cfg.warm_models,
+                                      n_max=min(cfg.n_max, 4096))
+            for bucket in cfg.population_buckets:
+                traces = self.round_planner.warm(
+                    pop[:bucket], self.consts, pad_to=bucket)
+                total += traces
+                self.recorder.record_bucket(FEDERATED_KIND, "dense",
+                                            bucket, compiles=traces)
         self.warmup_seconds = time.perf_counter() - t0
         self.warmup_traces = total
         self.warmed = True
@@ -230,7 +265,8 @@ class PlanningService:
                           seconds=round(self.warmup_seconds, 6),
                           objectives=sorted(self.objectives),
                           grid_modes=list(cfg.grid_modes),
-                          buckets=list(cfg.batch_buckets))
+                          buckets=list(cfg.batch_buckets),
+                          population_buckets=list(cfg.population_buckets))
         self.recorder.restart_clock()
         return total
 
@@ -287,6 +323,71 @@ class PlanningService:
         self.recorder.count("requests")
         self.batcher.submit(request)
         return request.future
+
+    def _population_bucket(self, n: int) -> int:
+        """The pad shape for an ``n``-device round: the smallest
+        configured population bucket that fits, else (an unwarmed
+        population size) the next power of two."""
+        for b in self.config.population_buckets:
+            if n <= b:
+                return int(b)
+        return pow2ceil(n)
+
+    def submit_round(self, population: Sequence[Scenario], *,
+                     deadline: Optional[float] = None) -> RoundRecord:
+        """Plan one federated round over a candidate population —
+        synchronous (a round is a population-level decision, not a
+        per-device stream; there is nothing to micro-batch it with).
+
+        The population is padded to the smallest configured
+        ``population_buckets`` entry that fits (so warmed services pay
+        zero traces), solved by the shared :class:`~repro.federated.
+        round.RoundPlanner`, and cached under ``(round context,
+        FEDERATED_TOKEN, population_key)`` in the same
+        :class:`~repro.fleet.PlanCache` as per-device plans — the key
+        shapes guarantee a round entry can never alias one (see
+        ``PlanCache.get_by_key``).  Returns the round's
+        :class:`~repro.federated.round.RoundRecord`.
+        """
+        t_start = time.perf_counter()
+        population = list(population)
+        if not population:
+            raise ValueError("population must be non-empty")
+        if deadline is None:
+            deadline = self.round_planner.resolve_deadline(population)
+        bucket = self._population_bucket(len(population))
+        key = (self.round_planner.cache_context(self.consts),
+               FEDERATED_TOKEN,
+               population_key(population, deadline,
+                              self.config.sig_digits))
+        self.recorder.count("round_requests")
+        record = self.cache.get_by_key(key, label=FEDERATED_KIND)
+        if record is None:
+            with trace_delta() as traces, solve_delta():
+                plan = self.round_planner.plan_round(
+                    population, self.consts, deadline=deadline,
+                    pad_to=bucket)
+            record = plan.record()
+            self.cache.put_by_key(key, record)
+            self.recorder.record_bucket(FEDERATED_KIND, "dense", bucket,
+                                        requests=1, batches=1,
+                                        compiles=traces.total)
+            if traces.total and self.warmed:
+                self.recorder.count("post_warmup_traces", traces.total)
+        else:
+            self.recorder.record_bucket(FEDERATED_KIND, "dense", bucket,
+                                        requests=1)
+        latency = time.perf_counter() - t_start
+        self.recorder.count("planned")
+        self.recorder.record_latency(latency,
+                                     key=(FEDERATED_KIND, "dense", bucket))
+        self.federated.observe(record, latency)
+        self.journal.emit("federated_round", devices=len(population),
+                          bucket=bucket, k=record.n_participants,
+                          eligible=record.n_eligible,
+                          feasible=record.feasible,
+                          deadline=round(float(deadline), 6))
+        return record
 
     def _chunk_buckets(self, n: int):
         """Greedy bucket cover of ``n`` requests: repeatedly the largest

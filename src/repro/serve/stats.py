@@ -166,3 +166,48 @@ class StatsRecorder:
             buckets=buckets, counters=counters,
             cache=dict(cache_stats) if cache_stats else {},
             latency_hist=lat_hist, histograms=hists)
+
+
+class FederatedRecorder:
+    """Thread-safe accumulator for the federated round path.
+
+    Rounds are synchronous population-level requests (one
+    ``submit_round`` call = one round), so they get their own counters
+    and histograms instead of riding the per-scenario request stats:
+    lifetime round / participant / infeasible-round counts, the
+    submit-to-record planning latency, and the PLANNED straggler-bounded
+    round time — both as mergeable log histograms so the Prometheus
+    export ships full distributions (``repro_federated_*`` families, see
+    :mod:`repro.serve.export`).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.rounds = 0
+        self.participants = 0
+        self.infeasible_rounds = 0
+        self._latency = _new_hist()
+        self._round_time = LogHistogram(1e-2, 1e9, 10)
+
+    def observe(self, record, latency_s: float) -> None:
+        """Account one planned round (a :class:`~repro.federated.round.
+        RoundRecord`) and its submit-to-record latency."""
+        with self._lock:
+            self.rounds += 1
+            self.participants += int(record.n_participants)
+            if not record.feasible:
+                self.infeasible_rounds += 1
+            else:
+                self._round_time.record(float(record.round_time))
+            self._latency.record(float(latency_s))
+
+    def snapshot(self) -> Dict[str, object]:
+        """Consistent copy of every counter + serialised histograms."""
+        with self._lock:
+            return {
+                "rounds": self.rounds,
+                "participants": self.participants,
+                "infeasible_rounds": self.infeasible_rounds,
+                "latency_hist": self._latency.to_dict(),
+                "round_time_hist": self._round_time.to_dict(),
+            }

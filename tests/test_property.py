@@ -110,3 +110,76 @@ def test_log_histogram_merge_associative_commutative(chunks):
         assert left.count == other.count
         assert left.max == other.max
         np.testing.assert_allclose(left.sum, other.sum, rtol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 16),
+    size=st.integers(2, 8),
+)
+def test_scenario_batch_survives_pad_plan_unpad(seed, size):
+    """Satellite invariant: a mixed-link population's device counts and
+    packed link params survive pad -> plan -> unpad BITWISE — the
+    federated round planner pads to serving buckets, and a pad lane that
+    perturbed a real lane's batch row would silently re-plan a different
+    device."""
+    from repro.core import (ErasureLink, GilbertElliottLink, IdealLink,
+                            MultiDevice, Scenario, SingleDevice)
+    from repro.federated import RoundPlanner, plan_round_reference
+    from repro.fleet.batch import ScenarioBatch
+    from repro.fleet.planner import _pad_batch
+    from repro.serve import default_consts
+
+    rates = (1.0, 1.25, 1.5, 2.0, 3.0)
+    rng = np.random.default_rng(seed)
+    pop = []
+    for i in range(size):
+        link = [
+            IdealLink(rates=rates),
+            ErasureLink(beta=float(rng.uniform(0.0, 1.0)),
+                        p_base=float(rng.uniform(0.0, 0.5)), rates=rates),
+            GilbertElliottLink(p_gb=float(rng.uniform(0.05, 0.9)),
+                               p_bg=float(rng.uniform(0.05, 0.9)),
+                               p_good=float(rng.uniform(0.0, 0.4)),
+                               p_bad=float(rng.uniform(0.1, 0.9)),
+                               beta=float(rng.uniform(0.0, 1.0)),
+                               rates=rates),
+        ][i % 3]
+        D = int(rng.integers(1, 5))
+        n = int(rng.integers(64, 2048))
+        pop.append(Scenario(
+            N=n, T=float(rng.uniform(0.8, 2.0)) * n,
+            n_o=float(rng.uniform(0.0, 500.0)),
+            tau_p=float(rng.choice([0.5, 1.0, 2.0])), link=link,
+            topology=MultiDevice(D) if D > 1 else SingleDevice()))
+
+    # pad: real lanes are bitwise-identical to the unpadded batch
+    batch = ScenarioBatch.from_scenarios(pop)
+    padded = ScenarioBatch.from_scenarios(_pad_batch(list(pop), 8))
+    assert len(padded) == 8
+    for arr, parr in [(batch.n_devices, padded.n_devices),
+                      (batch.link_model_id, padded.link_model_id),
+                      (batch.link_params, padded.link_params),
+                      (batch.rates, padded.rates),
+                      (batch.N, padded.N), (batch.n_o, padded.n_o)]:
+        assert np.array_equal(arr, parr[:size])
+    # ... and round-trip losslessly through __getitem__
+    for i, sc in enumerate(pop):
+        got = padded[i]
+        assert got.n_devices == sc.n_devices
+        assert np.array_equal(np.asarray(got.link.pack_params(), np.float64),
+                              np.asarray(sc.link.pack_params(), np.float64))
+        assert type(got.link) is type(sc.link)
+
+    # plan -> unpad: the planner's per-device outputs cover exactly the
+    # real population and agree with the unpadded numpy reference
+    consts = default_consts()
+    deadline = 1.4 * float(np.median([sc.N for sc in pop]))
+    plan = RoundPlanner(grid_size=8).plan_round(pop, consts,
+                                                deadline=deadline, pad_to=8)
+    assert len(plan) == size
+    assert sorted(plan.order.tolist()) == list(range(size))
+    ref = plan_round_reference(pop, consts, deadline=deadline, grid_size=8)
+    assert np.array_equal(plan.participants, ref.participants)
+    assert np.array_equal(plan.n_c, ref.n_c)
+    assert np.array_equal(plan.rate, ref.rate)

@@ -44,10 +44,21 @@ plans/sec CSV row is emitted per (objective, grid mode) and the whole
 table is written to ``BENCH_fleet.json`` at the repo root (schema:
 objective, grid_mode, S, plans_per_sec, speedup) as the perf-trajectory
 artifact CI uploads.
+
+The ``montecarlo`` comparison is followed by the FAST configuration
+(common random numbers + the (32, 6) multi-level seed/stride schedule,
+a 2048-slot coarse-pass horizon cap and a +/-10-step fine window; the
+``refine_fast`` row): a HARD >= 10x plans/sec floor over the refined
+scan baseline re-timed INTERLEAVED with the fast path in the same
+process (single-core wall time drifts tens of percent between
+processes, so only interleaved repeats give a stable ratio), plus
+same-estimator argmin parity, an exact-reference objective-gap ceiling,
+and zero retraces during the timed repeats.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -60,6 +71,7 @@ from repro.core import BoundPlanner, MarkovARQObjective, ObjectivePlanner
 from repro.core.planner import fleet_grid
 from repro.core.scenario import MultiDevice, Scenario, SingleDevice
 from repro.fleet import GRID_MODES, FleetPlanner, PlanCache, ScenarioBatch
+from repro.fleet.tracing import trace_delta
 from repro.launch.plan_server import (ALL_MODELS, ALL_OBJECTIVES,
                                       LINK_FACTORIES, _parse_models,
                                       default_consts, resolve_grid_modes,
@@ -93,6 +105,29 @@ MC_REFINE_SCENARIOS = 16
 MC_REFINE_SPEEDUP_FLOOR = 3.0    # refined montecarlo vs its dense path
 MC_REFINE_PARITY_FLOOR = 0.5     # MC's landscape is seed-noise-ragged
 MC_REFINE_GAP_CEIL = 0.05
+
+# ---- Monte-Carlo at serving speed (CRN + seed/stride schedules) ------------
+# The fast configuration attacks the corollary1-vs-montecarlo planning gap:
+# the common-random-numbers estimator plus a (32, 6) multi-level stride
+# schedule with a 1-seed / top-1-rate coarse budget evaluates ~62 simulated
+# lane-runs per scenario instead of the dense 1280, and the coarse passes
+# additionally train a TRUNCATED 2048-slot horizon (a bitwise prefix of
+# the full timeline under CRN) — basin ranking survives the truncation,
+# and the +/-10-step fine window (wider than the last stride's +/-6)
+# repairs the residual center drift at full horizon / full seeds.  A HARD
+# >= 10x plans/sec floor over the PR-5 refined scan baseline, re-timed
+# interleaved with the fast path.  Quality gates: argmin parity against
+# the dense solve of the SAME CRN estimator (the empirical landscape is
+# seed-noise ragged, so ANY estimator change moves near-tie argmins —
+# cross-estimator parity is not a meaningful gate) and the residual
+# objective gap against the exact-stream dense reference.
+MC_FAST_SCENARIOS = 64           # larger batch: fixed per-stage costs
+MC_FAST_STRIDES = (32, 6)        # amortise across the batch
+MC_FAST_FINE_RADIUS = 10         # dense fine window: +/-10 grid steps
+MC_FAST_COARSE_UPDATES = 2048    # coarse-pass horizon cap (update slots)
+MC_FAST_SPEEDUP_FLOOR = 10.0     # vs the refined scan baseline (PR 5)
+MC_FAST_PARITY_FLOOR = 0.5       # vs the dense same-estimator solve
+MC_FAST_GAP_CEIL = 0.05          # vs the exact-stream dense reference
 
 #: perf-trajectory artifact written at the repo root (schema: one row per
 #: (objective, grid_mode) with plans/sec and refined-vs-dense speedup)
@@ -172,6 +207,88 @@ def _bench_refine(objective_id, objective, scenarios, grid_size, consts,
     assert speedup >= speedup_floor, (
         f"refined {objective_id} only {speedup:.2f}x over its dense path "
         f"(want >= {speedup_floor:.0f}x at S={S}, G={grid_size})")
+    return {"speedup": speedup, "plans": plans, "times": times,
+            "batch": batch, "grids": grids}
+
+
+def _bench_mc_fast(objective, ref, consts, repeats, rows):
+    """Monte-Carlo at serving speed: CRN + the (32, 6) multi-level seed/
+    stride schedule with a 2048-slot coarse horizon and a +/-10-step fine
+    window, vs the refined scan baseline from ``ref`` (the ``montecarlo``
+    ``_bench_refine`` section) RE-TIMED here interleaved with the fast
+    path — single-core wall time drifts tens of percent over minutes, so
+    only alternating repeats in one process yield a stable ratio.
+
+    Asserts the >= 10x plans/sec floor, the same-estimator argmin parity
+    floor on the baseline's fixed S=16 cases, the residual objective gap
+    ceiling vs the exact-stream dense reference, and that the timed
+    repeats retrace NOTHING (the serving posture: after the first call
+    at a shape, planning is pure compiled execution)."""
+    fast = dataclasses.replace(objective, crn=True, coarse_seeds=1,
+                               refine_rates=1,
+                               coarse_strides=MC_FAST_STRIDES,
+                               fine_radius=MC_FAST_FINE_RADIUS,
+                               coarse_updates=MC_FAST_COARSE_UPDATES)
+    planner = FleetPlanner(grid_size=MC_REFINE_GRID_SIZE,
+                           grid_mode="refine")
+    # quality gates on the baseline's fixed cases
+    batch16, grids16 = ref["batch"], ref["grids"]
+    dense_crn = planner.plan_batch(
+        batch16, consts, grid=grids16, grid_mode="dense",
+        objective=dataclasses.replace(objective, crn=True))
+    fast16 = planner.plan_batch(batch16, consts, grid=grids16,
+                                objective=fast)
+    parity = float(np.mean((fast16.n_c == dense_crn.n_c)
+                           & (fast16.rate == dense_crn.rate)))
+    exact_dense = ref["plans"]["dense"]
+    gap = float(np.max(np.abs(fast16.bound_value /
+                              exact_dense.bound_value - 1)))
+
+    # throughput at S=64 — the same draw stream as the fixed cases (its
+    # first 16 scenarios ARE the parity population)
+    scenarios = _mc_refine_population(MC_FAST_SCENARIOS, seed=29)
+    batch = ScenarioBatch.from_scenarios(scenarios)
+    grids = fleet_grid(batch.N, MC_REFINE_GRID_SIZE)
+    S = len(batch)
+
+    def solve():
+        return planner.plan_batch(batch, consts, grid=grids,
+                                  objective=fast)
+
+    def solve_baseline():
+        return planner.plan_batch(batch16, consts, grid=grids16,
+                                  objective=objective)
+
+    solve()                                           # compile + warm
+    solve_baseline()            # warm (compiled by the _bench_refine run)
+    t_fast = t_base = float("inf")
+    with trace_delta() as traces:
+        for _ in range(repeats):
+            t_base = min(t_base, _timed(solve_baseline))
+            t_fast = min(t_fast, _timed(solve))
+    baseline_pps = len(batch16) / t_base
+    fast_pps = S / t_fast
+    speedup = fast_pps / baseline_pps
+    rows.append({"objective": "montecarlo", "grid_mode": "refine_fast",
+                 "S": S, "plans_per_sec": fast_pps, "speedup": speedup})
+    emit("fleet_refine_montecarlo_fast", t_fast * 1e6,
+         f"S={S} G={MC_REFINE_GRID_SIZE} strides={MC_FAST_STRIDES} "
+         f"hz={MC_FAST_COARSE_UPDATES} rf={MC_FAST_FINE_RADIUS} "
+         f"{fast_pps:,.0f}plans/s speedup={speedup:.2f}x "
+         f"parity={parity:.3f} maxgap={gap:.1e}")
+    assert traces.total == 0, (
+        f"fast montecarlo timed repeats retraced {traces.total} kernels "
+        f"({traces.by_tag}) — the schedule's shapes are not stable")
+    assert parity >= MC_FAST_PARITY_FLOOR, (
+        f"fast montecarlo parity {parity:.3f} vs the dense CRN solve "
+        f"< {MC_FAST_PARITY_FLOOR} over {len(batch16)} scenarios")
+    assert gap <= MC_FAST_GAP_CEIL, (
+        f"fast montecarlo residual objective gap {gap:.2e} vs the exact "
+        f"dense reference exceeds {MC_FAST_GAP_CEIL:.0e}")
+    assert speedup >= MC_FAST_SPEEDUP_FLOOR, (
+        f"fast montecarlo only {speedup:.2f}x over the refined scan "
+        f"baseline ({fast_pps:.1f} vs {baseline_pps:.1f} plans/s; want "
+        f">= {MC_FAST_SPEEDUP_FLOOR:.0f}x)")
     return speedup
 
 
@@ -227,13 +344,15 @@ def run(models=ALL_MODELS, objectives=ALL_OBJECTIVES, grid_modes=GRID_MODES):
                 parity_floor=REFINE_PARITY_FLOOR,
                 gap_ceil=REFINE_GAP_CEIL, rows=bench_rows)
         if "montecarlo" in catalogue:
-            _bench_refine(
+            mc_ref = _bench_refine(
                 "montecarlo", catalogue["montecarlo"],
                 _mc_refine_population(MC_REFINE_SCENARIOS, seed=29),
                 MC_REFINE_GRID_SIZE, consts, repeats=2,
                 speedup_floor=MC_REFINE_SPEEDUP_FLOOR,
                 parity_floor=MC_REFINE_PARITY_FLOOR,
                 gap_ceil=MC_REFINE_GAP_CEIL, rows=bench_rows)
+            _bench_mc_fast(catalogue["montecarlo"], mc_ref, consts,
+                           repeats=3, rows=bench_rows)
     # dup_frac=0 -> every request is a distinct device class (worst case
     # for the cache, the right population for a raw-throughput comparison)
     scenarios = synth_requests(N_SCENARIOS, seed=11, dup_frac=0.0,

@@ -31,7 +31,8 @@ from repro.core.protocol import BlockSchedule
 
 def montecarlo_objective_grid(X, y, scenario, grid, rates, *,
                               lam: float = 0.05, alpha: float = 1e-4,
-                              n_runs: int = 3, seed: int = 0) -> np.ndarray:
+                              n_runs: int = 3, seed: int = 0,
+                              seed_stream: str = "fold_in") -> np.ndarray:
     """Scalar reference of the Monte-Carlo ridge objective: the ``(R, G)``
     empirical mean final loss over the joint ``(rate, n_c)`` grid.
 
@@ -52,7 +53,7 @@ def montecarlo_objective_grid(X, y, scenario, grid, rates, *,
             vals[ri, gi] = average_final_loss(
                 X, y, n_c=int(n_c), n_o=n_o_eff, T=scenario.T,
                 tau_p=scenario.tau_p, n_runs=n_runs, alpha=alpha, lam=lam,
-                seed=seed)
+                seed=seed, seed_stream=seed_stream)
     return vals
 
 

@@ -97,11 +97,60 @@ class RefineHints:
         simulated training run, and its empirical landscape has no
         ``ceil(B_d)`` algebra), trading a small documented parity residue
         for the full lane cut.
+      * ``coarse_seeds`` — SEED-COUNT SCHEDULE for simulated objectives:
+        run the coarse pass with only this many Monte-Carlo seeds (the
+        coarse pass only has to locate basins; the full ``n_runs`` seeds
+        are spent where they matter, on the fine windows).  ``None``
+        keeps the full seed count on both passes (the pinned reference
+        behaviour).  ``0`` is the schedule's limit — a BOUND-GUIDED
+        coarse pass: skip the Monte-Carlo coarse solve entirely and take
+        the per-rate window centers from a full-grid Corollary-1 solve
+        (the closed-form bound as a zeroth-order estimate of the
+        empirical landscape; it is ~4 orders of magnitude cheaper than
+        one simulated grid point, so the fine pass becomes the whole
+        cost).  Ignored by objectives whose kernels don't accept a seed
+        override.
+      * ``refine_rates`` — keep only the best ``refine_rates`` rates per
+        scenario (ranked by the coarse pass's per-rate minima) in the
+        fine pass.  ``None`` refines every rate (the pinned reference
+        behaviour).  For simulated objectives every pruned rate removes
+        a full row of training simulations from the fine pass.
+      * ``coarse_strides`` — MULTI-LEVEL STRIDE SCHEDULE (overrides
+        ``stride``): a descending tuple such as ``(32, 6)``.  Stage 0
+        sweeps the full grid at stride ``coarse_strides[0]`` over all
+        rates; each later stage ``i`` re-centres at step
+        ``coarse_strides[i]`` within ``±coarse_strides[i - 1]`` of the
+        previous stage's per-rate winners; the fine pass then evaluates
+        the dense ``±coarse_strides[-1]`` window.  ``coarse_seeds``
+        applies to EVERY coarse stage and ``refine_rates`` prunes after
+        stage 0, so with ``(32, 6)``/1 seed/1 rate a 128-point grid
+        costs ~62 simulated lane-runs instead of 1280.  Ignored by
+        objectives whose kernels don't accept a seed override.
+      * ``fine_radius`` — widen the dense fine window to ``±fine_radius``
+        grid steps, decoupled from the last coarse stride.  A window
+        wider than ``±coarse_strides[-1]`` buys back the center drift a
+        throttled (few-seed / short-horizon) coarse schedule introduces:
+        the full-seed fine pass re-ranks everything inside the bracket,
+        so a mildly mis-centred window still recovers the dense argmin.
+      * ``coarse_updates`` — HORIZON SCHEDULE for simulated objectives:
+        cap every coarse stage's simulated update timeline at this many
+        update slots (the fine pass always trains the full horizon).
+        Basin ranking stabilises long before training converges, so a
+        quarter-horizon coarse pass costs ~1/4 the scan work at nearly
+        unchanged fine-pass outcomes; far below that the truncated
+        landscape no longer resembles the converged one, so pair a
+        small cap with a generous ``fine_radius``.  Ignored by
+        objectives whose kernels don't accept a horizon override.
     """
 
     min_grid: int = 32
     stride: Optional[int] = None
     tail_blocks: Optional[int] = 32
+    coarse_seeds: Optional[int] = None
+    refine_rates: Optional[int] = None
+    coarse_strides: Optional[Tuple[int, ...]] = None
+    fine_radius: Optional[int] = None
+    coarse_updates: Optional[int] = None
 
 
 def refine_hints_for(objective) -> RefineHints:
@@ -307,18 +356,6 @@ class MonteCarloObjective:
     """
 
     objective_id: ClassVar[str] = "montecarlo"
-    #: Monte-Carlo refinement hints: a capped engagement width (the
-    #: default 12-point MC grid leaves nothing to refine — refinement
-    #: engages on explicitly widened grids) and NO sawtooth-tail guard:
-    #: every tail point would be a full simulated training run, which is
-    #: exactly the work refinement exists to eliminate, and the empirical
-    #: loss has no ceil(B_d)/B_d algebra driving the bound's tail teeth.
-    #: stride 10 (vs the sqrt(G/2) default) widens the bracket: the
-    #: empirical loss landscape is seed-noise-ragged near the optimum, and
-    #: the wider window recovers most of the raggedness at a lane cut
-    #: that still clears the >= 3x refinement floor in bench_fleet
-    refine_hints: ClassVar[RefineHints] = RefineHints(
-        min_grid=24, stride=10, tail_blocks=None)
 
     X: Any = None
     y: Any = None
@@ -333,6 +370,39 @@ class MonteCarloObjective:
     #: it compiles to ONE scan length (padded slots no-op, so plans are
     #: unchanged — deliberately NOT part of ``cache_token``).
     min_updates: int = 0
+    #: common random numbers: share ONE uniform draw per update slot
+    #: across every simulation lane (all scenarios, rates and grid
+    #: points) instead of drawing a per-lane sample index.  The sampled
+    #: index is the comonotone ``floor(u * a)``, so nearby grid points
+    #: see maximally-correlated trajectories and their loss DIFFERENCES
+    #: (what the argmin consumes) converge with far fewer seeds.  A
+    #: different (documented) estimator of the same objective: plans are
+    #: not bitwise-pinned to the ``crn=False`` reference stream.
+    crn: bool = False
+    #: per-run RNG-key derivation: ``"fold_in"`` (default) derives run
+    #: ``r``'s key as ``fold_in(PRNGKey(seed), r)`` — collision-free
+    #: across (seed, run) pairs; ``"legacy"`` reproduces the historical
+    #: ``PRNGKey(seed + 97 r)`` streams, which ALIAS across nearby
+    #: objective seeds (seed=0 run 1 == seed=97 run 0) and are kept only
+    #: as a pinned compatibility mode.
+    seed_stream: str = "fold_in"
+    #: optional seed-count schedule / rate pruning for the coarse->fine
+    #: solve (folded into :attr:`refine_hints`; see
+    #: :class:`RefineHints.coarse_seeds` / ``refine_rates``).  ``None``
+    #: keeps the reference two-pass behaviour.
+    coarse_seeds: Optional[int] = None
+    refine_rates: Optional[int] = None
+    #: multi-level stride schedule for the refine solve (see
+    #: :class:`RefineHints.coarse_strides`); a descending tuple of
+    #: positive ints, e.g. ``(32, 6)``.  ``None`` keeps the single
+    #: coarse pass at :attr:`RefineHints.stride`.
+    coarse_strides: Optional[Tuple[int, ...]] = None
+    #: fine-window radius / coarse-pass horizon cap for the refine solve
+    #: (see :class:`RefineHints.fine_radius` / ``coarse_updates``).
+    #: ``None`` keeps the fine window at the last coarse stride and the
+    #: coarse stages on the full update timeline.
+    fine_radius: Optional[int] = None
+    coarse_updates: Optional[int] = None
 
     def __post_init__(self):
         if self.X is None or self.y is None:
@@ -343,13 +413,66 @@ class MonteCarloObjective:
         if self.min_updates < 0:
             raise ValueError(
                 f"min_updates must be >= 0, got {self.min_updates}")
+        if self.seed_stream not in ("fold_in", "legacy"):
+            raise ValueError(
+                f"seed_stream must be 'fold_in' or 'legacy', got "
+                f"{self.seed_stream!r}")
+        if self.coarse_seeds is not None and self.coarse_seeds < 0:
+            raise ValueError(
+                f"coarse_seeds must be >= 0 or None, got "
+                f"{self.coarse_seeds}")
+        if self.refine_rates is not None and self.refine_rates < 1:
+            raise ValueError(
+                f"refine_rates must be >= 1 or None, got "
+                f"{self.refine_rates}")
+        if self.coarse_strides is not None:
+            strides = tuple(int(s) for s in self.coarse_strides)
+            if not strides or any(s < 1 for s in strides):
+                raise ValueError(
+                    f"coarse_strides must be a non-empty tuple of "
+                    f"positive ints, got {self.coarse_strides!r}")
+            if any(a <= b for a, b in zip(strides, strides[1:])):
+                raise ValueError(
+                    f"coarse_strides must be strictly descending, got "
+                    f"{self.coarse_strides!r}")
+            object.__setattr__(self, "coarse_strides", strides)
+        if self.fine_radius is not None and self.fine_radius < 1:
+            raise ValueError(
+                f"fine_radius must be >= 1 or None, got "
+                f"{self.fine_radius}")
+        if self.coarse_updates is not None and self.coarse_updates < 1:
+            raise ValueError(
+                f"coarse_updates must be >= 1 or None, got "
+                f"{self.coarse_updates}")
+
+    #: Monte-Carlo refinement hints: a capped engagement width (the
+    #: default 12-point MC grid leaves nothing to refine — refinement
+    #: engages on explicitly widened grids) and NO sawtooth-tail guard:
+    #: every tail point would be a full simulated training run, which is
+    #: exactly the work refinement exists to eliminate, and the empirical
+    #: loss has no ceil(B_d)/B_d algebra driving the bound's tail teeth.
+    #: stride 10 (vs the sqrt(G/2) default) widens the bracket: the
+    #: empirical loss landscape is seed-noise-ragged near the optimum, and
+    #: the wider window recovers most of the raggedness at a lane cut
+    #: that still clears the >= 3x refinement floor in bench_fleet.
+    #: The instance's seed schedule (``coarse_seeds`` / ``refine_rates``)
+    #: folds in here, so the planner reads ONE hints object.
+    @property
+    def refine_hints(self) -> RefineHints:
+        return RefineHints(min_grid=24, stride=10, tail_blocks=None,
+                           coarse_seeds=self.coarse_seeds,
+                           refine_rates=self.refine_rates,
+                           coarse_strides=self.coarse_strides,
+                           fine_radius=self.fine_radius,
+                           coarse_updates=self.coarse_updates)
 
     def evaluate(self, scenario, consts, grid, rates):
         from repro.core.montecarlo import montecarlo_objective_grid
 
         return montecarlo_objective_grid(
             self.X, self.y, scenario, grid, rates, lam=self.lam,
-            alpha=self.alpha, n_runs=self.n_runs, seed=self.seed)
+            alpha=self.alpha, n_runs=self.n_runs, seed=self.seed,
+            seed_stream=self.seed_stream)
 
     def effective_overhead(self, scenario, n_c, rate):
         return scenario.effective_overhead(n_c, rate)
@@ -379,7 +502,12 @@ class MonteCarloObjective:
     def cache_token(self) -> Tuple:
         # grid_points is part of the token: it sets the DEFAULT search
         # grid (scalar default_grid and the fleet default_grid_size cap),
-        # so two objectives differing only in it can plan different n_c
+        # so two objectives differing only in it can plan different n_c.
+        # crn / seed_stream change the estimator's sample streams and the
+        # seed schedule changes which lanes even get simulated — none of
+        # those variants may ever alias a reference plan in the cache.
         return (self.objective_id, int(self.n_runs), int(self.seed),
                 float(self.lam), float(self.alpha), int(self.grid_points),
-                self.data_digest)
+                self.data_digest, bool(self.crn), str(self.seed_stream),
+                self.coarse_seeds, self.refine_rates, self.coarse_strides,
+                self.fine_radius, self.coarse_updates)

@@ -84,17 +84,35 @@ _run_scan = partial(jax.jit, static_argnames=(
     "n_c", "n_o", "T", "tau_p", "record_every"))(_scan_core)
 
 
-@partial(jax.jit, static_argnames=("n_c", "n_o", "T", "tau_p", "n_runs"))
+def mc_run_key(seed0, r, seed_stream: str = "fold_in"):
+    """Per-run PRNG key of the Monte-Carlo seed loop.
+
+    ``"fold_in"`` (default) derives run ``r`` as ``fold_in(PRNGKey(seed0),
+    r)`` — distinct (seed0, r) pairs can never share a key.  ``"legacy"``
+    reproduces the historical ``PRNGKey(seed0 + 97 r)`` streams, which
+    alias across nearby base seeds (seed0=0 run 1 == seed0=97 run 0); it
+    exists only to pin old results, e.g. the fleet parity suite.
+    """
+    if seed_stream == "legacy":
+        return jax.random.PRNGKey(seed0 + 97 * r)
+    if seed_stream != "fold_in":
+        raise ValueError(f"unknown seed_stream {seed_stream!r}")
+    return jax.random.fold_in(jax.random.PRNGKey(seed0), r)
+
+
+@partial(jax.jit,
+         static_argnames=("n_c", "n_o", "T", "tau_p", "n_runs",
+                          "seed_stream"))
 def _mc_final_losses(X, y, alpha, lam, seed0, *, n_c: int, n_o: float,
-                     T: float, tau_p: float, n_runs: int):
+                     T: float, tau_p: float, n_runs: int,
+                     seed_stream: str = "fold_in"):
     """Final loss for ``n_runs`` independent seeds as ONE vmapped scan —
     the Monte-Carlo seed loop of the experimental-optimum search runs
     batched instead of one jitted call per seed."""
     n, d = X.shape
-    seeds = seed0 + 97 * jnp.arange(n_runs)
 
-    def one(seed):
-        key = jax.random.PRNGKey(seed)
+    def one(r):
+        key = mc_run_key(seed0, r, seed_stream)
         kp, kw, ks = jax.random.split(key, 3)
         perm = jax.random.permutation(kp, n)
         w0 = jax.random.normal(kw, (d,))
@@ -103,16 +121,18 @@ def _mc_final_losses(X, y, alpha, lam, seed0, *, n_c: int, n_o: float,
                                  record_every=1_000_000_000)
         return floss
 
-    return jax.vmap(one)(seeds)
+    return jax.vmap(one)(jnp.arange(n_runs))
 
 
 def run_pipelined_sgd(X, y, *, n_c: int, n_o: float, T: float,
                       tau_p: float = 1.0, alpha: float = 1e-4,
                       lam: float = 0.05, seed: int = 0,
                       w0: Optional[np.ndarray] = None,
-                      record_every: int = 256) -> StreamResult:
+                      record_every: int = 256,
+                      key=None) -> StreamResult:
     n, d = X.shape
-    key = jax.random.PRNGKey(seed)
+    if key is None:
+        key = jax.random.PRNGKey(seed)
     kp, kw, ks = jax.random.split(key, 3)
     perm = jax.random.permutation(kp, n)
     if w0 is None:
@@ -135,14 +155,18 @@ def average_final_loss(X, y, *, n_c: int, n_o: float, T: float,
     optimum search computes this per candidate n_c).
 
     The seeds run as a single ``jax.vmap``-batched scan rather than a
-    Python loop of jitted calls (same per-seed keys as before: seed0 +
-    97 r).  Passing ``w0`` falls back to the sequential path, which the
-    batched kernel does not support.
+    Python loop of jitted calls.  Per-run keys come from
+    :func:`mc_run_key` — collision-free ``fold_in`` streams by default,
+    ``seed_stream="legacy"`` for the historical ``seed0 + 97 r`` keys.
+    Passing ``w0`` falls back to the sequential path, which the batched
+    kernel does not support.
     """
     seed0 = kw.pop("seed", 0)
+    seed_stream = kw.pop("seed_stream", "fold_in")
     if kw.get("w0") is not None:
-        losses = [run_pipelined_sgd(X, y, n_c=n_c, n_o=n_o, T=T,
-                                    seed=seed0 + 97 * r, **kw).final_loss
+        losses = [run_pipelined_sgd(
+            X, y, n_c=n_c, n_o=n_o, T=T,
+            key=mc_run_key(seed0, r, seed_stream), **kw).final_loss
                   for r in range(n_runs)]
         return float(np.mean(losses))
     kw.pop("w0", None)
@@ -150,7 +174,8 @@ def average_final_loss(X, y, *, n_c: int, n_o: float, T: float,
     losses = _mc_final_losses(
         jnp.asarray(X), jnp.asarray(y), kw.pop("alpha", 1e-4),
         kw.pop("lam", 0.05), seed0, n_c=int(n_c), n_o=float(n_o),
-        T=float(T), tau_p=float(kw.pop("tau_p", 1.0)), n_runs=int(n_runs))
+        T=float(T), tau_p=float(kw.pop("tau_p", 1.0)), n_runs=int(n_runs),
+        seed_stream=str(seed_stream))
     if kw:
         raise TypeError(f"unexpected keyword arguments: {sorted(kw)}")
     return float(np.mean(np.asarray(losses)))

@@ -286,6 +286,7 @@ class MonteCarloPlanner:
     alpha: float = 1e-4
     n_runs: int = 3
     seed: int = 0
+    seed_stream: str = "fold_in"
     grid: Optional[Sequence[int]] = None
     grid_points: int = 12  # MC is expensive: default to a coarse grid
 
@@ -294,6 +295,7 @@ class MonteCarloPlanner:
         objective = MonteCarloObjective(
             X=self.X, y=self.y, lam=self.lam, alpha=self.alpha,
             n_runs=self.n_runs, seed=self.seed,
+            seed_stream=self.seed_stream,
             grid_points=self.grid_points)
         return ObjectivePlanner(objective=objective,
                                 grid=self.grid).plan(scenario, consts)

@@ -34,14 +34,14 @@ from repro.fleet.objective_kernels import (fleet_solve,
                                            objective_kernel_version,
                                            register_objective_kernel,
                                            unregister_objective_kernel)
-from repro.fleet.planner import (GRID_MODES, FleetPlan, FleetPlanner,
-                                 PlanRecord)
+from repro.fleet.planner import (GRID_MODES, MC_IMPLS, FleetPlan,
+                                 FleetPlanner, PlanRecord)
 from repro.fleet.tracing import record_trace, trace_count, trace_events
 
 __all__ = [
     "ScenarioBatch", "corollary1_bound_jax",
     "PlanCache", "scenario_key", "objective_token",
-    "FleetPlan", "FleetPlanner", "PlanRecord", "GRID_MODES",
+    "FleetPlan", "FleetPlanner", "PlanRecord", "GRID_MODES", "MC_IMPLS",
     "register_link_kernel", "unregister_link_kernel",
     "kernel_table", "kernel_table_version",
     "register_objective_kernel", "unregister_objective_kernel",

@@ -25,12 +25,18 @@ Built-in kernels:
     reduction to ``corollary1`` stays bitwise;
   * ``montecarlo`` — the empirical ridge objective: the scalar seed loop
     of ``average_final_loss`` vmapped over scenarios x rates x grid
-    points x seeds as ONE ``lax.scan`` over a shared padded update
-    timeline.  RNG streams (per-seed keys, per-step splits, per-update
+    points x seeds over a shared padded update timeline.  RNG streams
+    (per-run keys via ``seed_stream``, per-step splits, per-update
     sample draws) replicate the scalar path exactly, so fleet plans match
     the scalar Monte-Carlo planner seed-for-seed; training math runs in
     float32 (like the scalar path) while the timeline/overhead arithmetic
-    stays float64.
+    stays float64.  Three simulation engines share that contract: the
+    reference ``lax.scan`` (per-slot RNG in the loop), the table-driven
+    CRN scan (``objective.crn=True``: slab-precomputed index/mask tables
+    + shared per-slot uniforms + affine-fused update), and the pallas
+    slab kernel (``mc_impl="pallas"``,
+    :func:`repro.kernels.mc_ridge.mc_ridge_slab`, interpreted off-TPU)
+    which consumes the same tables bitwise.
 
 Registering a kernel for a custom grid objective needs only its value
 function (see README "Planning objectives")::
@@ -168,6 +174,9 @@ def _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates, rate_mask, grid):
         "full_transfer": delivered >= N,
         "bound_grid": vals[s, ri],
         "gi_per_rate": gi_per_rate,
+        # per-rate minima: what the coarse pass ranks rates by when the
+        # fine pass prunes to the top-K rates (RefineHints.refine_rates)
+        "val_per_rate": jnp.min(masked, axis=2),
     }
     if grid.ndim == 3:
         out["sel_grid"] = grid[s, ri]
@@ -355,10 +364,24 @@ def pow2ceil(n: int) -> int:
     return p
 
 
+#: slab length of the table-driven Monte-Carlo engines (CRN scan and
+#: pallas): the update timeline is processed in slabs of this many slots,
+#: each slab's (slab, L) index/mask tables computed in one vectorised
+#: shot so the inner per-slot loop is pure f32 training math.  A power of
+#: two, so it always divides the pow2-padded ``max_updates``.  256 keeps
+#: a slab's (slab, L) tables inside L2 at serving lane counts and
+#: benches a few percent faster than 512/1024 on one CPU core; the slab
+#: size only partitions the timeline, so plans are bitwise-invariant
+#: to it.
+MC_SLAB = 256
+
+
 @lru_cache(maxsize=8)
-def _mc_solve_for(objective, link_version: int):
+def _mc_solve_for(objective, link_version: int, interpret: bool):
     """Jitted Monte-Carlo solve for one objective instance (its data and
-    hyperparameters are compile-time constants) and link-table version."""
+    hyperparameters — including ``crn`` and ``seed_stream`` — are
+    compile-time constants) and link-table version.  ``interpret`` runs
+    the pallas engine through the Pallas interpreter (the CPU path)."""
     del link_version  # cache key only
     branches = kernel_table()
     # float32 mirrors the scalar path, which runs OUTSIDE enable_x64 and
@@ -370,12 +393,24 @@ def _mc_solve_for(objective, link_version: int):
     alpha = float(objective.alpha)
     n_runs = int(objective.n_runs)
     seed0 = int(objective.seed)
+    crn = bool(getattr(objective, "crn", False))
+    seed_stream = str(getattr(objective, "seed_stream", "legacy"))
 
-    @partial(jax.jit, static_argnames=("max_updates", "shard_lanes"))
+    def run_key(r):
+        # per-run key derivation, mirroring repro.core.pipeline.mc_run_key
+        # (inlined: this runs under jit/vmap with a traced r)
+        if seed_stream == "legacy":
+            return jax.random.PRNGKey(seed0 + 97 * r)
+        return jax.random.fold_in(jax.random.PRNGKey(seed0), r)
+
+    @partial(jax.jit, static_argnames=("max_updates", "shard_lanes",
+                                       "mc_impl", "mc_seeds"))
     def _solve(N, T, union_no, tau_p, rates, rate_mask, grid,
                link_model_id, link_params, *, max_updates,
-               shard_lanes=False):
-        record_trace(("montecarlo",) + tuple(grid.shape) + (max_updates,))
+               shard_lanes=False, mc_impl="scan", mc_seeds=None):
+        runs = int(mc_seeds) if mc_seeds else n_runs
+        record_trace(("montecarlo", mc_impl, crn, runs)
+                     + tuple(grid.shape) + (max_updates,))
         S, R = rates.shape
         G = grid.shape[-1]
         rate = rates[:, :, None]
@@ -408,8 +443,76 @@ def _mc_solve_for(objective, link_version: int):
                 constrain(lane_nc), constrain(lane_dur),
                 constrain(lane_tau), constrain(lane_total))
 
-        def per_seed(seed):
-            key = jax.random.PRNGKey(seed)
+        slab = min(MC_SLAB, max_updates)
+        nslab = max_updates // slab
+        c_reg = jnp.float32(2.0 * alpha * lam / n)
+        c_2a = jnp.float32(-2.0 * alpha)
+
+        def avail_at(j):
+            # samples available at update slot j (f64, mirrors the
+            # host-side BlockSchedule.updates_timeline bit-for-bit);
+            # j may be a scalar slot or a (slab,) slot vector
+            jf = j.astype(lane_dur.dtype)
+            t = (jf[:, None] * lane_tau[None, :] if j.ndim
+                 else jf * lane_tau)
+            blocks = jnp.floor(t / lane_dur).astype(jnp.int64)
+            a = jnp.minimum(blocks * lane_nc, n)
+            live = (jf[:, None] if j.ndim else jf) < lane_total
+            return jnp.where(live, a, 0).astype(jnp.int32)
+
+        def crn_tables(j0, u_s):
+            # the whole slab's timeline in one vectorised shot: the f64
+            # slot->availability map needs no carried state, so it runs
+            # OUTSIDE the per-slot loop and the loop body stays pure f32.
+            a = avail_at(j0 + jnp.arange(slab))                # (slab, L)
+            af = a.astype(jnp.float32)
+            # common random numbers: ONE shared uniform per slot across
+            # every lane; the comonotone floor(u * a) sample index keeps
+            # neighbouring grid points on maximally-correlated paths
+            ix = jnp.minimum((u_s[:, None] * af).astype(jnp.int32),
+                             jnp.maximum(a - 1, 0))
+            return ix, (a > 0).astype(jnp.float32)
+
+        def exact_tables(k, j0):
+            # exact per-slot RNG: one split + one vmapped randint per
+            # slot, consuming the key stream exactly like the reference
+            # scan engine (and the scalar planner) do
+            def tstep(k, j):
+                k, sub = jax.random.split(k)
+                a = avail_at(j)
+                idx = jax.vmap(
+                    lambda b: jax.random.randint(sub, (), 0, b,
+                                                 dtype=jnp.int32)
+                )(jnp.maximum(a, 1))
+                return k, (idx, (a > 0).astype(jnp.float32))
+            return jax.lax.scan(tstep, k, j0 + jnp.arange(slab))
+
+        def scan_slab(W, Xs, ys, ix, m):
+            # the CRN scan engine's inner loop: affine-fused update, no
+            # RNG, no f64 — einsum keeps the lane dot bitwise-identical
+            # to the exact engine's vmapped jnp.dot (and to the pallas
+            # kernel's interpret-mode dot)
+            def inner(W, row):
+                ixr, mr = row
+                xr = Xs[ixr]
+                yr = ys[ixr]
+                dot = jnp.einsum("ld,ld->l", W, xr)
+                c1 = 1.0 - mr * c_reg
+                c2 = mr * c_2a * (dot - yr)
+                return W * c1[:, None] + xr * c2[:, None], None
+            W, _ = jax.lax.scan(inner, W, (ix, m), unroll=2)
+            return W
+
+        def pallas_slab(W, Xs, ys, ix, m):
+            from repro.kernels.mc_ridge import mc_ridge_slab
+            return mc_ridge_slab(W, Xs, ys, ix, m, alpha=alpha, lam=lam,
+                                 fused=crn, interpret=interpret)
+
+        def per_run_exact_scan(r):
+            # the reference engine: per-slot split + randint INSIDE the
+            # scan, vmapped ridge_grad_sample update — op-for-op the
+            # scalar planner's stream, kept as the pinned escape hatch
+            key = run_key(r)
             kp, kw, ks = jax.random.split(key, 3)
             perm = jax.random.permutation(kp, n)
             Xs, ys = X[perm], y[perm]
@@ -419,13 +522,7 @@ def _mc_solve_for(objective, link_version: int):
             def step(carry, j):
                 W, k = carry
                 k, sub = jax.random.split(k)
-                # samples available at update slot j (f64, mirrors the
-                # host-side BlockSchedule.updates_timeline bit-for-bit)
-                t = j.astype(lane_dur.dtype) * lane_tau
-                blocks = jnp.floor(t / lane_dur).astype(jnp.int64)
-                a = jnp.minimum(blocks * lane_nc, n)
-                a = jnp.where(j.astype(lane_dur.dtype) < lane_total,
-                              a, 0).astype(jnp.int32)
+                a = avail_at(j)
                 # same key for every lane: the scalar path consumes ONE
                 # split per update slot whatever the grid point
                 idx = jax.vmap(
@@ -443,8 +540,87 @@ def _mc_solve_for(objective, link_version: int):
                                          jnp.arange(max_updates))
             return jax.vmap(lambda w: ridge_loss_full(w, X, y, lam))(W_fin)
 
-        seeds = seed0 + 97 * jnp.arange(n_runs)
-        losses = jax.vmap(per_seed)(seeds)                     # (runs, L) f32
+        def per_run_slabbed(r):
+            # table-driven engines: outer scan over slabs; each slab's
+            # (slab, L) tables feed either the lean jnp inner scan or
+            # one pallas_call — both consume IDENTICAL tables, so the
+            # two engines agree bitwise
+            key = run_key(r)
+            kp, kw, ks = jax.random.split(key, 3)
+            perm = jax.random.permutation(kp, n)
+            Xs, ys = X[perm], y[perm]
+            w0 = jax.random.normal(kw, (d,), jnp.float32)
+            W0 = jnp.broadcast_to(w0, (L, d))
+            run_slab = pallas_slab if mc_impl == "pallas" else scan_slab
+
+            if crn:
+                u = jax.random.uniform(ks, (max_updates,),
+                                       jnp.float32).reshape(nslab, slab)
+
+                def outer(W, inp):
+                    s, u_s = inp
+                    ix, m = crn_tables(s * slab, u_s)
+                    return run_slab(W, Xs, ys, ix, m), None
+
+                W_fin, _ = jax.lax.scan(outer, W0,
+                                        (jnp.arange(nslab), u))
+            else:
+                def outer(carry, s):
+                    W, k = carry
+                    k, (ix, m) = exact_tables(k, s * slab)
+                    return (run_slab(W, Xs, ys, ix, m), k), None
+
+                (W_fin, _), _ = jax.lax.scan(outer, (W0, ks),
+                                             jnp.arange(nslab))
+            return jax.vmap(lambda w: ridge_loss_full(w, X, y, lam))(W_fin)
+
+        def crn_scan_all_runs():
+            # CRN scan engine, all runs in ONE pass over slabs: the f64
+            # slot->availability tables depend only on the timeline (not
+            # the run), so they are computed ONCE per slab and shared by
+            # every run — the per-run work is just the f32 sample-index
+            # map and the training scan.  Values are bitwise those of
+            # the run-at-a-time form: same tables, same per-run streams,
+            # same vmapped scan body.
+            def prep(r):
+                key = run_key(r)
+                kp, kw, ks = jax.random.split(key, 3)
+                perm = jax.random.permutation(kp, n)
+                w0 = jax.random.normal(kw, (d,), jnp.float32)
+                u = jax.random.uniform(ks, (max_updates,), jnp.float32)
+                return (X[perm], y[perm], jnp.broadcast_to(w0, (L, d)),
+                        u.reshape(nslab, slab))
+
+            Xs_a, ys_a, W0_a, u_a = jax.vmap(prep)(jnp.arange(runs))
+
+            def outer(W_a, inp):
+                s, u_s = inp                           # u_s: (runs, slab)
+                a = avail_at(s * slab + jnp.arange(slab))    # (slab, L)
+                af = a.astype(jnp.float32)
+                hi = jnp.maximum(a - 1, 0)
+                m = (a > 0).astype(jnp.float32)
+
+                def one(W, Xs, ys, u_r):
+                    ix = jnp.minimum((u_r[:, None] * af).astype(jnp.int32),
+                                     hi)
+                    return scan_slab(W, Xs, ys, ix, m)
+
+                return jax.vmap(one)(W_a, Xs_a, ys_a, u_s), None
+
+            W_fin, _ = jax.lax.scan(outer, W0_a,
+                                    (jnp.arange(nslab),
+                                     jnp.moveaxis(u_a, 1, 0)))
+            return jax.vmap(jax.vmap(
+                lambda w: ridge_loss_full(w, X, y, lam)))(W_fin)
+
+        if mc_impl == "pallas":
+            # python loop over runs: vmapping a pallas_call would batch
+            # the kernel grid; runs are few, so unrolled calls are fine
+            losses = jnp.stack([per_run_slabbed(r) for r in range(runs)])
+        elif crn:
+            losses = crn_scan_all_runs()
+        else:
+            losses = jax.vmap(per_run_exact_scan)(jnp.arange(runs))
         vals = jnp.mean(losses, axis=0).astype(T.dtype).reshape(S, R, G)
 
         return _reduce_joint_argmin(vals, n_o_eff, p, N, T, rates,
@@ -469,13 +645,29 @@ def montecarlo_builder(objective) -> Callable:
 
     def solve(arrays, consts, shard, batch):
         del consts  # empirical objective
-        fn = _mc_solve_for(objective, kernel_table_version())
+        arrays = dict(arrays)
+        # host-side planner hints, popped before the arrays ship to the
+        # device: the simulation engine, the coarse-pass seed count and
+        # the coarse-pass horizon cap
+        mc_impl = arrays.pop("mc_impl", "scan")
+        mc_seeds = arrays.pop("mc_seeds", None)
+        mc_updates = arrays.pop("mc_updates", None)
+        # the pallas engine runs interpreted off-TPU (CPU CI included)
+        fn = _mc_solve_for(objective, kernel_table_version(),
+                           jax.default_backend() != "tpu")
         # the objective's min_updates floor pins the padded scan length
         # for serving: every batch below the floor shares ONE shape
         # (padded slots no-op, so plans are unaffected)
         max_updates = pow2ceil(max(1, batch.max_updates,
                                    int(getattr(objective, "min_updates",
                                                0) or 0)))
+        if mc_updates:
+            # truncated horizon (coarse-pass hint): train each lane for
+            # at most this many update slots.  The CRN slot stream is
+            # counter-based, so the truncated timeline is a bitwise
+            # PREFIX of the full-horizon simulation.
+            max_updates = min(max_updates,
+                              pow2ceil(max(1, int(mc_updates))))
         S = arrays["N"].shape[0]
         n_dev = len(jax.local_devices())
         lanes = S * arrays["rates"].shape[1] * arrays["grid"].shape[-1]
@@ -485,13 +677,17 @@ def montecarlo_builder(objective) -> Callable:
             if shard:
                 arrays = _maybe_shard(arrays, S)
             t0 = time.perf_counter()
-            out = fn(max_updates=max_updates, shard_lanes=shard, **arrays)
+            out = fn(max_updates=max_updates, shard_lanes=shard,
+                     mc_impl=str(mc_impl),
+                     mc_seeds=None if mc_seeds is None else int(mc_seeds),
+                     **arrays)
             jax.block_until_ready(out)
             t1 = time.perf_counter()
             res = {k: np.asarray(v) for k, v in out.items()}
             record_solve(t1 - t0, time.perf_counter() - t1)
             return res
 
+    solve.supports_mc_impl = True
     return solve
 
 

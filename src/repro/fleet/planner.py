@@ -31,6 +31,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Union
 
+import jax
 import numpy as np
 
 from repro.core.bounds import BoundConstants
@@ -49,6 +50,11 @@ from repro.fleet.tracing import trace_delta
 #: reference semantics and the documented escape hatch) and ``"refine"``
 #: (two-pass coarse -> fine; see ``FleetPlanner``).
 GRID_MODES = ("dense", "refine")
+
+#: Valid ``FleetPlanner.mc_impl`` values: ``"auto"`` resolves by backend
+#: (the pallas slab kernel on TPU, the ``lax.scan`` engines elsewhere);
+#: ``"scan"`` / ``"pallas"`` pin the Monte-Carlo simulation engine.
+MC_IMPLS = ("auto", "scan", "pallas")
 
 
 @dataclass(frozen=True)
@@ -181,11 +187,27 @@ class FleetPlanner:
     #: alone, which is what lets :meth:`warm` precompile EVERY shape a
     #: serving configuration admits (the "zero traces after warmup" SLO).
     pow2_refine_widths: bool = False
+    #: Monte-Carlo simulation engine: ``"auto"`` (default) picks the
+    #: pallas slab kernel (:mod:`repro.kernels.mc_ridge`) on TPU and the
+    #: ``lax.scan`` engines elsewhere; ``"scan"`` / ``"pallas"`` pin it.
+    #: The choice never changes WHICH plan is selected — the engines are
+    #: bitwise-matched per :class:`~repro.core.objectives.MonteCarloObjective`
+    #: configuration — so only non-default engines are tagged into
+    #: :meth:`cache_context`.  Ignored by non-Monte-Carlo objectives.
+    mc_impl: str = "auto"
 
     def __post_init__(self):
         if self.grid_mode not in GRID_MODES:
             raise ValueError(
                 f"unknown grid_mode {self.grid_mode!r}; valid: {GRID_MODES}")
+        if self.mc_impl not in MC_IMPLS:
+            raise ValueError(
+                f"unknown mc_impl {self.mc_impl!r}; valid: {MC_IMPLS}")
+
+    def _resolve_mc_impl(self) -> str:
+        if self.mc_impl == "auto":
+            return "pallas" if jax.default_backend() == "tpu" else "scan"
+        return self.mc_impl
 
     def _resolve_objective(self, override):
         obj = override if override is not None else self.objective
@@ -267,6 +289,9 @@ class FleetPlanner:
 
         arrays = self._solve_arrays(batch, grid)
         solve = fleet_solve(objective)
+        impl = self._resolve_mc_impl()
+        if impl != "scan" and getattr(solve, "supports_mc_impl", False):
+            arrays["mc_impl"] = impl  # popped host-side by the MC builder
         out = None
         if mode == "refine":
             out, fine_grid = self._refine_solve(solve, arrays, consts,
@@ -295,18 +320,66 @@ class FleetPlanner:
     def _refine_solve(self, solve, arrays, consts, batch, objective, grid):
         """The two-pass coarse -> fine solve; ``(None, None)`` signals a
         dense fallback (grid too narrow, windows as wide as the grid, or
-        a custom kernel without per-rate argmins)."""
+        a custom kernel without per-rate argmins).
+
+        Two OPT-IN hints reshape the passes for simulated objectives (see
+        :class:`~repro.core.objectives.RefineHints`): ``coarse_seeds``
+        schedules the seed count of the coarse pass — ``k >= 1`` runs it
+        with only ``k`` Monte-Carlo seeds, ``0`` skips the simulated
+        coarse pass entirely and takes the per-rate centers from a
+        full-grid Corollary-1 solve (the bound is a few-microsecond
+        closed form, and its per-rate argmin lands in the same basin the
+        simulated coarse pass brackets) — and ``refine_rates=K`` prunes
+        the fine pass to each scenario's top-``K`` rates as ranked by the
+        coarse per-rate minima.  With either hint active the solve never
+        falls back to dense on width grounds: the caller opted into an
+        approximate (but far cheaper) search, so a wide window at pruned
+        rates still beats the dense all-rates pass it would fall back to.
+
+        ``coarse_strides`` stacks extra coarse stages between the first
+        pass and the fine windows (the MULTI-LEVEL schedule): stage 0
+        sweeps the grid at ``coarse_strides[0]``, each later stage
+        re-centres at step ``coarse_strides[i]`` inside the previous
+        stage's ``±coarse_strides[i-1]`` bracket, and the fine pass runs
+        the dense ``±coarse_strides[-1]`` window.  Rate pruning applies
+        after stage 0 and ``coarse_seeds`` throttles every coarse stage,
+        so the full ``n_runs`` seed budget is only ever spent on the
+        final narrow window.
+
+        Two further schedule hints tune that budget split:
+        ``fine_radius`` widens (or narrows) the dense fine window to
+        ``±fine_radius`` independently of the last coarse stride, and
+        ``coarse_updates`` caps the simulated update horizon of every
+        coarse stage (the fine pass always trains the full timeline) —
+        a truncated-horizon coarse pass ranks basins almost as well at
+        a fraction of the scan cost, and the wide full-horizon fine
+        window absorbs the residual center drift.
+        """
         S, G = grid.shape
         hints = refine_hints_for(objective)
         if G < max(2, hints.min_grid):
             return None, None
+        schedulable = getattr(solve, "supports_mc_impl", False)
+        ml = hints.coarse_strides if schedulable else None
+        if ml is not None:
+            ml = tuple(max(2, min(int(s), G - 1)) for s in ml)
+        hz = hints.coarse_updates if schedulable else None
         # an objective's explicit stride hint is honoured as-is (clamped
         # to the grid); only the automatic work-minimising default applies
-        stride = hints.stride or int(round(np.sqrt(G / 2.0)))
+        stride = ((hints.fine_radius if schedulable else None)
+                  or (ml[-1] if ml else
+                      hints.stride or int(round(np.sqrt(G / 2.0)))))
         stride = max(2, min(int(stride), G - 1))
-        cpos = coarse_indices(G, stride)
+        cpos = coarse_indices(G, ml[0] if ml else stride)
         if cpos.size < 4:
             return None, None
+        guided = schedulable and hints.coarse_seeds == 0
+        K = hints.refine_rates if schedulable else None
+        R = int(np.asarray(arrays["rates"]).shape[1])
+        prune = K is not None and K < R
+        scheduled = (guided or prune or ml is not None or hz is not None
+                     or (schedulable and bool(hints.coarse_seeds
+                                              or hints.fine_radius)))
 
         if hints.tail_blocks:
             # first dense index inside the guarded sawtooth tail
@@ -327,20 +400,72 @@ class FleetPlanner:
         # nothing instead of a wasted coarse pass on top of the dense one
         w_ub = 2 * stride + 1 + (G - int(tail.min()) if tail is not None
                                  else 0)
-        if cpos.size + min(G, self._pad_width(w_ub, pad_multiple)) >= G:
+        if not scheduled and \
+                cpos.size + min(G, self._pad_width(w_ub, pad_multiple)) >= G:
             return None, None  # two passes would outwork the dense solve
 
-        arrays1 = dict(arrays,
-                       grid=np.ascontiguousarray(grid[:, cpos]))
-        out1 = solve(arrays1, consts, self.shard, batch)
-        centers1 = out1.get("gi_per_rate")
-        if centers1 is None:  # pre-refinement custom kernel
-            return None, None
-        centers = cpos[np.asarray(centers1, np.int64)]         # (S, R)
+        if guided:
+            # bound-guided coarse: the closed-form Corollary-1 solve on
+            # the FULL grid supplies per-rate centers (already dense
+            # indices) and the per-rate ranking, for ~zero simulation
+            bound_arrays = {k: v for k, v in arrays.items()
+                            if k not in ("mc_impl", "mc_seeds")}
+            out1 = fleet_solve(BoundObjective())(bound_arrays, consts,
+                                                 self.shard, batch)
+            centers = np.asarray(out1["gi_per_rate"], np.int64)
+        else:
+            arrays1 = dict(arrays,
+                           grid=np.ascontiguousarray(grid[:, cpos]))
+            if schedulable and hints.coarse_seeds:
+                arrays1["mc_seeds"] = int(hints.coarse_seeds)
+            if hz:
+                arrays1["mc_updates"] = int(hz)
+            out1 = solve(arrays1, consts, self.shard, batch)
+            centers1 = out1.get("gi_per_rate")
+            if centers1 is None:  # pre-refinement custom kernel
+                return None, None
+            centers = cpos[np.asarray(centers1, np.int64)]     # (S, R)
+
+        sel = None
+        if prune and "val_per_rate" in out1:
+            # keep each scenario's top-K rates by the coarse per-rate
+            # minima; ascending index order preserves the reduction's
+            # rate-major tie-breaking among the kept rates
+            vpr = np.asarray(out1["val_per_rate"])
+            sel = np.sort(np.argsort(vpr, axis=1, kind="stable")[:, :K],
+                          axis=1)                              # (S, K)
+            centers = np.take_along_axis(centers, sel, axis=1)
+
+        if ml is not None:
+            # mid coarse stages: re-centre at each finer step inside the
+            # previous stage's bracket.  Windows are host-built per-rate
+            # index sets — clipping at the grid edges keeps the width
+            # (hence the compiled shape) data-independent.
+            for prev, step in zip(ml, ml[1:]):
+                offs = np.arange(-(prev // step),
+                                 prev // step + 1) * step      # (O,)
+                win = np.clip(centers[:, :, None] + offs, 0, G - 1)
+                arrays_i = dict(arrays, grid=np.ascontiguousarray(
+                    np.take_along_axis(grid[:, None, :], win, axis=2)))
+                if sel is not None:
+                    arrays_i["rates"] = np.ascontiguousarray(
+                        np.take_along_axis(
+                            np.asarray(arrays["rates"]), sel, 1))
+                    arrays_i["rate_mask"] = np.ascontiguousarray(
+                        np.take_along_axis(
+                            np.asarray(arrays["rate_mask"]), sel, 1))
+                if hints.coarse_seeds:
+                    arrays_i["mc_seeds"] = int(hints.coarse_seeds)
+                if hz:
+                    arrays_i["mc_updates"] = int(hz)
+                out_i = solve(arrays_i, consts, self.shard, batch)
+                gi = np.asarray(out_i["gi_per_rate"], np.int64)
+                centers = np.take_along_axis(
+                    win, gi[:, :, None], axis=2)[..., 0]
 
         count = refine_window_bounds(centers, stride, G, tail)[-1]
         W = min(G, self._pad_width(int(count.max()), pad_multiple))
-        if cpos.size + W >= G:
+        if not scheduled and cpos.size + W >= G:
             return None, None  # the merged windows still cover the grid
 
         if getattr(solve, "supports_refine_windows", False):
@@ -356,6 +481,11 @@ class FleetPlanner:
             _, win_grid, _ = refine_grid(grid, centers, stride,
                                          tail_start=tail, width=W)
             arrays2 = dict(arrays, grid=np.ascontiguousarray(win_grid))
+        if sel is not None:
+            arrays2["rates"] = np.ascontiguousarray(
+                np.take_along_axis(np.asarray(arrays["rates"]), sel, 1))
+            arrays2["rate_mask"] = np.ascontiguousarray(
+                np.take_along_axis(np.asarray(arrays["rate_mask"]), sel, 1))
         out2 = solve(arrays2, consts, self.shard, batch)
         return out2, np.asarray(out2["sel_grid"])
 
@@ -367,10 +497,17 @@ class FleetPlanner:
         plan lives at (``PlanCache.invalidate``) without re-deriving the
         planner's keying scheme."""
         mode = self._resolve_grid_mode(grid_mode)
+        impl = self._resolve_mc_impl()
         # pow2-padded refine widths can evaluate (strictly more) window
-        # points than the data-tight rule, so the two never share entries
+        # points than the data-tight rule, so the two never share entries.
+        # A non-default Monte-Carlo engine is tagged in too — the engines
+        # are bitwise-matched per objective configuration, but scoping by
+        # engine keeps a mis-matched build from ever aliasing plans (the
+        # default "scan" resolution stays token-free so existing cache
+        # layouts are unchanged).
         return (consts, self.grid_size, mode) + \
-            (("pow2w",) if self.pow2_refine_widths else ())
+            (("pow2w",) if self.pow2_refine_widths else ()) + \
+            (("mc_impl", impl) if impl != "scan" else ())
 
     def _warm_widths(self, G: int, stride: int, n_coarse: int) -> List[int]:
         """Every fine-pass width a stream of ``plan_batch`` calls over a
@@ -424,20 +561,89 @@ class FleetPlanner:
         if mode == "refine":
             S, G = grid.shape
             hints = refine_hints_for(objective)
-            stride = hints.stride or int(round(np.sqrt(G / 2.0)))
+            schedulable = getattr(solve, "supports_mc_impl", False)
+            ml = hints.coarse_strides if schedulable else None
+            if ml is not None:
+                ml = tuple(max(2, min(int(s), G - 1)) for s in ml)
+            hz = hints.coarse_updates if schedulable else None
+            stride = ((hints.fine_radius if schedulable else None)
+                      or (ml[-1] if ml else
+                          hints.stride or int(round(np.sqrt(G / 2.0)))))
             stride = max(2, min(int(stride), G - 1))
+            guided = schedulable and hints.coarse_seeds == 0
+            K = hints.refine_rates if schedulable else None
+            prune = K is not None and K < batch.n_rates
+            scheduled = (guided or prune or ml is not None
+                         or hz is not None
+                         or (schedulable and bool(hints.coarse_seeds
+                                                  or hints.fine_radius)))
             if G >= max(2, hints.min_grid):
-                cpos = coarse_indices(G, stride)
-                widths = self._warm_widths(G, stride, cpos.size)
+                cpos = coarse_indices(G, ml[0] if ml else stride)
+                if scheduled:
+                    # a scheduled solve never falls back on width grounds
+                    # (see _refine_solve), so the reachable fine widths
+                    # run all the way to the bracket's pow2 ceiling
+                    # (tail_blocks is None for simulated objectives, so
+                    # the data-independent 2*stride+1 bound is exact)
+                    if self.pow2_refine_widths:
+                        widths, w = [], pow2ceil(stride + 1)
+                        while w < min(G, pow2ceil(2 * stride + 1)):
+                            widths.append(w)
+                            w *= 2
+                        widths.append(min(G, w))
+                    else:
+                        # data-tight rule: a fixed schedule reaches ONE
+                        # width — the full bracket
+                        widths = [min(G, 2 * stride + 1)]
+                else:
+                    widths = self._warm_widths(G, stride, cpos.size)
                 if cpos.size >= 4 and widths:
-                    arrays1 = dict(
-                        arrays, grid=np.ascontiguousarray(grid[:, cpos]))
-                    solve(arrays1, consts, self.shard, batch)  # coarse pass
-                    centers = np.zeros((S, batch.n_rates), np.int64)
+                    if guided:
+                        bound_arrays = {
+                            k: v for k, v in arrays.items()
+                            if k not in ("mc_impl", "mc_seeds")}
+                        fleet_solve(BoundObjective())(
+                            bound_arrays, consts, self.shard, batch)
+                    else:
+                        arrays1 = dict(
+                            arrays,
+                            grid=np.ascontiguousarray(grid[:, cpos]))
+                        if schedulable and hints.coarse_seeds:
+                            arrays1["mc_seeds"] = int(hints.coarse_seeds)
+                        if hz:
+                            arrays1["mc_updates"] = int(hz)
+                        solve(arrays1, consts, self.shard, batch)  # coarse
+                    n_rates = K if prune else batch.n_rates
+                    centers = np.zeros((S, n_rates), np.int64)
                     tail_start = np.full(S, G, np.int64)
+                    fine = dict(arrays)
+                    if prune:
+                        fine["rates"] = np.ascontiguousarray(
+                            np.asarray(arrays["rates"])[:, :K])
+                        fine["rate_mask"] = np.ascontiguousarray(
+                            np.asarray(arrays["rate_mask"])[:, :K])
+                    if ml is not None:
+                        # mid coarse stages: one data-independent window
+                        # shape per (prev, step) pair — clip keeps the
+                        # width fixed, so dummy zero centers compile the
+                        # exact shapes plan_batch will hit
+                        for prev, step in zip(ml, ml[1:]):
+                            offs = np.arange(-(prev // step),
+                                             prev // step + 1) * step
+                            win = np.clip(
+                                centers[:, :, None] + offs, 0, G - 1)
+                            arrays_i = dict(fine, grid=np.ascontiguousarray(
+                                np.take_along_axis(grid[:, None, :], win,
+                                                   axis=2)))
+                            if hints.coarse_seeds:
+                                arrays_i["mc_seeds"] = int(
+                                    hints.coarse_seeds)
+                            if hz:
+                                arrays_i["mc_updates"] = int(hz)
+                            solve(arrays_i, consts, self.shard, batch)
                     for W in widths:
                         if getattr(solve, "supports_refine_windows", False):
-                            arrays2 = dict(arrays, centers=centers,
+                            arrays2 = dict(fine, centers=centers,
                                            tail_start=tail_start,
                                            refine_stride=stride,
                                            refine_width=W)
@@ -445,7 +651,7 @@ class FleetPlanner:
                             _, win_grid, _ = refine_grid(grid, centers,
                                                          stride, width=W)
                             arrays2 = dict(
-                                arrays,
+                                fine,
                                 grid=np.ascontiguousarray(win_grid))
                         solve(arrays2, consts, self.shard, batch)
 

@@ -1,3 +1,7 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# mc_ridge: Pallas slab kernel for the fleet Monte-Carlo ridge-SGD
+# simulation (the `mc_impl="pallas"` engine of the montecarlo solve).
+from repro.kernels.mc_ridge import mc_ridge_slab  # noqa: F401

@@ -32,6 +32,35 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
     return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def mc_ridge_ref(W, Xs, ys, ix, m, *, alpha, lam, fused):
+    """Sequential numpy oracle of one :func:`mc_ridge_slab` call.
+
+    W: (L, d); Xs: (n, d); ys: (n,); ix: (slab, L) int; m: (slab, L)
+    update mask.  Float32 throughout (tolerance oracle — the bitwise
+    checks run pallas-interpret against the ``lax.scan`` engine).
+    """
+    import numpy as np
+
+    W = np.array(W, np.float32)
+    Xs = np.asarray(Xs, np.float32)
+    ys = np.asarray(ys, np.float32)
+    n = Xs.shape[0]
+    c_reg = np.float32(2.0 * alpha * lam / n)
+    for j in range(ix.shape[0]):
+        xr = Xs[ix[j]]                                  # (L, d)
+        yr = ys[ix[j]]
+        mr = np.asarray(m[j], np.float32)
+        dot = np.sum(W * xr, axis=1)
+        if fused:
+            c1 = 1.0 - mr * c_reg
+            c2 = mr * np.float32(-2.0 * alpha) * (dot - yr)
+            W = W * c1[:, None] + xr * c2[:, None]
+        else:
+            g = 2.0 * (dot - yr)[:, None] * xr + 2.0 * lam / n * W
+            W = np.where((mr > 0)[:, None], W - alpha * g, W)
+    return W
+
+
 def ssd_scan_ref(x, dt, a, b, c):
     """Sequential SSM recurrence (oracle for the SSD kernel).
 

@@ -68,6 +68,15 @@ def run_service(args) -> int:
             grid_modes=grid_modes, policy_id=args.policy,
             cache_size=args.cache_size, sig_digits=args.sig_digits,
             n_max=args.n_max, warm_models=models,
+            mc_impl=args.mc_impl, mc_crn=args.mc_crn,
+            mc_seed_stream=args.mc_seed_stream,
+            mc_coarse_seeds=args.mc_coarse_seeds,
+            mc_refine_rates=args.mc_refine_rates,
+            mc_coarse_strides=(tuple(
+                int(s) for s in args.mc_coarse_strides.split(","))
+                if args.mc_coarse_strides else None),
+            mc_fine_radius=args.mc_fine_radius,
+            mc_coarse_updates=args.mc_coarse_updates,
             journal_path=args.journal)
         requests = synth_requests(args.requests, seed=args.seed,
                                   dup_frac=args.dup, models=models,
@@ -202,6 +211,38 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--n-max", type=int, default=32768,
                     help="cap on drawn dataset sizes (keep small when the "
                          "mix includes the simulated montecarlo objective)")
+    ap.add_argument("--mc-impl", default="auto",
+                    choices=["auto", "scan", "pallas"],
+                    help="Monte-Carlo simulation engine: the fused Pallas "
+                         "kernel, the lax.scan reference, or auto "
+                         "(pallas on TPU, scan elsewhere)")
+    ap.add_argument("--mc-crn", action="store_true",
+                    help="common random numbers for the Monte-Carlo "
+                         "objective: share the per-slot uniform draw "
+                         "across all simulation lanes (a lower-variance "
+                         "estimator of the same objective; plans are not "
+                         "bitwise-pinned to the reference stream)")
+    ap.add_argument("--mc-seed-stream", default="fold_in",
+                    choices=["fold_in", "legacy"],
+                    help="per-run RNG key derivation (legacy reproduces "
+                         "the historical colliding seed+97r streams)")
+    ap.add_argument("--mc-coarse-seeds", type=int, default=None,
+                    help="Monte-Carlo seed count for refine-mode coarse "
+                         "passes (0 = bound-guided coarse pass)")
+    ap.add_argument("--mc-refine-rates", type=int, default=None,
+                    help="keep only the top-K rates per scenario in the "
+                         "refine-mode fine pass")
+    ap.add_argument("--mc-coarse-strides", default=None,
+                    help="comma-separated descending multi-level stride "
+                         "schedule for refine mode, e.g. '32,6'")
+    ap.add_argument("--mc-fine-radius", type=int, default=None,
+                    help="widen the refine-mode dense fine window to "
+                         "+/- this many grid steps (decoupled from the "
+                         "last coarse stride)")
+    ap.add_argument("--mc-coarse-updates", type=int, default=None,
+                    help="cap the simulated update horizon of refine-mode "
+                         "coarse passes (the fine pass always trains the "
+                         "full horizon); keep >= 2048")
     ap.add_argument("--timeout", type=float, default=120.0,
                     help="per-request future timeout, seconds")
     ap.add_argument("--metrics-textfile", default=None,

@@ -84,16 +84,31 @@ LINK_FACTORIES = {
 ALL_MODELS = tuple(LINK_FACTORIES)
 
 
-def make_montecarlo_objective(min_updates: int = 0) -> MonteCarloObjective:
+def make_montecarlo_objective(min_updates: int = 0, *, crn: bool = False,
+                              seed_stream: str = "fold_in",
+                              coarse_seeds=None, refine_rates=None,
+                              coarse_strides=None, fine_radius=None,
+                              coarse_updates=None) -> MonteCarloObjective:
     """Small deterministic ridge task (the canonical generator, scaled
     down) for Monte-Carlo objective serving.  ``min_updates`` floors the
     batched kernel's padded scan length so a service compiles ONE scan
-    shape for every stream below the floor."""
+    shape for every stream below the floor.  The keyword options expose
+    the estimator/schedule knobs (common random numbers, RNG stream
+    derivation, coarse seed counts, rate pruning, the multi-level stride
+    schedule, the fine-window radius and the coarse-pass horizon cap) —
+    they flow into the objective's ``cache_token``, so
+    differently-configured services never alias cache entries."""
     from repro.data.synthetic import make_regression_dataset
 
     X, y, _ = make_regression_dataset(n=256, d=8, seed=0)
     return MonteCarloObjective(X=X, y=y, n_runs=2, alpha=1e-3, seed=0,
-                               min_updates=min_updates)
+                               min_updates=min_updates, crn=crn,
+                               seed_stream=seed_stream,
+                               coarse_seeds=coarse_seeds,
+                               refine_rates=refine_rates,
+                               coarse_strides=coarse_strides,
+                               fine_radius=fine_radius,
+                               coarse_updates=coarse_updates)
 
 
 #: Planning-objective factories, by registry id (--objective values).
@@ -115,13 +130,17 @@ def mc_update_floor(n_max: int) -> int:
     return pow2ceil(max(1, int(6 * n_max)))
 
 
-def resolve_objectives(spec, mc_min_updates: int = 0) -> Dict[str, Any]:
+def resolve_objectives(spec, mc_min_updates: int = 0,
+                       mc_options: Dict[str, Any] = None) -> Dict[str, Any]:
     """Instantiate the requested objectives ONCE each (instance identity
     keys the jitted Monte-Carlo kernel cache).  ``spec`` is "all", a
     comma-separated string, or a sequence of registry ids; unknown names
     raise ``ValueError`` with the available ids.  ``mc_min_updates``
     pins the Monte-Carlo scan-length floor (serving; see
-    :func:`mc_update_floor`).
+    :func:`mc_update_floor`) and ``mc_options`` forwards estimator /
+    schedule keywords to :func:`make_montecarlo_objective` (``crn``,
+    ``seed_stream``, ``coarse_seeds``, ``refine_rates``,
+    ``coarse_strides``, ``fine_radius``, ``coarse_updates``).
     """
     if spec == "all":
         names: Sequence[str] = ALL_OBJECTIVES
@@ -140,7 +159,8 @@ def resolve_objectives(spec, mc_min_updates: int = 0) -> Dict[str, Any]:
     out: Dict[str, Any] = {}
     for name in names:
         if name == "montecarlo":
-            out[name] = make_montecarlo_objective(mc_min_updates)
+            out[name] = make_montecarlo_objective(mc_min_updates,
+                                                  **(mc_options or {}))
         else:
             out[name] = OBJECTIVE_FACTORIES[name]()
     return out

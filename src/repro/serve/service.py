@@ -57,7 +57,7 @@ from repro.core.bounds import BoundConstants
 from repro.core.scenario import Scenario
 from repro.federated.round import (FEDERATED_TOKEN, RoundPlanner,
                                    RoundRecord, population_key)
-from repro.fleet import GRID_MODES, FleetPlanner, PlanCache
+from repro.fleet import GRID_MODES, MC_IMPLS, FleetPlanner, PlanCache
 from repro.fleet.objective_kernels import pow2ceil
 from repro.fleet.tracing import trace_delta
 from repro.obs import (EventJournal, MetricsRegistry, RequestSpan,
@@ -86,6 +86,17 @@ class ServiceConfig:
     the Monte-Carlo scan-length floor so MC streams compile ONE scan
     shape — and ``grid_modes`` restricts which solve strategies the
     admission layer may hand out.
+
+    The ``mc_*`` knobs configure the served Monte-Carlo objective and
+    engine: ``mc_impl`` selects the simulation engine (``"auto"`` /
+    ``"scan"`` / ``"pallas"``; "auto" resolves by backend), ``mc_crn``
+    turns on the common-random-numbers estimator, ``mc_seed_stream``
+    picks the per-run RNG derivation, and ``mc_coarse_seeds`` /
+    ``mc_refine_rates`` / ``mc_coarse_strides`` / ``mc_fine_radius`` /
+    ``mc_coarse_updates`` install the refine-mode seed/rate/stride/
+    window/horizon schedules.  All of them flow into the objective's
+    cache token (and the engine into the planner's cache-context
+    prefix), so differently-configured services never alias entries.
     """
 
     grid_size: int = 64
@@ -93,6 +104,14 @@ class ServiceConfig:
     flush_interval: float = 0.01
     objective_ids: Tuple[str, ...] = ("corollary1", "markov_arq")
     grid_modes: Tuple[str, ...] = GRID_MODES
+    mc_impl: str = "auto"
+    mc_crn: bool = False
+    mc_seed_stream: str = "fold_in"
+    mc_coarse_seeds: Optional[int] = None
+    mc_refine_rates: Optional[int] = None
+    mc_coarse_strides: Optional[Tuple[int, ...]] = None
+    mc_fine_radius: Optional[int] = None
+    mc_coarse_updates: Optional[int] = None
     policy_id: str = "link_aware"
     cache_size: int = 8192
     sig_digits: int = 3
@@ -143,6 +162,9 @@ class ServiceConfig:
                 f"unknown grid mode(s) {unknown}; valid: {list(GRID_MODES)}")
         if not self.grid_modes:
             raise ValueError("grid_modes must name >= 1 mode")
+        if self.mc_impl not in MC_IMPLS:
+            raise ValueError(
+                f"unknown mc_impl {self.mc_impl!r}; valid: {MC_IMPLS}")
 
     @property
     def max_batch(self) -> int:
@@ -169,7 +191,8 @@ class PlanningService:
         # what lets warmup() cover EVERY shape the stream can reach
         self.planner = FleetPlanner(grid_size=cfg.grid_size,
                                     shard=cfg.shard,
-                                    pow2_refine_widths=True)
+                                    pow2_refine_widths=True,
+                                    mc_impl=cfg.mc_impl)
         self.cache = PlanCache(maxsize=cfg.cache_size,
                                sig_digits=cfg.sig_digits)
         if objectives is not None:
@@ -179,7 +202,14 @@ class PlanningService:
                 cfg.objective_ids,
                 mc_min_updates=(mc_update_floor(cfg.n_max)
                                 if "montecarlo" in cfg.objective_ids
-                                else 0))
+                                else 0),
+                mc_options=dict(crn=cfg.mc_crn,
+                                seed_stream=cfg.mc_seed_stream,
+                                coarse_seeds=cfg.mc_coarse_seeds,
+                                refine_rates=cfg.mc_refine_rates,
+                                coarse_strides=cfg.mc_coarse_strides,
+                                fine_radius=cfg.mc_fine_radius,
+                                coarse_updates=cfg.mc_coarse_updates))
         self.policy = policy if policy is not None \
             else policy_spec(cfg.policy_id).cls()
         self.round_planner = RoundPlanner(grid_size=cfg.grid_size,

@@ -324,14 +324,30 @@ def test_montecarlo_planner_returns_plan():
 
 
 def test_average_final_loss_vmap_matches_seed_loop():
-    from repro.core.pipeline import average_final_loss, run_pipelined_sgd
+    """The vmapped MC seed loop matches a sequential per-run loop under
+    BOTH seed streams: the collision-free fold_in default (per-run keys
+    from mc_run_key) and the legacy compat mode, which must still
+    reproduce the historical seed + 97r runs bit-for-bit."""
+    from repro.core.pipeline import (average_final_loss, mc_run_key,
+                                     run_pipelined_sgd)
 
     X, y, _ = make_regression_dataset(n=1024, d=8, seed=4)
     ref = np.mean([
         run_pipelined_sgd(X, y, n_c=64, n_o=16.0, T=1.5 * 1024, alpha=1e-3,
-                          lam=0.05, seed=5 + 97 * r).final_loss
+                          lam=0.05, key=mc_run_key(5, r)).final_loss
         for r in range(3)
     ])
     got = average_final_loss(X, y, n_c=64, n_o=16.0, T=1.5 * 1024, n_runs=3,
                              alpha=1e-3, lam=0.05, seed=5)
     assert got == pytest.approx(float(ref), rel=1e-5)
+
+    legacy_ref = np.mean([
+        run_pipelined_sgd(X, y, n_c=64, n_o=16.0, T=1.5 * 1024, alpha=1e-3,
+                          lam=0.05, seed=5 + 97 * r).final_loss
+        for r in range(3)
+    ])
+    legacy = average_final_loss(X, y, n_c=64, n_o=16.0, T=1.5 * 1024,
+                                n_runs=3, alpha=1e-3, lam=0.05, seed=5,
+                                seed_stream="legacy")
+    assert legacy == pytest.approx(float(legacy_ref), rel=1e-5)
+    assert legacy != got        # the streams really are different

@@ -1,0 +1,23 @@
+"""Deterministic fault injection for the planning service.
+
+Chaos testing is only useful when a failure found once can be found
+again: :class:`FaultPlan` turns a seed plus per-injection-point rates
+into a REPRODUCIBLE fault schedule — the decision for the n-th
+invocation at a named injection point is a pure function of
+``(seed, point, n)``, so the same spec replays the same faults whatever
+wall-clock timing the run has.  The serving layer draws at its named
+points (``solve.error`` / ``solve.latency`` in ``_plan_group``,
+``queue.stall`` in the micro-batcher, ``cache.corrupt`` in
+:class:`~repro.fleet.cache.PlanCache`); everything else in the repo is
+chaos-free unless a plan is explicitly wired in.
+
+Standalone on purpose (no ``repro.serve``/``repro.fleet`` imports), so
+any layer can accept a plan without cycles.
+"""
+from repro.chaos.faults import (INJECTION_POINTS, FaultAction, FaultPlan,
+                                FaultRule, InjectedFault, parse_chaos_spec)
+
+__all__ = [
+    "FaultAction", "FaultPlan", "FaultRule", "INJECTION_POINTS",
+    "InjectedFault", "parse_chaos_spec",
+]

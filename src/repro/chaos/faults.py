@@ -1,0 +1,233 @@
+"""Seeded, schedule-based fault injection (see package docstring).
+
+A :class:`FaultPlan` is a set of :class:`FaultRule`\\ s, one per named
+injection point.  Each call to :meth:`FaultPlan.draw` advances that
+point's invocation counter and returns the scheduled
+:class:`FaultAction` (or ``None``).  The decision for invocation ``n``
+is ``u(seed, point, n) < rate`` where ``u`` is a uniform derived from a
+SHA-256 of the triple — no shared RNG state, so the schedule at one
+point is independent of how many draws other points made, and two runs
+with the same seed and the same per-point invocation sequences inject
+byte-identical fault schedules (the chaos determinism property test
+asserts exactly this).
+
+``parse_chaos_spec`` turns the CLI's ``--chaos-spec`` string into a
+plan: a comma-separated ``key=value`` list, e.g.::
+
+    seed=7,solve_error=0.2,solve_latency=0.15:25ms,cache_corrupt=0.05,
+    queue_stall=0.02:10ms
+
+Rate-only points take ``<rate>``; latency-type points take
+``<rate>:<duration>`` where the duration suffix is ``ms`` or ``s``
+(default seconds).  Unknown keys raise ``ValueError`` — a typo'd
+injection point silently injecting nothing would make a chaos gate
+vacuous.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+#: The injection points the serving stack draws at.  ``error`` points
+#: raise :class:`InjectedFault`; ``latency``/``stall`` points sleep.
+INJECTION_POINTS = (
+    "solve.error",      # _plan_group: raise before the chunk solve
+    "solve.latency",    # _plan_group: artificial delay before the solve
+    "queue.stall",      # MicroBatcher worker: delay before planning
+    "cache.corrupt",    # PlanCache.get: flip the entry's checksum
+)
+
+#: Points whose action carries a duration rather than an exception.
+_TIMED_POINTS = ("solve.latency", "queue.stall")
+
+
+class InjectedFault(RuntimeError):
+    """A chaos-injected transient solve failure.  Deliberately a plain
+    ``RuntimeError`` subtype: the resilience layer must treat it exactly
+    like any other transient exception (retry, then degrade) — injected
+    faults that needed special handling would test nothing."""
+
+
+@dataclass(frozen=True)
+class FaultRule:
+    """Injection schedule for one point: fire ``rate`` of invocations;
+    timed points sleep ``duration_s`` when they fire."""
+
+    point: str
+    rate: float
+    duration_s: float = 0.0
+
+    def __post_init__(self):
+        if self.point not in INJECTION_POINTS:
+            raise ValueError(
+                f"unknown injection point {self.point!r}; valid: "
+                f"{list(INJECTION_POINTS)}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(
+                f"{self.point}: rate must be in [0, 1], got {self.rate}")
+        if self.duration_s < 0.0:
+            raise ValueError(
+                f"{self.point}: duration must be >= 0, got "
+                f"{self.duration_s}")
+
+
+@dataclass(frozen=True)
+class FaultAction:
+    """One scheduled fault: what the drawing site should do."""
+
+    point: str
+    #: ``"error"`` (raise :class:`InjectedFault`) or ``"delay"`` (sleep)
+    kind: str
+    duration_s: float = 0.0
+    #: the invocation index that fired (journal/debug breadcrumb)
+    index: int = 0
+
+
+def _uniform(seed: int, point: str, index: int) -> float:
+    """Uniform in [0, 1) as a pure function of (seed, point, index)."""
+    digest = hashlib.sha256(
+        f"{int(seed)}/{point}/{int(index)}".encode()).digest()
+    return int.from_bytes(digest[:8], "big") / float(1 << 64)
+
+
+class FaultPlan:
+    """Deterministic fault schedule over the named injection points.
+
+    Thread-safe: the per-point invocation counters are the only mutable
+    state.  ``fires``/``draws`` expose lifetime per-point counts for the
+    ``repro_resilience_faults_injected_total`` export.
+    """
+
+    def __init__(self, seed: int = 0,
+                 rules: Iterable[FaultRule] = ()):
+        self.seed = int(seed)
+        self.rules: Dict[str, FaultRule] = {}
+        for rule in rules:
+            if rule.point in self.rules:
+                raise ValueError(
+                    f"duplicate rule for injection point {rule.point!r}")
+            self.rules[rule.point] = rule
+        self._lock = threading.Lock()
+        self._counters: Dict[str, int] = {}
+        self.fires: Dict[str, int] = {}
+
+    @property
+    def draws(self) -> Dict[str, int]:
+        """Lifetime draw counts per point (fired or not)."""
+        with self._lock:
+            return dict(self._counters)
+
+    def enabled(self, point: str) -> bool:
+        rule = self.rules.get(point)
+        return rule is not None and rule.rate > 0.0
+
+    def _decide(self, point: str, index: int) -> Optional[FaultAction]:
+        rule = self.rules.get(point)
+        if rule is None or rule.rate <= 0.0:
+            return None
+        if _uniform(self.seed, point, index) >= rule.rate:
+            return None
+        kind = "delay" if point in _TIMED_POINTS else "error"
+        return FaultAction(point=point, kind=kind,
+                           duration_s=rule.duration_s, index=index)
+
+    def draw(self, point: str) -> Optional[FaultAction]:
+        """Advance ``point``'s invocation counter and return the
+        scheduled action for it (``None`` = no fault this invocation)."""
+        if point not in INJECTION_POINTS:
+            raise ValueError(
+                f"unknown injection point {point!r}; valid: "
+                f"{list(INJECTION_POINTS)}")
+        with self._lock:
+            index = self._counters.get(point, 0)
+            self._counters[point] = index + 1
+        action = self._decide(point, index)
+        if action is not None:
+            with self._lock:
+                self.fires[point] = self.fires.get(point, 0) + 1
+        return action
+
+    def schedule(self, point: str, n: int) -> List[bool]:
+        """The first ``n`` fire/no-fire decisions at ``point`` — PURE
+        (does not advance the counters), so tests can assert the exact
+        schedule a run will see before running it."""
+        return [self._decide(point, i) is not None for i in range(n)]
+
+    def reset(self) -> None:
+        """Rewind every invocation counter (fresh replay, same seed)."""
+        with self._lock:
+            self._counters.clear()
+            self.fires = {}
+
+    def spec(self) -> str:
+        """A ``parse_chaos_spec``-round-trippable description."""
+        parts = [f"seed={self.seed}"]
+        for point in INJECTION_POINTS:
+            rule = self.rules.get(point)
+            if rule is None:
+                continue
+            key = point.replace(".", "_")
+            if point in _TIMED_POINTS:
+                parts.append(f"{key}={rule.rate:g}:{rule.duration_s:g}s")
+            else:
+                parts.append(f"{key}={rule.rate:g}")
+        return ",".join(parts)
+
+
+def _parse_duration(tok: str, key: str) -> float:
+    tok = tok.strip()
+    try:
+        if tok.endswith("ms"):
+            return float(tok[:-2]) / 1e3
+        if tok.endswith("s"):
+            return float(tok[:-1])
+        return float(tok)
+    except ValueError:
+        raise ValueError(
+            f"chaos spec: bad duration {tok!r} for {key!r} "
+            "(want e.g. 25ms or 0.025s)") from None
+
+
+def parse_chaos_spec(spec: str) -> FaultPlan:
+    """Parse a ``--chaos-spec`` string into a :class:`FaultPlan` (see
+    module docstring for the grammar).  An empty spec is an empty plan
+    (no faults), so ``--chaos-spec ''`` is a clean control run."""
+    seed = 0
+    rules: List[FaultRule] = []
+    for raw in str(spec).split(","):
+        part = raw.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(
+                f"chaos spec: expected key=value, got {part!r}")
+        key, value = (t.strip() for t in part.split("=", 1))
+        if key == "seed":
+            try:
+                seed = int(value)
+            except ValueError:
+                raise ValueError(
+                    f"chaos spec: bad seed {value!r}") from None
+            continue
+        point = key.replace("_", ".", 1)
+        if point not in INJECTION_POINTS:
+            raise ValueError(
+                f"chaos spec: unknown injection point {key!r}; valid: "
+                f"{[p.replace('.', '_') for p in INJECTION_POINTS]}")
+        duration = 0.0
+        rate_tok = value
+        if ":" in value:
+            rate_tok, dur_tok = value.split(":", 1)
+            duration = _parse_duration(dur_tok, key)
+        if duration and point not in _TIMED_POINTS:
+            raise ValueError(
+                f"chaos spec: {key!r} takes a bare rate (no duration)")
+        try:
+            rate = float(rate_tok)
+        except ValueError:
+            raise ValueError(
+                f"chaos spec: bad rate {rate_tok!r} for {key!r}") from None
+        rules.append(FaultRule(point=point, rate=rate, duration_s=duration))
+    return FaultPlan(seed=seed, rules=rules)

@@ -26,8 +26,9 @@ from __future__ import annotations
 
 import math
 import threading
+import zlib
 from collections import OrderedDict
-from typing import Dict, Hashable, Tuple
+from typing import Callable, Dict, Hashable, Optional, Tuple
 
 from repro.core.links import link_spec_for
 from repro.core.scenario import Scenario
@@ -104,19 +105,59 @@ class PlanCache:
     cache can back concurrent serving workers.
     """
 
-    def __init__(self, maxsize: int = 4096, sig_digits: int = 3):
+    def __init__(self, maxsize: int = 4096, sig_digits: int = 3, *,
+                 checksums: bool = False,
+                 corruptor: Optional[Callable[[], bool]] = None):
         if maxsize < 1:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
         self.maxsize = maxsize
         self.sig_digits = sig_digits
+        # With checksums on, entries are stored as [record, crc32] and
+        # verified on every counted read; a mismatch drops the entry
+        # (counted in ``corruptions``) and reads as a miss, so a
+        # corrupted plan is re-solved, never served.  ``corruptor`` is a
+        # fault-injection hook: when it returns True on a read, the
+        # stored checksum is flipped first — the detection path is what
+        # chaos runs exercise, not the (deterministic) store itself.
+        self.checksums = bool(checksums) or corruptor is not None
+        self._corruptor = corruptor
         self._store: "OrderedDict[Hashable, object]" = OrderedDict()
         self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.corruptions = 0
         self.hits_by_objective: Dict[str, int] = {}
         self.misses_by_objective: Dict[str, int] = {}
+
+    @staticmethod
+    def _checksum(record) -> int:
+        return zlib.crc32(repr(record).encode())
+
+    def _wrap(self, record):
+        if self.checksums:
+            return [record, self._checksum(record)]
+        return record
+
+    def _load(self, k: Hashable, *, draw_corruption: bool):
+        """Entry lookup + checksum verification (lock held by caller).
+        Returns the record, or None for absent/corrupted (corrupted
+        entries are dropped and counted)."""
+        entry = self._store.get(k)
+        if entry is None:
+            return None
+        if not self.checksums:
+            return entry
+        record, stored = entry
+        if (draw_corruption and self._corruptor is not None
+                and self._corruptor()):
+            entry[1] = stored = stored ^ 0xA5A5A5A5
+        if self._checksum(record) != stored:
+            del self._store[k]
+            self.corruptions += 1
+            return None
+        return record
 
     def key(self, scenario: Scenario, context: Hashable = (),
             objective=None) -> Tuple:
@@ -129,7 +170,7 @@ class PlanCache:
         k = self.key(scenario, context, objective)
         label = _objective_label(objective)
         with self._lock:
-            rec = self._store.get(k)
+            rec = self._load(k, draw_corruption=True)
             if rec is None:
                 self.misses += 1
                 self.misses_by_objective[label] = \
@@ -141,11 +182,22 @@ class PlanCache:
                 self.hits_by_objective.get(label, 0) + 1
             return rec
 
+    def peek(self, scenario: Scenario, context: Hashable = (),
+             objective=None):
+        """Passive lookup: no hit/miss counting, no LRU promotion, no
+        corruption draw (checksums are still verified — a corrupted
+        entry reads as absent).  The degradation ladder's "cached" rung
+        uses this so re-serving an old plan under deadline pressure
+        doesn't skew the cache's hit-rate telemetry."""
+        k = self.key(scenario, context, objective)
+        with self._lock:
+            return self._load(k, draw_corruption=False)
+
     def put(self, scenario: Scenario, record,
             context: Hashable = (), objective=None) -> None:
         k = self.key(scenario, context, objective)
         with self._lock:
-            self._store[k] = record
+            self._store[k] = self._wrap(record)
             self._store.move_to_end(k)
             while len(self._store) > self.maxsize:
                 self._store.popitem(last=False)
@@ -164,7 +216,7 @@ class PlanCache:
         federated token differs from every ``Objective.cache_token()``).
         """
         with self._lock:
-            rec = self._store.get(key)
+            rec = self._load(key, draw_corruption=True)
             if rec is None:
                 self.misses += 1
                 self.misses_by_objective[label] = \
@@ -180,7 +232,7 @@ class PlanCache:
         """Store a record under a caller-built raw key (see
         :meth:`get_by_key`)."""
         with self._lock:
-            self._store[key] = record
+            self._store[key] = self._wrap(record)
             self._store.move_to_end(key)
             while len(self._store) > self.maxsize:
                 self._store.popitem(last=False)
@@ -230,6 +282,7 @@ class PlanCache:
                 "hit_rate": self.hit_rate, "size": len(self._store),
                 "maxsize": self.maxsize, "evictions": self.evictions,
                 "invalidations": self.invalidations,
+                "corruptions": self.corruptions,
                 "hits_by_objective": dict(self.hits_by_objective),
                 "misses_by_objective": dict(self.misses_by_objective),
             }
@@ -241,5 +294,6 @@ class PlanCache:
             self.misses = 0
             self.evictions = 0
             self.invalidations = 0
+            self.corruptions = 0
             self.hits_by_objective = {}
             self.misses_by_objective = {}

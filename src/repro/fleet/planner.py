@@ -71,6 +71,11 @@ class PlanRecord:
     boundary: float
     n_c_per_device: int
     objective: str = "corollary1"
+    #: degradation-ladder level that produced this record ("full" =
+    #: the real solve; see repro.serve.resilience.FALLBACK_LEVELS).
+    #: Defaults keep full-fidelity records bitwise comparable across
+    #: the service and direct plan_many paths.
+    fallback: str = "full"
 
 
 @dataclass(frozen=True)

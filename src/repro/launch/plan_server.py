@@ -30,13 +30,15 @@ from a finite catalogue with per-request jitter, so a fraction of requests
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.chaos import FaultPlan, InjectedFault, parse_chaos_spec
 from repro.core.bounds import BoundConstants
 from repro.core.links import link_spec, link_spec_for
 from repro.core.scenario import Scenario
@@ -80,13 +82,22 @@ class ServeStats:
     batch_p50_ms: float = 0.0
     batch_p99_ms: float = 0.0
     batch_max_ms: float = 0.0
+    #: requests served by the dense Corollary-1 bound fallback instead of
+    #: their requested objective (injected solve failure, or a per-batch
+    #: budget the estimated solve would blow) — every one is stamped
+    #: ``fallback="bound"`` on its record
+    n_degraded: int = 0
+    #: fault-injection fire counts per point (empty without a chaos spec)
+    faults_injected: Dict[str, int] = field(default_factory=dict)
 
 
 def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
           consts: BoundConstants, cache: Optional[PlanCache] = None,
           batch_size: int = 256, warm: bool = True,
           objectives: Optional[Sequence[Any]] = None,
-          grid_modes: Optional[Sequence[str]] = None) -> ServeStats:
+          grid_modes: Optional[Sequence[str]] = None,
+          faults: Optional[FaultPlan] = None,
+          budget_s: Optional[float] = None) -> ServeStats:
     """Micro-batch the request list and plan it end to end.
 
     Single-objective streams pad every miss-batch to ``batch_size``
@@ -118,6 +129,19 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
     ``requests_per_grid_mode`` count requests by link ``model_id``,
     ``objective_id`` and grid mode so mixed traffic is visible in the
     stats.
+
+    ``faults`` (a :class:`~repro.chaos.FaultPlan`) injects the one-shot
+    loop's resilience path: each micro-batch group draws
+    ``solve.latency`` (artificial delay) and ``solve.error`` before its
+    solve; a failed solve is retried once, and a second failure degrades
+    the group to the dense Corollary-1 bound fallback — every request
+    still gets an answer, stamped ``fallback="bound"`` and counted in
+    ``n_degraded``.  ``budget_s`` is a per-micro-batch solve budget: when
+    the running estimate (EWMA of observed solve seconds for that
+    (objective, mode) group) says the full solve would blow it, the group
+    goes straight to the bound fallback instead.  Both default off, and
+    with both off the records are bitwise identical to a run without
+    this machinery.
     """
     requests = list(requests)
     if batch_size < 1:
@@ -162,6 +186,19 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
     # lanes wasted re-solving the pad filler batch_size-wide per group)
     mixed = len({(id(o), m) for o, m in zip(objs, modes)}) > 1
     pad_to = None if mixed else batch_size
+    # the degradation target: dense Corollary-1 bound — the cheapest
+    # objective in the catalogue, solved without the cache so a degraded
+    # answer can never shadow a full one under the requested objective
+    fallback_obj = None
+    if faults is not None or budget_s is not None:
+        fallback_obj = resolve_objectives(("corollary1",))["corollary1"]
+
+    def _degrade(idxs):
+        recs = planner.plan_many([requests[i] for i in idxs], consts,
+                                 cache=None, pad_to=pad_to,
+                                 objective=fallback_obj, grid_mode="dense")
+        return [dataclasses.replace(r, fallback="bound") for r in recs]
+
     if warm and requests:
         warmed = set()
         # the first window's exact grouping: compiles the shapes the
@@ -179,21 +216,65 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
                                   consts, cache=None, pad_to=pad_to,
                                   objective=objs[idxs[0]],
                                   grid_mode=modes[idxs[0]])
+        if fallback_obj is not None:
+            # a degraded group may fire any time once chaos/budgets are
+            # on, so its kernel shape warms with everything else
+            planner.plan_many(requests[:batch_size], consts, cache=None,
+                              pad_to=pad_to, objective=fallback_obj,
+                              grid_mode="dense")
     hits0, misses0 = (cache.hits, cache.misses) if cache is not None \
         else (0, 0)
     records: List[Optional[PlanRecord]] = [None] * len(requests)
     n_batches = 0
+    n_degraded = 0
+    # per-(objective, mode) EWMA of observed full-solve seconds: the
+    # budget triage's estimate of what the NEXT group solve will cost
+    solve_est: Dict[Tuple[int, str], float] = {}
     batch_seconds: List[float] = []
     t0 = time.perf_counter()
     for lo in range(0, len(requests), batch_size):
         for idxs in _grouped(range(lo, min(lo + batch_size,
                                            len(requests)))):
+            gkey = (id(objs[idxs[0]]), modes[idxs[0]])
             tb = time.perf_counter()
-            recs = planner.plan_many(
-                [requests[i] for i in idxs], consts, cache=cache,
-                pad_to=pad_to, objective=objs[idxs[0]],
-                grid_mode=modes[idxs[0]])
-            batch_seconds.append(time.perf_counter() - tb)
+            degraded = False
+            if budget_s is not None \
+                    and solve_est.get(gkey, 0.0) > budget_s:
+                recs, degraded = _degrade(idxs), True
+            else:
+                try:
+                    if faults is not None:
+                        stall = faults.draw("solve.latency")
+                        if stall is not None:
+                            time.sleep(stall.duration_s)
+                        if faults.draw("solve.error") is not None:
+                            raise InjectedFault("solve.error")
+                    recs = planner.plan_many(
+                        [requests[i] for i in idxs], consts, cache=cache,
+                        pad_to=pad_to, objective=objs[idxs[0]],
+                        grid_mode=modes[idxs[0]])
+                except Exception:
+                    # one retry (the fault draw advances, so a transient
+                    # fault clears), then degrade to the bound fallback
+                    try:
+                        if faults is not None \
+                                and faults.draw("solve.error") is not None:
+                            raise InjectedFault("solve.error")
+                        recs = planner.plan_many(
+                            [requests[i] for i in idxs], consts,
+                            cache=cache, pad_to=pad_to,
+                            objective=objs[idxs[0]],
+                            grid_mode=modes[idxs[0]])
+                    except Exception:
+                        recs, degraded = _degrade(idxs), True
+            dt_b = time.perf_counter() - tb
+            batch_seconds.append(dt_b)
+            if degraded:
+                n_degraded += len(idxs)
+            elif budget_s is not None:
+                prev = solve_est.get(gkey)
+                solve_est[gkey] = dt_b if prev is None \
+                    else 0.5 * prev + 0.5 * dt_b
             for i, rec in zip(idxs, recs):
                 records[i] = rec
             n_batches += 1
@@ -212,7 +293,9 @@ def serve(requests: Sequence[Scenario], *, planner: FleetPlanner,
         requests_per_objective=per_objective,
         requests_per_grid_mode=per_mode,
         batch_p50_ms=b50 * 1e3, batch_p99_ms=b99 * 1e3,
-        batch_max_ms=(max(batch_seconds) * 1e3 if batch_seconds else 0.0))
+        batch_max_ms=(max(batch_seconds) * 1e3 if batch_seconds else 0.0),
+        n_degraded=n_degraded,
+        faults_injected=dict(faults.fires) if faults is not None else {})
 
 
 def _parse_models(spec: str) -> Sequence[str]:
@@ -248,12 +331,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--metrics-textfile", default=None,
                     help="write the run's Prometheus text exposition here "
                          "(repro_plan_server_* families + cache + traces)")
+    ap.add_argument("--budget-ms", type=float, default=0.0,
+                    help="per-micro-batch solve budget in ms (0 = off); "
+                         "groups whose estimated solve would blow it are "
+                         "degraded to the dense Corollary-1 bound fallback")
+    ap.add_argument("--chaos-spec", default=None,
+                    help="deterministic fault-injection spec, e.g. "
+                         "'seed=7,solve_error=0.2,solve_latency=0.1:5ms,"
+                         "cache_corrupt=0.05'")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     try:
         catalogue = resolve_objectives(args.objective)
         mode_mix = resolve_grid_modes(args.grid_mode)
+        faults = parse_chaos_spec(args.chaos_spec) \
+            if args.chaos_spec else None
     except ValueError as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -269,11 +362,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     grid_modes = [mode_mix[int(rng.integers(len(mode_mix)))]
                   for _ in requests]
     planner = FleetPlanner(grid_size=args.grid)
+    corruptor = None
+    if faults is not None and faults.enabled("cache.corrupt"):
+        corruptor = lambda: faults.draw("cache.corrupt") is not None  # noqa: E731
     cache = None if args.no_cache else PlanCache(
-        maxsize=args.cache_size, sig_digits=args.sig_digits)
+        maxsize=args.cache_size, sig_digits=args.sig_digits,
+        checksums=faults is not None, corruptor=corruptor)
     stats = serve(requests, planner=planner, consts=default_consts(),
                   cache=cache, batch_size=args.batch, objectives=objectives,
-                  grid_modes=grid_modes)
+                  grid_modes=grid_modes, faults=faults,
+                  budget_s=args.budget_ms / 1e3 if args.budget_ms > 0
+                  else None)
     print(f"served {stats.n_requests} plan requests in {stats.n_batches} "
           f"micro-batches of <= {args.batch}")
     print(f"throughput: {stats.plans_per_sec:,.0f} plans/sec "
@@ -295,6 +394,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if cache is not None:
         print(f"cache: {cache.hits} hits / {cache.misses} misses "
               f"(hit rate {stats.cache_hit_rate:.1%}, {len(cache)} entries)")
+        if cache.corruptions:
+            print(f"cache corruptions detected (re-solved): "
+                  f"{cache.corruptions}")
+    if faults is not None or args.budget_ms > 0:
+        fired = ", ".join(f"{p}={n}" for p, n in
+                          sorted(stats.faults_injected.items())) or "none"
+        n_ok = sum(r is not None for r in stats.records)
+        print(f"resilience: degraded={stats.n_degraded} "
+              f"(bound fallback), completed={n_ok}/{stats.n_requests}, "
+              f"faults fired: {fired}")
     if stats.records:
         sample = stats.records[0]
         print(f"sample plan: n_c={sample.n_c} rate={sample.rate} "

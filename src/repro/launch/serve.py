@@ -37,12 +37,13 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.chaos import parse_chaos_spec
 from repro.fleet import GRID_MODES
 from repro.obs import profile_capture
 from repro.serve import (ALL_MODELS, ALL_OBJECTIVES, PlanningService,
-                         ServiceConfig, mc_update_floor, parse_models,
-                         policy_spec, resolve_grid_modes, resolve_objectives,
-                         synth_requests)
+                         RequestShed, ServiceConfig, mc_update_floor,
+                         parse_models, policy_spec, resolve_grid_modes,
+                         resolve_objectives, synth_requests)
 
 
 def _parse_buckets(spec: str):
@@ -62,6 +63,8 @@ def run_service(args) -> int:
         objective_ids = tuple(resolve_objectives(args.objective))
         grid_modes = tuple(resolve_grid_modes(args.grid_mode))
         policy_spec(args.policy)  # fail fast on a typo'd policy id
+        if args.chaos_spec:
+            parse_chaos_spec(args.chaos_spec)  # usage-error on a typo
         config = ServiceConfig(
             grid_size=args.grid, batch_buckets=_parse_buckets(args.buckets),
             flush_interval=args.flush_ms / 1e3, objective_ids=objective_ids,
@@ -77,7 +80,17 @@ def run_service(args) -> int:
                 if args.mc_coarse_strides else None),
             mc_fine_radius=args.mc_fine_radius,
             mc_coarse_updates=args.mc_coarse_updates,
-            journal_path=args.journal)
+            journal_path=args.journal,
+            journal_max_bytes=args.journal_max_bytes,
+            journal_keep=args.journal_keep,
+            journal_fsync=args.journal_fsync,
+            max_pending=args.max_pending,
+            default_budget_s=(args.budget_ms / 1e3
+                              if args.budget_ms > 0 else None),
+            retry_attempts=args.retry_attempts,
+            breaker_threshold=args.breaker_threshold,
+            breaker_cooldown_s=args.breaker_cooldown_ms / 1e3,
+            chaos_spec=args.chaos_spec or None)
         requests = synth_requests(args.requests, seed=args.seed,
                                   dup_frac=args.dup, models=models,
                                   n_max=args.n_max)
@@ -117,15 +130,27 @@ def run_service(args) -> int:
     try:
         with profile_capture(args.profile_dir), service:
             futures = []
+            n_shed = 0
             for i, scenario in enumerate(requests):
-                if rng.random() < args.policy_frac:
-                    futures.append(service.submit(scenario))
-                else:
-                    obj = instances[i % len(instances)]
-                    mode = config.grid_modes[i % len(config.grid_modes)]
-                    futures.append(service.submit(scenario, objective=obj,
-                                                  grid_mode=mode))
-            records = [f.result(timeout=args.timeout) for f in futures]
+                try:
+                    if rng.random() < args.policy_frac:
+                        futures.append(service.submit(scenario))
+                    else:
+                        obj = instances[i % len(instances)]
+                        mode = config.grid_modes[i % len(config.grid_modes)]
+                        futures.append(service.submit(
+                            scenario, objective=obj, grid_mode=mode))
+                except RequestShed:
+                    n_shed += 1  # explicit overload rejection, not a bug
+            records = []
+            n_failed = 0
+            for f in futures:
+                try:
+                    records.append(f.result(timeout=args.timeout))
+                except Exception as e:  # noqa: BLE001 — counted, reported
+                    n_failed += 1
+                    print(f"request failed: {type(e).__name__}: {e}",
+                          file=sys.stderr)
     finally:
         dumper_stop.set()
         if dumper is not None:
@@ -143,6 +168,20 @@ def run_service(args) -> int:
     post = stats.counters.get("post_warmup_traces", 0)
     print(f"post-warmup jit traces: {post} "
           f"({'SLO met' if post == 0 else 'SLO VIOLATED'})")
+    res = stats.resilience
+    if n_shed or n_failed or res.get("fallbacks") \
+            or res.get("faults_injected") or res.get("retries"):
+        import collections
+        levels = collections.Counter(r.fallback for r in records)
+        print(f"resilience: {n_failed} failed, {n_shed} shed, "
+              f"levels {dict(levels)}; retries={res.get('retries', 0)} "
+              f"backoff={res.get('backoff_seconds', 0.0):.3f}s "
+              f"faults={res.get('faults_injected', {})}")
+        for key, b in sorted(res.get("breakers", {}).items()):
+            print(f"  breaker {key[0]}/{key[1]}: {b['state']} "
+                  f"(trips={b['trips']} probes={b['probes']} "
+                  f"recoveries={b['recoveries']})")
+    print(f"health: {service.health().state}")
     means = service.spans.phase_means_ms()
     breakdown = " ".join(f"{name}={means[name]:.2f}"
                          for name in ("batch_wait", "pad", "cache_lookup",
@@ -173,9 +212,11 @@ def run_service(args) -> int:
         print(f"metrics: wrote Prometheus textfile "
               f"{args.metrics_textfile}")
     if args.journal:
+        rotated = (f" ({service.journal.rotations} rotations)"
+                   if service.journal.rotations else "")
         print(f"journal: {service.journal.emitted} events appended to "
-              f"{args.journal}")
-    return 0 if post == 0 else 1
+              f"{args.journal}{rotated}")
+    return 0 if (post == 0 and n_failed == 0) else 1
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -255,6 +296,32 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--journal", default=None,
                     help="append audit events (warmup, drift, session "
                          "lifecycle) to this JSONL file")
+    ap.add_argument("--journal-max-bytes", type=int, default=0,
+                    help="rotate the journal file at this size, keeping "
+                         "--journal-keep rotated files (0 = never)")
+    ap.add_argument("--journal-keep", type=int, default=3,
+                    help="rotated journal files to keep")
+    ap.add_argument("--journal-fsync", action="store_true",
+                    help="fsync every journal event (durable crash "
+                         "journal; serialises on disk latency)")
+    ap.add_argument("--budget-ms", type=float, default=0.0,
+                    help="per-request enqueue-to-plan latency budget; "
+                         "requests the service can't solve in time "
+                         "degrade along the fallback ladder (0 = none)")
+    ap.add_argument("--chaos-spec", default=None,
+                    help="deterministic fault injection, e.g. 'seed=7,"
+                         "solve_error=0.2,solve_latency=0.1:25ms,"
+                         "cache_corrupt=0.05,queue_stall=0.02:10ms'")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="bound the ingestion queue; a full queue sheds "
+                         "new submits explicitly (0 = unbounded)")
+    ap.add_argument("--retry-attempts", type=int, default=3,
+                    help="solve attempts per chunk before degrading")
+    ap.add_argument("--breaker-threshold", type=int, default=5,
+                    help="consecutive failures tripping a per-"
+                         "(objective, grid mode) circuit breaker")
+    ap.add_argument("--breaker-cooldown-ms", type=float, default=250.0,
+                    help="open -> half-open probe cooldown")
     ap.add_argument("--profile-dir", default=None,
                     help="capture a jax.profiler trace of the serving "
                          "stream into this directory")

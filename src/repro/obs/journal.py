@@ -8,31 +8,59 @@ bounded in-memory ring (for ``tail()`` and the per-kind counters the
 metrics layer exports) and, when a path is given, are appended to a
 JSONL file one event per line — the exporter format the CLI's
 ``--journal`` flag wires up.
+
+The file sink is bounded and optionally durable: with ``max_bytes`` set
+the journal rotates size-based (``path`` -> ``path.1`` -> ... ->
+``path.<keep>``, oldest dropped) so a long-lived service can't fill the
+disk, and ``fsync=True`` fsyncs every appended event — the
+crash-journal posture, where the record of what the service decided
+must survive the service dying mid-decision.  :func:`read_jsonl` reads
+a rotated set back in emission order.
 """
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
 
+def _rotated_paths(path: str) -> List[str]:
+    """Existing rotated siblings of ``path`` (``path.N``), oldest
+    (highest N) first — prepend to ``path`` for full emission order."""
+    directory, name = os.path.split(path)
+    prefix = name + "."
+    indices = []
+    for entry in os.listdir(directory or "."):
+        if entry.startswith(prefix):
+            suffix = entry[len(prefix):]
+            if suffix.isdigit():
+                indices.append(int(suffix))
+    return [os.path.join(directory, f"{name}.{i}")
+            for i in sorted(indices, reverse=True)]
+
+
 def read_jsonl(path: str) -> List[dict]:
     """Parse a JSONL file back into event dicts (strict: a malformed
     line raises — an audit log that silently skips records is worse than
-    none)."""
+    none).  A rotated set (``path.N`` ... ``path.1`` + ``path``) is read
+    oldest-first, so callers see one continuous event stream."""
     out: List[dict] = []
-    with open(path) as f:
-        for i, line in enumerate(f):
-            line = line.strip()
-            if not line:
-                continue
-            try:
-                out.append(json.loads(line))
-            except json.JSONDecodeError as e:
-                raise ValueError(f"{path}:{i + 1}: bad JSONL line: {e}") \
-                    from None
+    for p in _rotated_paths(path) + [path]:
+        if p != path and not os.path.exists(p):
+            continue
+        with open(p) as f:
+            for i, line in enumerate(f):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError as e:
+                    raise ValueError(
+                        f"{p}:{i + 1}: bad JSONL line: {e}") from None
     return out
 
 
@@ -43,20 +71,48 @@ class EventJournal:
     correlated with external systems, unlike the spans' monotonic clock)
     and appends; the file (when configured) is opened lazily on first
     emit and written line-buffered so a crash loses at most the final
-    event.  ``close()`` (or context-manager exit) flushes and detaches
-    the sink; in-memory emission keeps working afterwards.
+    event.  ``max_bytes`` > 0 turns on size-based rotation keeping
+    ``keep`` rotated files; ``fsync=True`` makes every event durable
+    before ``emit`` returns.  ``close()`` (or context-manager exit)
+    flushes and detaches the sink; in-memory emission keeps working
+    afterwards.
     """
 
-    def __init__(self, capacity: int = 4096, path: Optional[str] = None):
+    def __init__(self, capacity: int = 4096, path: Optional[str] = None,
+                 *, max_bytes: int = 0, keep: int = 3,
+                 fsync: bool = False):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if max_bytes < 0:
+            raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
         self.path = path
+        self.max_bytes = int(max_bytes)
+        self.keep = int(keep)
+        self.fsync = bool(fsync)
+        self.rotations = 0
         self._lock = threading.Lock()
         self._ring: Deque[dict] = deque(maxlen=capacity)
         self._counts: Dict[str, int] = {}
         self._count = 0
         self._file = None
         self._closed = False
+
+    def _rotate_locked(self) -> None:
+        """Shift ``path`` -> ``path.1`` -> ... (lock held, file open).
+        The oldest file past ``keep`` is dropped."""
+        self._file.close()
+        self._file = None
+        oldest = f"{self.path}.{self.keep}"
+        if os.path.exists(oldest):
+            os.remove(oldest)
+        for i in range(self.keep - 1, 0, -1):
+            src = f"{self.path}.{i}"
+            if os.path.exists(src):
+                os.replace(src, f"{self.path}.{i + 1}")
+        os.replace(self.path, f"{self.path}.1")
+        self.rotations += 1
 
     def emit(self, kind: str, **fields) -> dict:
         event = {"ts": time.time(), "kind": str(kind), **fields}
@@ -70,6 +126,12 @@ class EventJournal:
                 if self._file is None:
                     self._file = open(self.path, "a", buffering=1)
                 self._file.write(line + "\n")
+                if self.fsync:
+                    self._file.flush()
+                    os.fsync(self._file.fileno())
+                if self.max_bytes > 0 \
+                        and self._file.tell() >= self.max_bytes:
+                    self._rotate_locked()
         return event
 
     def counts(self) -> Dict[str, int]:

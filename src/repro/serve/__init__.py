@@ -10,7 +10,8 @@ sessions when their observed channel drifts away from what the cached
 plan priced.  See ``README.md`` ("Serving") for the architecture sketch.
 """
 from repro.serve import export
-from repro.serve.batcher import MicroBatcher, PlanRequest, group_requests
+from repro.serve.batcher import (MicroBatcher, PlanRequest, QueueFull,
+                                 group_requests)
 from repro.serve.catalogue import (ALL_MODELS, ALL_OBJECTIVES,
                                    FEDERATED_KIND, LINK_FACTORIES,
                                    OBJECTIVE_FACTORIES, RATE_SET,
@@ -19,22 +20,33 @@ from repro.serve.catalogue import (ALL_MODELS, ALL_OBJECTIVES,
                                    resolve_objectives, synth_population,
                                    synth_requests)
 from repro.serve.policy import (AdmissionDecision, LinkAwarePolicy,
-                                PolicySpec, StaticPolicy, policy_spec,
+                                LoadSheddingPolicy, PolicySpec,
+                                StaticPolicy, policy_spec,
                                 register_policy, registered_policies,
                                 unregister_policy)
+from repro.serve.resilience import (BREAKER_STATES, FALLBACK_LEVELS,
+                                    HEALTH_STATES, CircuitBreaker,
+                                    DegradationExhausted, HealthReport,
+                                    RequestShed, ResilienceManager,
+                                    RetryPolicy, SolveTimeEstimator)
 from repro.serve.service import PlanningService, ServiceConfig
 from repro.serve.sessions import Session, SessionTracker, reestimate_link
 from repro.serve.stats import (FederatedRecorder, ServiceStats,
                                StatsRecorder, percentiles)
 
 __all__ = [
-    "ALL_MODELS", "ALL_OBJECTIVES", "AdmissionDecision", "FEDERATED_KIND",
-    "FederatedRecorder", "LINK_FACTORIES",
-    "LinkAwarePolicy", "MicroBatcher", "OBJECTIVE_FACTORIES",
-    "PlanRequest", "PlanningService", "PolicySpec", "RATE_SET",
+    "ALL_MODELS", "ALL_OBJECTIVES", "AdmissionDecision",
+    "BREAKER_STATES", "CircuitBreaker", "DegradationExhausted",
+    "FALLBACK_LEVELS", "FEDERATED_KIND",
+    "FederatedRecorder", "HEALTH_STATES", "HealthReport",
+    "LINK_FACTORIES",
+    "LinkAwarePolicy", "LoadSheddingPolicy", "MicroBatcher",
+    "OBJECTIVE_FACTORIES",
+    "PlanRequest", "PlanningService", "PolicySpec", "QueueFull",
+    "RATE_SET", "RequestShed", "ResilienceManager", "RetryPolicy",
     "ServiceConfig", "ServiceStats", "Session", "SessionTracker",
-    "StaticPolicy", "StatsRecorder", "default_consts", "export",
-    "group_requests",
+    "SolveTimeEstimator", "StaticPolicy", "StatsRecorder",
+    "default_consts", "export", "group_requests",
     "mc_update_floor", "parse_models", "percentiles", "policy_spec",
     "reestimate_link", "register_policy", "registered_policies",
     "resolve_grid_modes", "resolve_objectives", "synth_population",

@@ -36,6 +36,12 @@ from typing import Any, Callable, Deque, Hashable, List, Optional
 from repro.core.scenario import Scenario
 
 
+class QueueFull(RuntimeError):
+    """submit() refused: the ingestion queue is at ``max_pending``.
+    Raised to the PRODUCER immediately (shed, don't block) — the
+    service maps it to its admission-level RequestShed outcome."""
+
+
 @dataclass
 class PlanRequest:
     """One in-flight planning request.
@@ -54,6 +60,21 @@ class PlanRequest:
     #: admission-policy routing time spent BEFORE enqueue (seconds);
     #: reported on the request's span, outside the enqueue-to-plan SLO
     admit_s: float = 0.0
+    #: enqueue-to-plan latency budget in seconds (``None`` = no budget).
+    #: When the estimated solve time exceeds what remains of the budget,
+    #: the resilience layer degrades the request instead of solving it
+    #: late — see ``repro.serve.resilience``.
+    budget_s: Optional[float] = None
+
+    def remaining_budget(self, now: Optional[float] = None) \
+            -> Optional[float]:
+        """Seconds of budget left (negative = already blown), or
+        ``None`` for unbudgeted requests."""
+        if self.budget_s is None:
+            return None
+        if now is None:
+            now = time.perf_counter()
+        return self.budget_s - (now - self.enqueue_t)
 
     def group_key(self) -> Hashable:
         """Micro-batch grouping key: one jitted solve serves one
@@ -82,15 +103,27 @@ class MicroBatcher:
 
     def __init__(self, plan_group: Callable[[List[PlanRequest]], None], *,
                  max_batch: int = 256, flush_interval: float = 0.01,
+                 max_pending: int = 0, faults=None,
                  name: str = "plan-batcher"):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if flush_interval < 0:
             raise ValueError(
                 f"flush_interval must be >= 0, got {flush_interval}")
+        if max_pending < 0:
+            raise ValueError(
+                f"max_pending must be >= 0, got {max_pending}")
         self._plan_group = plan_group
         self.max_batch = max_batch
         self.flush_interval = flush_interval
+        #: ingestion-queue bound; 0 = unbounded.  A full queue REJECTS
+        #: (QueueFull from submit, immediately) rather than blocking the
+        #: producer or growing memory without limit.
+        self.max_pending = max_pending
+        #: optional repro.chaos.FaultPlan; the worker draws the
+        #: "queue.stall" point before planning each taken batch
+        self.faults = faults
+        self.rejections = 0       # submits refused by the queue bound
         self._name = name
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -115,6 +148,12 @@ class MicroBatcher:
             if self._stopping or self._thread is None:
                 raise RuntimeError(
                     f"{self._name} is not running; start() it first")
+            if (self.max_pending > 0
+                    and len(self._queue) >= self.max_pending):
+                self.rejections += 1
+                raise QueueFull(
+                    f"{self._name}: queue at capacity "
+                    f"({len(self._queue)}/{self.max_pending})")
             self._queue.append(request)
             self._cv.notify()
         return request.future
@@ -196,6 +235,10 @@ class MicroBatcher:
             batch = self._take_batch()
             if batch is None:
                 return
+            if self.faults is not None:
+                action = self.faults.draw("queue.stall")
+                if action is not None:
+                    time.sleep(action.duration_s)
             for group in group_requests(batch,
                                         key=PlanRequest.group_key):
                 self.flushes += 1

@@ -122,7 +122,8 @@ def cache_metrics(cache_stats: Dict[str, object]) -> List[Metric]:
     if not cache_stats:
         return []
     out: List[Metric] = []
-    for name in ("hits", "misses", "evictions", "invalidations"):
+    for name in ("hits", "misses", "evictions", "invalidations",
+                 "corruptions"):
         if name in cache_stats:
             out.append(Metric(f"repro_serve_cache_{name}_total", "counter",
                               f"plan cache {name}")
@@ -223,6 +224,117 @@ def federated_metrics(recorder) -> List[Metric]:
     return out
 
 
+def resilience_metrics(service: "PlanningService") -> List[Metric]:
+    """The resilience layer as ``repro_resilience_*`` families:
+
+    ================================================  =========  ========
+    metric                                            kind       labels
+    ================================================  =========  ========
+    ``repro_resilience_fallbacks_total``              counter    level
+    ``repro_resilience_degrade_reasons_total``        counter    reason
+    ``repro_resilience_retries_total``                counter    —
+    ``repro_resilience_backoff_seconds_total``        counter    —
+    ``repro_resilience_shed_total``                   counter    reason
+    ``repro_resilience_budget_exceeded_total``        counter    —
+    ``repro_resilience_exhausted_total``              counter    —
+    ``repro_resilience_breaker_state``                gauge      objective,
+                                                                 grid_mode
+    ``repro_resilience_breaker_{trips,probes,         counter    objective,
+    recoveries}_total``                                          grid_mode
+    ``repro_resilience_faults_injected_total``        counter    point
+    ``repro_resilience_health_state``                 gauge      —
+    ``repro_resilience_health``                       gauge      state
+    ================================================  =========  ========
+
+    Breaker state gauges encode closed=0 / open=1 / half_open=2;
+    ``health_state`` encodes STARTING=0 / READY=1 / DEGRADED=2 /
+    SHEDDING=3 (plus the one-hot ``health{state=...}`` for dashboards
+    that match on labels).  ``health()`` is evaluated at collect time,
+    so a scrape always sees current readiness.
+    """
+    from repro.serve.resilience import (BREAKER_STATES, FALLBACK_LEVELS,
+                                        HEALTH_STATES)
+
+    snap = service.resilience.snapshot()
+    health = service.health()
+    out: List[Metric] = []
+
+    # every ladder level is pre-declared at 0 (a dashboard's rate()
+    # needs the zero sample BEFORE the first degrade, not after)
+    m = Metric("repro_resilience_fallbacks_total", "counter",
+               "degraded responses per fallback level")
+    for level in FALLBACK_LEVELS[1:]:
+        m.add(float(snap["fallbacks"].get(level, 0)), level=level)
+    for level, n in sorted(snap["fallbacks"].items()):
+        if level not in FALLBACK_LEVELS[1:]:
+            m.add(float(n), level=str(level))
+    out.append(m)
+
+    m = Metric("repro_resilience_degrade_reasons_total", "counter",
+               "ladder entries per degrade reason")
+    for reason, n in sorted(snap["degrade_reasons"].items()):
+        m.add(float(n), reason=str(reason))
+    if m.samples:
+        out.append(m)
+
+    out.append(Metric("repro_resilience_retries_total", "counter",
+                      "transient solve retries")
+               .add(float(snap["retries"])))
+    out.append(Metric("repro_resilience_backoff_seconds_total", "counter",
+                      "cumulative retry backoff sleep")
+               .add(float(snap["backoff_seconds"])))
+    out.append(Metric("repro_resilience_budget_exceeded_total", "counter",
+                      "requests degraded for deadline-budget pressure")
+               .add(float(snap["budget_exceeded"])))
+    out.append(Metric("repro_resilience_exhausted_total", "counter",
+                      "requests that exhausted every ladder rung")
+               .add(float(snap["exhausted"])))
+
+    m = Metric("repro_resilience_shed_total", "counter",
+               "requests shed at admission, per reason")
+    for reason, n in sorted(snap["sheds"].items()):
+        m.add(float(n), reason=str(reason))
+    if m.samples:
+        out.append(m)
+
+    if snap["breakers"]:
+        state_codes = {s: i for i, s in enumerate(BREAKER_STATES)}
+        gauge = Metric("repro_resilience_breaker_state", "gauge",
+                       "circuit breaker state "
+                       "(0=closed, 1=open, 2=half_open)")
+        per = {name: Metric(f"repro_resilience_breaker_{name}_total",
+                            "counter", f"breaker {name}")
+               for name in ("trips", "probes", "recoveries")}
+        for (oid, mode), b in sorted(snap["breakers"].items()):
+            labels = dict(objective=str(oid), grid_mode=str(mode))
+            gauge.add(float(state_codes[b["state"]]), **labels)
+            for name in ("trips", "probes", "recoveries"):
+                per[name].add(float(b[name]), **labels)
+        out.append(gauge)
+        out.extend(per.values())
+
+    m = Metric("repro_resilience_faults_injected_total", "counter",
+               "chaos faults fired per injection point")
+    enabled = tuple(service.faults.rules) if service.faults is not None \
+        else ()
+    for point in sorted(set(enabled) | set(snap["faults_injected"])):
+        m.add(float(snap["faults_injected"].get(point, 0)),
+              point=str(point))
+    if m.samples:
+        out.append(m)
+
+    out.append(Metric("repro_resilience_health_state", "gauge",
+                      "service readiness (0=STARTING, 1=READY, "
+                      "2=DEGRADED, 3=SHEDDING)")
+               .add(float(health.code)))
+    one_hot = Metric("repro_resilience_health", "gauge",
+                     "service readiness, one-hot by state label")
+    for state in HEALTH_STATES:
+        one_hot.add(1.0 if state == health.state else 0.0, state=state)
+    out.append(one_hot)
+    return out
+
+
 def journal_metrics(journal: EventJournal) -> List[Metric]:
     """Lifetime per-kind event counts from the audit journal."""
     m = Metric("repro_serve_events_total", "counter",
@@ -250,6 +362,8 @@ def register_service_sources(registry: MetricsRegistry,
         "events", lambda: journal_metrics(service.journal))
     registry.register_source(
         "federated", lambda: federated_metrics(service.federated))
+    registry.register_source(
+        "resilience", lambda: resilience_metrics(service))
 
 
 def oneshot_metrics(stats, cache=None) -> MetricsRegistry:

@@ -38,10 +38,26 @@ from repro.core.scenario import Scenario
 
 @dataclass(frozen=True)
 class AdmissionDecision:
-    """What the policy chose for one request."""
+    """What the policy chose for one request.
+
+    ``action`` is the admission outcome: ``"accept"`` (plan it) or
+    ``"shed"`` (reject at the door — the service raises
+    ``RequestShed`` to the caller and counts the shed, same outcome as
+    a full bounded queue, decided by POLICY instead of capacity).
+    """
 
     objective_id: str
     grid_mode: str
+    action: str = "accept"
+
+    def __post_init__(self):
+        if self.action not in ("accept", "shed"):
+            raise ValueError(
+                f"action must be 'accept' or 'shed', got {self.action!r}")
+
+    @property
+    def accepted(self) -> bool:
+        return self.action == "accept"
 
 
 @dataclass(frozen=True)
@@ -139,3 +155,27 @@ class LinkAwarePolicy:
             objective_id = self.burst_objective_id
         mode = "refine" if load >= self.load_threshold else "dense"
         return AdmissionDecision(objective_id, mode)
+
+
+@register_policy
+@dataclass(frozen=True)
+class LoadSheddingPolicy:
+    """Wrap another registered policy with an overload circuit: once
+    the load signal (queued flush batches) reaches ``shed_load``, new
+    requests are SHED at admission instead of queued — the service's
+    bounded queue is the hard backstop, this is the polite early
+    rejection that keeps the queue's tail latency inside the budget.
+    """
+
+    policy_id = "load_shedding"
+
+    shed_load: float = 4.0
+    inner_policy_id: str = "link_aware"
+
+    def admit(self, scenario: Scenario, *, load: float) -> AdmissionDecision:
+        inner = policy_spec(self.inner_policy_id).cls().admit(
+            scenario, load=load)
+        if load >= self.shed_load:
+            return AdmissionDecision(inner.objective_id, inner.grid_mode,
+                                     action="shed")
+        return inner

@@ -1,0 +1,469 @@
+"""Deadline-budgeted resilience for the planning service.
+
+The paper's premise is a hard completion deadline; this module makes the
+*service* honour one.  Four mechanisms, composed by
+:class:`ResilienceManager` and threaded through
+``PlanningService._plan_group``:
+
+* **Deadline budgets + degradation ladder.**  Each ``PlanRequest`` may
+  carry a latency budget.  When the estimated solve time (a quantile of
+  the per-(objective, grid_mode) solve-seconds histogram) exceeds the
+  remaining budget, the request degrades along an explicit ladder
+  instead of blowing its deadline::
+
+      full ──> cached ──> bound ──> last_good ──> (exhausted)
+
+  ``cached`` re-serves a previously solved plan for the same quantised
+  scenario (a non-counting ``PlanCache.peek``, so hit-rate stats stay
+  honest); ``bound`` solves the cheap dense Corollary-1 objective (whose
+  bucket shapes are part of ``warmup()``'s sweep, so the fallback never
+  jit-traces post-warmup); ``last_good`` re-serves the most recent
+  record the (objective, grid_mode) group produced.  The level taken is
+  stamped on the returned record's ``fallback`` field and counted per
+  level.
+
+* **Retry + circuit breaker.**  Transient solve exceptions retry with
+  decorrelated-jitter exponential backoff.  ``breaker_threshold``
+  consecutive failures trip the per-(objective, grid_mode)
+  :class:`CircuitBreaker` (closed -> open -> half-open), routing that
+  group straight to the ladder until a half-open probe solve succeeds.
+
+* **Overload shedding.**  The micro-batcher's ingestion queue is
+  bounded; an over-capacity ``submit`` raises :class:`RequestShed`
+  (explicit, immediate) rather than growing memory without limit.
+
+* **Health.**  ``STARTING``/``READY``/``DEGRADED``/``SHEDDING`` derived
+  from warmup state, queue depth, breaker states, and drift backlog.
+
+Everything here is observable through ``repro_resilience_*`` metric
+families (see ``repro.serve.export``) and journal events for every
+trip, probe, and degrade.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.obs.hist import LogHistogram
+
+# Degradation ladder levels, in the order they are attempted.  "full" is
+# the non-degraded fast path; "exhausted" (every rung failed) surfaces
+# as a DegradationExhausted on the request future and is counted, never
+# raised into the worker.
+FALLBACK_LEVELS = ("full", "cached", "bound", "last_good")
+
+# Circuit breaker states.  Transitions never skip a state:
+#   closed -> open (threshold consecutive failures)
+#   open -> half_open (cooldown elapsed; next allow() is the probe)
+#   half_open -> closed (probe succeeded) | open (probe failed)
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half_open"
+BREAKER_STATES = (CLOSED, OPEN, HALF_OPEN)
+
+# Health/readiness states, most-healthy last.  Numeric codes are stable
+# export values for the repro_resilience_health_state gauge.
+HEALTH_STATES = ("STARTING", "READY", "DEGRADED", "SHEDDING")
+HEALTH_CODES = {name: i for i, name in enumerate(HEALTH_STATES)}
+
+
+class RequestShed(RuntimeError):
+    """Request rejected at admission (bounded queue full or the
+    admission policy returned a shed decision)."""
+
+
+class DegradationExhausted(RuntimeError):
+    """Every rung of the degradation ladder failed for a request."""
+
+
+@dataclass(frozen=True)
+class HealthReport:
+    """Point-in-time readiness: ``state`` plus why."""
+
+    state: str
+    reasons: Tuple[str, ...] = ()
+
+    @property
+    def code(self) -> int:
+        return HEALTH_CODES[self.state]
+
+    @property
+    def ready(self) -> bool:
+        return self.state in ("READY", "DEGRADED")
+
+
+class CircuitBreaker:
+    """closed -> open -> half-open breaker over consecutive failures.
+
+    ``allow()`` answers "may this attempt proceed?"; in the open state
+    it flips to half-open once ``cooldown_s`` has elapsed and admits
+    exactly one probe.  ``record_success``/``record_failure`` feed the
+    outcome back.  The clock is injectable so tests drive time
+    explicitly.  Thread-safe; transitions fire ``on_transition(old,
+    new)`` outside any lock the caller holds but inside the breaker's
+    own (keep callbacks cheap and non-reentrant).
+    """
+
+    def __init__(self, threshold: int = 5, cooldown_s: float = 1.0, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 on_transition: Optional[
+                     Callable[[str, str], None]] = None):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        if cooldown_s < 0.0:
+            raise ValueError(
+                f"cooldown_s must be >= 0, got {cooldown_s}")
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self._clock = clock
+        self._on_transition = on_transition
+        self._lock = threading.Lock()
+        self.state = CLOSED
+        self.failures = 0        # consecutive, while closed
+        self.opened_at: Optional[float] = None
+        self.trips = 0           # closed -> open transitions
+        self.probes = 0          # attempts admitted while half-open
+        self.recoveries = 0      # half_open -> closed transitions
+
+    def _transition(self, new: str) -> None:
+        old, self.state = self.state, new
+        if new == OPEN:
+            self.opened_at = self._clock()
+            if old == CLOSED:
+                self.trips += 1
+        elif new == CLOSED:
+            self.failures = 0
+            self.opened_at = None
+            if old == HALF_OPEN:
+                self.recoveries += 1
+        if self._on_transition is not None:
+            self._on_transition(old, new)
+
+    def allow(self) -> bool:
+        """True if an attempt may proceed now.  In the open state this
+        is what promotes to half-open after the cooldown; the admitted
+        attempt is the probe."""
+        with self._lock:
+            if self.state == CLOSED:
+                return True
+            if self.state == OPEN:
+                if self._clock() - self.opened_at < self.cooldown_s:
+                    return False
+                self._transition(HALF_OPEN)
+            # half-open: admit the (single-worker) probe.
+            self.probes += 1
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            if self.state == HALF_OPEN:
+                self._transition(CLOSED)
+            else:
+                self.failures = 0
+
+    def record_failure(self) -> None:
+        with self._lock:
+            if self.state == HALF_OPEN:
+                self._transition(OPEN)
+            elif self.state == CLOSED:
+                self.failures += 1
+                if self.failures >= self.threshold:
+                    self._transition(OPEN)
+            else:  # already open: re-arm the cooldown window
+                self.opened_at = self._clock()
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Decorrelated-jitter exponential backoff (Brooker): each delay is
+    ``min(cap, uniform(base, prev * 3))``, seeded so a given service
+    run's backoff sequence is reproducible."""
+
+    attempts: int = 3
+    base_s: float = 0.02
+    cap_s: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.attempts < 1:
+            raise ValueError(
+                f"attempts must be >= 1, got {self.attempts}")
+        if self.base_s <= 0.0 or self.cap_s < self.base_s:
+            raise ValueError(
+                f"need 0 < base_s <= cap_s, got base_s={self.base_s} "
+                f"cap_s={self.cap_s}")
+
+    def delays(self) -> "_DelayStream":
+        return _DelayStream(self)
+
+
+class _DelayStream:
+    """Stateful per-chunk backoff sequence from a :class:`RetryPolicy`."""
+
+    def __init__(self, policy: RetryPolicy):
+        self._policy = policy
+        self._rng = random.Random(policy.seed)
+        self._prev = policy.base_s
+
+    def next_delay(self) -> float:
+        p = self._policy
+        self._prev = min(p.cap_s,
+                         self._rng.uniform(p.base_s, self._prev * 3.0))
+        return self._prev
+
+
+class SolveTimeEstimator:
+    """Per-(objective, grid_mode) histogram of observed solve seconds;
+    ``estimate`` is the configured quantile (pessimistic by default) so
+    budget checks predict the slow tail, not the mean.  No observations
+    -> 0.0: be optimistic and attempt the real solve."""
+
+    def __init__(self, quantile: float = 90.0):
+        if not 0.0 < quantile <= 100.0:
+            raise ValueError(
+                f"quantile must be in (0, 100], got {quantile}")
+        self.quantile = float(quantile)
+        self._lock = threading.Lock()
+        self._hists: Dict[Tuple[str, str], LogHistogram] = {}
+
+    def observe(self, objective_id: str, grid_mode: str,
+                seconds: float) -> None:
+        key = (objective_id, grid_mode)
+        with self._lock:
+            hist = self._hists.get(key)
+            if hist is None:
+                hist = self._hists[key] = LogHistogram(1e-5, 1e2, 100)
+            hist.record(max(float(seconds), 0.0))
+
+    def estimate(self, objective_id: str, grid_mode: str) -> float:
+        with self._lock:
+            hist = self._hists.get((objective_id, grid_mode))
+            if hist is None or hist.count == 0:
+                return 0.0
+            return float(hist.percentile(self.quantile))
+
+
+class ResilienceManager:
+    """Composes breaker + retry + estimator + ladder accounting for the
+    service.  The service owns the *mechanics* (cache peeks, fallback
+    solves, future resolution); this class owns the *decisions* and all
+    the counters the ``repro_resilience_*`` export reads."""
+
+    def __init__(self, *,
+                 retry: RetryPolicy = RetryPolicy(),
+                 breaker_threshold: int = 5,
+                 breaker_cooldown_s: float = 1.0,
+                 budget_quantile: float = 90.0,
+                 budget_safety: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 journal=None,
+                 faults=None):
+        if budget_safety <= 0.0:
+            raise ValueError(
+                f"budget_safety must be > 0, got {budget_safety}")
+        self.retry = retry
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.budget_safety = float(budget_safety)
+        self.estimator = SolveTimeEstimator(quantile=budget_quantile)
+        self._clock = clock
+        self._journal = journal
+        self.faults = faults
+        self._lock = threading.Lock()
+        self._breakers: Dict[Tuple[str, str], CircuitBreaker] = {}
+        self._last_good: Dict[Tuple[str, str], object] = {}
+        self.fallbacks: Dict[str, int] = {}      # level -> count
+        self.degrade_reasons: Dict[str, int] = {}
+        self.retries = 0
+        self.backoff_seconds = 0.0
+        self.sheds: Dict[str, int] = {}          # reason -> count
+        self.budget_exceeded = 0
+        self.exhausted = 0
+        self._last_health = "STARTING"
+
+    # -- journal helper ------------------------------------------------
+    def _emit(self, kind: str, **fields) -> None:
+        if self._journal is not None:
+            self._journal.emit(kind, **fields)
+
+    # -- circuit breakers ----------------------------------------------
+    def breaker(self, objective_id: str,
+                grid_mode: str) -> CircuitBreaker:
+        key = (objective_id, grid_mode)
+        with self._lock:
+            brk = self._breakers.get(key)
+            if brk is None:
+                def _on_transition(old, new, _key=key):
+                    self._emit("breaker", objective=_key[0],
+                               grid_mode=_key[1], from_state=old,
+                               to_state=new)
+                brk = CircuitBreaker(
+                    self.breaker_threshold, self.breaker_cooldown_s,
+                    clock=self._clock, on_transition=_on_transition)
+                self._breakers[key] = brk
+            return brk
+
+    def breaker_states(self) -> Dict[Tuple[str, str], str]:
+        with self._lock:
+            return {k: b.state for k, b in self._breakers.items()}
+
+    # -- budget triage -------------------------------------------------
+    def split_over_budget(self, requests, objective_id: str,
+                          grid_mode: str):
+        """Partition a micro-batch group into (solve-now, degrade-now)
+        by remaining budget vs the estimated solve time.  Requests with
+        no budget always solve."""
+        est = (self.estimator.estimate(objective_id, grid_mode)
+               * self.budget_safety)
+        now = time.perf_counter()
+        keep, degrade = [], []
+        for req in requests:
+            remaining = req.remaining_budget(now)
+            if remaining is not None and remaining <= est:
+                degrade.append(req)
+            else:
+                keep.append(req)
+        if degrade:
+            self.note_budget_exceeded(len(degrade))
+        return keep, degrade
+
+    def note_budget_exceeded(self, n: int = 1) -> None:
+        with self._lock:
+            self.budget_exceeded += n
+
+    # -- retry loop ----------------------------------------------------
+    def run_attempts(self, objective_id: str, grid_mode: str,
+                     fn: Callable[[], object],
+                     sleep: Callable[[float], None] = time.sleep):
+        """Run ``fn`` under fault injection, retry/backoff, and breaker
+        accounting.  Raises the last exception once attempts are
+        exhausted or the breaker denies further tries; the caller then
+        walks the degradation ladder."""
+        brk = self.breaker(objective_id, grid_mode)
+        delays = self.retry.delays()
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                if self.faults is not None:
+                    action = self.faults.draw("solve.latency")
+                    if action is not None:
+                        self._emit("fault", point=action.point,
+                                   index=action.index,
+                                   duration_s=action.duration_s)
+                        sleep(action.duration_s)
+                    action = self.faults.draw("solve.error")
+                    if action is not None:
+                        self._emit("fault", point=action.point,
+                                   index=action.index)
+                        from repro.chaos import InjectedFault
+                        raise InjectedFault(
+                            f"injected solve fault "
+                            f"(index={action.index})")
+                out = fn()
+            except Exception as exc:
+                brk.record_failure()
+                self._emit("solve_failed", objective=objective_id,
+                           grid_mode=grid_mode, attempt=attempt,
+                           error=f"{type(exc).__name__}: {exc}")
+                if attempt >= self.retry.attempts or not brk.allow():
+                    raise
+                delay = delays.next_delay()
+                with self._lock:
+                    self.retries += 1
+                    self.backoff_seconds += delay
+                sleep(delay)
+                continue
+            brk.record_success()
+            return out
+
+    # -- ladder accounting ---------------------------------------------
+    def note_last_good(self, objective_id: str, grid_mode: str,
+                       record) -> None:
+        with self._lock:
+            self._last_good[(objective_id, grid_mode)] = record
+
+    def last_good(self, objective_id: str, grid_mode: str):
+        with self._lock:
+            return self._last_good.get((objective_id, grid_mode))
+
+    def count_fallback(self, level: str, reason: str,
+                       n: int = 1) -> None:
+        with self._lock:
+            self.fallbacks[level] = self.fallbacks.get(level, 0) + n
+            self.degrade_reasons[reason] = (
+                self.degrade_reasons.get(reason, 0) + n)
+        self._emit("degrade", level=level, reason=reason, count=n)
+
+    def note_exhausted(self, n: int = 1) -> None:
+        with self._lock:
+            self.exhausted += n
+
+    def note_shed(self, reason: str, n: int = 1) -> None:
+        with self._lock:
+            self.sheds[reason] = self.sheds.get(reason, 0) + n
+        self._emit("shed", reason=reason, count=n)
+
+    # -- health --------------------------------------------------------
+    def health(self, *, warmed: bool, queue_depth: int,
+               max_pending: int, drift_backlog: int = 0,
+               drift_backlog_limit: int = 8) -> HealthReport:
+        reasons: List[str] = []
+        if not warmed:
+            state = "STARTING"
+            reasons.append("warmup incomplete")
+        elif max_pending > 0 and queue_depth >= max_pending:
+            state = "SHEDDING"
+            reasons.append(
+                f"queue at capacity ({queue_depth}/{max_pending})")
+        else:
+            state = "READY"
+            open_keys = [k for k, s in self.breaker_states().items()
+                         if s != CLOSED]
+            if open_keys:
+                state = "DEGRADED"
+                reasons.extend(
+                    f"breaker {oid}/{mode} not closed"
+                    for oid, mode in open_keys)
+            if drift_backlog >= max(1, drift_backlog_limit):
+                state = "DEGRADED"
+                reasons.append(
+                    f"drift backlog {drift_backlog} >= "
+                    f"{drift_backlog_limit}")
+        report = HealthReport(state=state, reasons=tuple(reasons))
+        with self._lock:
+            changed = report.state != self._last_health
+            self._last_health = report.state
+        if changed:
+            self._emit("health", state=report.state,
+                       reasons=list(report.reasons))
+        return report
+
+    # -- export snapshot -----------------------------------------------
+    def snapshot(self) -> Dict[str, object]:
+        """Counters for ``repro_resilience_*`` export and the CLI
+        report.  Breaker states come out as label tuples."""
+        with self._lock:
+            snap: Dict[str, object] = {
+                "fallbacks": dict(self.fallbacks),
+                "degrade_reasons": dict(self.degrade_reasons),
+                "retries": self.retries,
+                "backoff_seconds": self.backoff_seconds,
+                "sheds": dict(self.sheds),
+                "budget_exceeded": self.budget_exceeded,
+                "exhausted": self.exhausted,
+                "breakers": {
+                    k: {"state": b.state, "trips": b.trips,
+                        "probes": b.probes,
+                        "recoveries": b.recoveries}
+                    for k, b in self._breakers.items()},
+                "health": self._last_health,
+            }
+        if self.faults is not None:
+            snap["faults_injected"] = dict(self.faults.fires)
+        else:
+            snap["faults_injected"] = {}
+        return snap

@@ -53,6 +53,7 @@ from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Tuple
 
+from repro.chaos import FaultPlan, parse_chaos_spec
 from repro.core.bounds import BoundConstants
 from repro.core.scenario import Scenario
 from repro.federated.round import (FEDERATED_TOKEN, RoundPlanner,
@@ -63,12 +64,15 @@ from repro.fleet.tracing import trace_delta
 from repro.obs import (EventJournal, MetricsRegistry, RequestSpan,
                        SpanRecorder, solve_delta)
 from repro.serve import export
-from repro.serve.batcher import MicroBatcher, PlanRequest
+from repro.serve.batcher import MicroBatcher, PlanRequest, QueueFull
 from repro.serve.catalogue import (ALL_MODELS, FEDERATED_KIND,
                                    default_consts, mc_update_floor,
                                    resolve_objectives, synth_population,
                                    synth_requests)
 from repro.serve.policy import policy_spec
+from repro.serve.resilience import (DegradationExhausted, HealthReport,
+                                    RequestShed, ResilienceManager,
+                                    RetryPolicy)
 from repro.serve.sessions import Session, SessionTracker, reestimate_link
 from repro.serve.stats import FederatedRecorder, ServiceStats, StatsRecorder
 
@@ -134,6 +138,39 @@ class ServiceConfig:
     journal_capacity: int = 4096
     #: when set, every journal event is also appended to this JSONL file
     journal_path: Optional[str] = None
+    #: journal file rotation: rotate at ``journal_max_bytes`` (0 = never),
+    #: keeping ``journal_keep`` rotated files; ``journal_fsync`` makes
+    #: every appended event durable (fsync per flush) — the crash-journal
+    #: posture, off by default because it serialises on disk latency
+    journal_max_bytes: int = 0
+    journal_keep: int = 3
+    journal_fsync: bool = False
+    #: ingestion-queue bound (0 = unbounded): a full queue SHEDS new
+    #: submits (RequestShed) instead of growing without limit
+    max_pending: int = 0
+    #: default enqueue-to-plan budget applied to submits that don't
+    #: carry one (None = unbudgeted); the degradation ladder fires when
+    #: the estimated solve would overrun what remains of the budget
+    default_budget_s: Optional[float] = None
+    #: transient-solve retry: total attempts per chunk, then the
+    #: decorrelated-jitter backoff's base/cap (seconds)
+    retry_attempts: int = 3
+    retry_base_s: float = 0.02
+    retry_cap_s: float = 0.5
+    #: per-(objective, grid_mode) circuit breaker: consecutive failures
+    #: to trip, and the open->half-open probe cooldown (seconds)
+    breaker_threshold: int = 5
+    breaker_cooldown_s: float = 1.0
+    #: solve-time estimate used against budgets: histogram quantile and
+    #: a safety multiplier on top of it
+    budget_quantile: float = 90.0
+    budget_safety: float = 1.0
+    #: sessions with a pending drift re-plan before health reports
+    #: DEGRADED
+    health_drift_backlog: int = 8
+    #: deterministic fault injection (repro.chaos.parse_chaos_spec
+    #: grammar); None/empty = chaos-free
+    chaos_spec: Optional[str] = None
 
     def __post_init__(self):
         if not self.batch_buckets:
@@ -165,6 +202,24 @@ class ServiceConfig:
         if self.mc_impl not in MC_IMPLS:
             raise ValueError(
                 f"unknown mc_impl {self.mc_impl!r}; valid: {MC_IMPLS}")
+        if self.max_pending < 0:
+            raise ValueError(
+                f"max_pending must be >= 0, got {self.max_pending}")
+        if self.default_budget_s is not None and self.default_budget_s < 0:
+            raise ValueError(
+                f"default_budget_s must be >= 0, got "
+                f"{self.default_budget_s}")
+        if self.retry_attempts < 1:
+            raise ValueError(
+                f"retry_attempts must be >= 1, got {self.retry_attempts}")
+        if self.breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got "
+                f"{self.breaker_threshold}")
+        if self.journal_max_bytes < 0 or self.journal_keep < 1:
+            raise ValueError(
+                f"need journal_max_bytes >= 0 and journal_keep >= 1, got "
+                f"{self.journal_max_bytes}/{self.journal_keep}")
 
     @property
     def max_batch(self) -> int:
@@ -182,19 +237,28 @@ class PlanningService:
     def __init__(self, config: Optional[ServiceConfig] = None,
                  consts: Optional[BoundConstants] = None, *,
                  objectives: Optional[Dict[str, Any]] = None,
-                 policy: Any = None):
+                 policy: Any = None, faults: Optional[FaultPlan] = None):
         self.config = config if config is not None else ServiceConfig()
         self.consts = consts if consts is not None else default_consts()
         self.consts.validate()
         cfg = self.config
+        if faults is None and cfg.chaos_spec:
+            faults = parse_chaos_spec(cfg.chaos_spec)
+        self.faults = faults
         # pow2 refine widths: the width set becomes enumerable, which is
         # what lets warmup() cover EVERY shape the stream can reach
         self.planner = FleetPlanner(grid_size=cfg.grid_size,
                                     shard=cfg.shard,
                                     pow2_refine_widths=True,
                                     mc_impl=cfg.mc_impl)
+        corruptor = None
+        if faults is not None and faults.enabled("cache.corrupt"):
+            corruptor = (
+                lambda: faults.draw("cache.corrupt") is not None)
         self.cache = PlanCache(maxsize=cfg.cache_size,
-                               sig_digits=cfg.sig_digits)
+                               sig_digits=cfg.sig_digits,
+                               checksums=faults is not None,
+                               corruptor=corruptor)
         if objectives is not None:
             self.objectives = dict(objectives)
         else:
@@ -222,10 +286,33 @@ class PlanningService:
         self.recorder = StatsRecorder()
         self.spans = SpanRecorder(capacity=cfg.span_capacity)
         self.journal = EventJournal(capacity=cfg.journal_capacity,
-                                    path=cfg.journal_path)
+                                    path=cfg.journal_path,
+                                    max_bytes=cfg.journal_max_bytes,
+                                    keep=cfg.journal_keep,
+                                    fsync=cfg.journal_fsync)
         self.batcher = MicroBatcher(self._plan_group,
                                     max_batch=cfg.max_batch,
-                                    flush_interval=cfg.flush_interval)
+                                    flush_interval=cfg.flush_interval,
+                                    max_pending=cfg.max_pending,
+                                    faults=faults)
+        self.resilience = ResilienceManager(
+            retry=RetryPolicy(attempts=cfg.retry_attempts,
+                              base_s=cfg.retry_base_s,
+                              cap_s=cfg.retry_cap_s,
+                              seed=faults.seed if faults else 0),
+            breaker_threshold=cfg.breaker_threshold,
+            breaker_cooldown_s=cfg.breaker_cooldown_s,
+            budget_quantile=cfg.budget_quantile,
+            budget_safety=cfg.budget_safety,
+            journal=self.journal, faults=faults)
+        # the degradation ladder's "bound" rung: the cheap dense
+        # Corollary-1 solve.  Reuse the SERVED corollary1 instance when
+        # there is one — objective identity keys the jitted executables,
+        # so reuse is what keeps the fallback inside the warmed shapes.
+        self._fallback_objective = self.objectives.get("corollary1")
+        if self._fallback_objective is None:
+            self._fallback_objective = \
+                resolve_objectives(("corollary1",))["corollary1"]
         self.metrics = MetricsRegistry()
         export.register_service_sources(self.metrics, self)
         self._lock = threading.Lock()
@@ -275,6 +362,22 @@ class PlanningService:
                     total += traces
                     self.recorder.record_bucket(oid, mode, bucket,
                                                 compiles=traces)
+        # the degradation ladder's "bound" rung solves (corollary1,
+        # dense) at the same chunk shapes — warm it when the configured
+        # sweep above didn't already cover that exact objective instance,
+        # so a degraded request never pays a post-warmup trace
+        fallback_covered = (
+            self._fallback_objective is self.objectives.get("corollary1")
+            and "dense" in cfg.grid_modes)
+        if not fallback_covered:
+            for bucket in cfg.batch_buckets:
+                traces = self.planner.warm(
+                    scenarios[:bucket], self.consts,
+                    objective=self._fallback_objective, grid_mode="dense",
+                    pad_to=bucket)
+                total += traces
+                self.recorder.record_bucket("corollary1", "dense", bucket,
+                                            compiles=traces)
         if cfg.population_buckets:
             # federated rounds use the catalogue rate set too, but draw
             # through synth_population so the warm batch carries the
@@ -321,11 +424,15 @@ class PlanningService:
 
     def _admit(self, scenario: Scenario, objective, grid_mode):
         """Fill whichever of (objective, grid_mode) the caller left to
-        the admission policy, and validate the result."""
+        the admission policy, and validate the result.  The fourth
+        element is the admission ACTION ("accept"/"shed") — policies
+        only decide it for requests they actually routed."""
         cfg = self.config
+        action = "accept"
         if objective is None or grid_mode is None:
             load = self.batcher.depth / cfg.max_batch
             decision = self.policy.admit(scenario, load=load)
+            action = getattr(decision, "action", "accept")
             if objective is None:
                 objective = decision.objective_id
             if grid_mode is None:
@@ -335,23 +442,44 @@ class PlanningService:
             raise ValueError(
                 f"grid mode {grid_mode!r} is not served; configured: "
                 f"{list(cfg.grid_modes)}")
-        return oid, inst, grid_mode
+        return oid, inst, grid_mode, action
 
     def submit(self, scenario: Scenario, *, objective: Any = None,
                grid_mode: Optional[str] = None,
-               session_id: Optional[str] = None) -> "Future":
+               session_id: Optional[str] = None,
+               budget_s: Optional[float] = None) -> "Future":
         """Enqueue one planning request; returns a future resolving to
         its :class:`~repro.fleet.planner.PlanRecord`.  ``objective`` may
         be a served instance, a registry id, or ``None``/``grid_mode``
-        ``None`` to let the admission policy decide."""
+        ``None`` to let the admission policy decide.  ``budget_s`` caps
+        the enqueue-to-plan latency (default from the config): requests
+        the service can't solve inside the budget degrade along the
+        fallback ladder instead of arriving late.
+
+        Raises :class:`~repro.serve.resilience.RequestShed` when the
+        admission policy sheds the request or the bounded ingestion
+        queue is full — explicit rejection, never silent queuing past
+        capacity."""
         t_admit = time.perf_counter()
-        _, inst, mode = self._admit(scenario, objective, grid_mode)
+        _, inst, mode, action = self._admit(scenario, objective, grid_mode)
+        if action == "shed":
+            self.recorder.count("shed")
+            self.resilience.note_shed("policy")
+            raise RequestShed("admission policy shed the request "
+                              f"(queue depth {self.batcher.depth})")
         admit_s = time.perf_counter() - t_admit
+        if budget_s is None:
+            budget_s = self.config.default_budget_s
         request = PlanRequest(scenario=scenario, objective=inst,
                               grid_mode=mode, session_id=session_id,
-                              admit_s=admit_s)
+                              admit_s=admit_s, budget_s=budget_s)
+        try:
+            self.batcher.submit(request)
+        except QueueFull as exc:
+            self.recorder.count("shed")
+            self.resilience.note_shed("queue_full")
+            raise RequestShed(str(exc)) from None
         self.recorder.count("requests")
-        self.batcher.submit(request)
         return request.future
 
     def _population_bucket(self, n: int) -> int:
@@ -450,49 +578,173 @@ class PlanningService:
         objective = requests[0].objective
         mode = requests[0].grid_mode
         oid, _ = self._resolve_objective(objective)
-        lo = 0
-        for bucket in self._chunk_buckets(len(requests)):
-            chunk = requests[lo:lo + bucket]
-            lo += len(chunk)
-            t_chunk = time.perf_counter()
-            timings: Dict[str, float] = {}
-            with trace_delta() as traces, solve_delta() as solve:
-                records = self.planner.plan_many(
-                    [r.scenario for r in chunk], self.consts,
-                    cache=self.cache, pad_to=bucket, objective=objective,
-                    grid_mode=mode, timings=timings)
-            t_planned = time.perf_counter()
-            self.recorder.record_bucket(oid, mode, bucket,
-                                        requests=len(chunk), batches=1,
-                                        compiles=traces.total)
-            self.recorder.count("batches")
-            self.recorder.count("planned", len(chunk))
-            if traces.total and self.warmed:
-                self.recorder.count("post_warmup_traces", traces.total)
-            for request, record in zip(chunk, records):
-                if request.session_id is not None:
-                    self._deliver_to_session(request.session_id, record)
-                request.future.set_result(record)
-            t_end = time.perf_counter()
+        res = self.resilience
 
-            cache_s = timings.get("cache_lookup_s", 0.0)
-            solve_s = timings.get("solve_s", 0.0)
-            pad_s = max(0.0, (t_planned - t_chunk) - cache_s - solve_s)
-            resolve_s = max(0.0, (t_end - t_chunk)
-                            - (pad_s + cache_s + solve_s))
-            device_s = min(solve.device_s, solve_s)
-            key = (oid, mode, bucket)
-            for request in chunk:
-                latency = t_end - request.enqueue_t
-                self.recorder.record_latency(latency, key=key)
-                self.spans.record(RequestSpan(
-                    objective=oid, grid_mode=mode, bucket=bucket,
-                    enqueue_t=request.enqueue_t,
-                    admit_s=request.admit_s,
-                    batch_wait_s=t_chunk - request.enqueue_t,
-                    pad_s=pad_s, cache_lookup_s=cache_s,
-                    solve_s=solve_s, solve_device_s=device_s,
-                    resolve_s=resolve_s, latency_s=latency))
+        # Resilience triage: budget-exhausted requests degrade instead
+        # of solving late, and an open breaker routes the whole group to
+        # the ladder (allow() is also what promotes open -> half-open
+        # after the cooldown, making this solve the probe).  With no
+        # budgets, no faults, and a closed breaker this adds nothing to
+        # the path: same plan_many, bitwise-identical records.
+        degraded = []  # (request, reason) pairs for the ladder
+        solve_reqs, over_budget = res.split_over_budget(requests, oid, mode)
+        degraded.extend((r, "budget") for r in over_budget)
+        if solve_reqs and not res.breaker(oid, mode).allow():
+            degraded.extend((r, "breaker_open") for r in solve_reqs)
+            solve_reqs = []
+
+        lo = 0
+        for bucket in (self._chunk_buckets(len(solve_reqs))
+                       if solve_reqs else ()):
+            chunk = solve_reqs[lo:lo + bucket]
+            lo += len(chunk)
+            try:
+                self._solve_chunk(oid, mode, bucket, chunk, objective)
+            except Exception:  # noqa: BLE001 — retries exhausted: degrade
+                degraded.extend((r, "solve_failed") for r in chunk)
+        if degraded:
+            self._degrade_requests(oid, mode, objective, degraded)
+
+    def _solve_chunk(self, oid: str, mode: str, bucket: int, chunk,
+                     objective) -> None:
+        """Solve one padded chunk (under retry/fault injection), resolve
+        its futures, and record its spans.  Raises once retries are
+        exhausted — the caller sends the chunk down the ladder."""
+        res = self.resilience
+        t_chunk = time.perf_counter()
+        timings: Dict[str, float] = {}
+
+        def _attempt():
+            timings.clear()
+            return self.planner.plan_many(
+                [r.scenario for r in chunk], self.consts,
+                cache=self.cache, pad_to=bucket, objective=objective,
+                grid_mode=mode, timings=timings)
+
+        with trace_delta() as traces, solve_delta() as solve:
+            records = res.run_attempts(oid, mode, _attempt)
+        t_planned = time.perf_counter()
+        self.recorder.record_bucket(oid, mode, bucket,
+                                    requests=len(chunk), batches=1,
+                                    compiles=traces.total)
+        self.recorder.count("batches")
+        self.recorder.count("planned", len(chunk))
+        if traces.total and self.warmed:
+            self.recorder.count("post_warmup_traces", traces.total)
+        for request, record in zip(chunk, records):
+            if request.session_id is not None:
+                self._deliver_to_session(request.session_id, record)
+            request.future.set_result(record)
+        t_end = time.perf_counter()
+
+        cache_s = timings.get("cache_lookup_s", 0.0)
+        solve_s = timings.get("solve_s", 0.0)
+        res.estimator.observe(oid, mode, solve_s)
+        if records:
+            res.note_last_good(oid, mode, records[-1])
+        pad_s = max(0.0, (t_planned - t_chunk) - cache_s - solve_s)
+        resolve_s = max(0.0, (t_end - t_chunk)
+                        - (pad_s + cache_s + solve_s))
+        device_s = min(solve.device_s, solve_s)
+        key = (oid, mode, bucket)
+        for request in chunk:
+            latency = t_end - request.enqueue_t
+            self.recorder.record_latency(latency, key=key)
+            self.spans.record(RequestSpan(
+                objective=oid, grid_mode=mode, bucket=bucket,
+                enqueue_t=request.enqueue_t,
+                admit_s=request.admit_s,
+                batch_wait_s=t_chunk - request.enqueue_t,
+                pad_s=pad_s, cache_lookup_s=cache_s,
+                solve_s=solve_s, solve_device_s=device_s,
+                resolve_s=resolve_s, latency_s=latency))
+
+    def _finish_degraded(self, request, record, oid: str, mode: str,
+                         t_start: float) -> None:
+        """Resolve one degraded request: deliver, count, span (bucket 0
+        marks ladder-served requests; phases still sum to latency)."""
+        if request.session_id is not None:
+            self._deliver_to_session(request.session_id, record)
+        request.future.set_result(record)
+        t_end = time.perf_counter()
+        latency = t_end - request.enqueue_t
+        self.recorder.count("planned")
+        self.recorder.count("degraded")
+        self.recorder.record_latency(latency, key=(oid, mode, 0))
+        batch_wait = max(0.0, t_start - request.enqueue_t)
+        self.spans.record(RequestSpan(
+            objective=oid, grid_mode=mode, bucket=0,
+            enqueue_t=request.enqueue_t, admit_s=request.admit_s,
+            batch_wait_s=batch_wait, pad_s=0.0, cache_lookup_s=0.0,
+            solve_s=0.0, solve_device_s=0.0,
+            resolve_s=max(0.0, latency - batch_wait),
+            latency_s=latency))
+
+    def _degrade_requests(self, oid: str, mode: str, objective,
+                          pairs) -> None:
+        """Walk the fallback ladder for requests that can't take (or
+        survived retries of) the real solve: cached -> bound ->
+        last_good, stamping and counting the level that answered.  A
+        request only errors (DegradationExhausted) when every rung comes
+        up empty — the 100%-completion guarantee under chaos."""
+        res = self.resilience
+        t_start = time.perf_counter()
+        context = self.planner.cache_context(self.consts, mode)
+        remaining = []
+        for request, reason in pairs:
+            cached = self.cache.peek(request.scenario, context=context,
+                                     objective=objective)
+            if cached is not None:
+                res.count_fallback("cached", reason)
+                self._finish_degraded(
+                    request,
+                    dataclasses.replace(cached, fallback="cached"),
+                    oid, mode, t_start)
+            else:
+                remaining.append((request, reason))
+        if not remaining:
+            return
+        # bound rung: batched dense Corollary-1 at warmed chunk shapes
+        try:
+            lo = 0
+            for bucket in self._chunk_buckets(len(remaining)):
+                chunk = remaining[lo:lo + bucket]
+                lo += len(chunk)
+                with trace_delta() as traces:
+                    records = self.planner.plan_many(
+                        [r.scenario for r, _ in chunk], self.consts,
+                        cache=self.cache, pad_to=bucket,
+                        objective=self._fallback_objective,
+                        grid_mode="dense")
+                self.recorder.record_bucket(
+                    "corollary1", "dense", bucket,
+                    requests=len(chunk), batches=1, compiles=traces.total)
+                if traces.total and self.warmed:
+                    self.recorder.count("post_warmup_traces", traces.total)
+                for (request, reason), record in zip(chunk, records):
+                    res.count_fallback("bound", reason)
+                    self._finish_degraded(
+                        request,
+                        dataclasses.replace(record, fallback="bound"),
+                        oid, mode, t_start)
+            return
+        except Exception:  # noqa: BLE001 — bound rung failed: last rung
+            pass
+        last = res.last_good(oid, mode)
+        for request, reason in remaining:
+            if request.future.done():
+                continue
+            if last is not None:
+                res.count_fallback("last_good", reason)
+                self._finish_degraded(
+                    request,
+                    dataclasses.replace(last, fallback="last_good"),
+                    oid, mode, t_start)
+            else:
+                res.note_exhausted()
+                request.future.set_exception(DegradationExhausted(
+                    f"no fallback available for ({oid}, {mode}): "
+                    f"reason={reason}"))
 
     # -- sessions and drift -------------------------------------------------
 
@@ -502,7 +754,7 @@ class PlanningService:
         """Register a live session and enqueue its first plan.  The
         returned future resolves to the initial plan; the session keeps
         tracking the latest one (``service.session(id).plan``)."""
-        _, inst, mode = self._admit(scenario, objective, grid_mode)
+        _, inst, mode, _ = self._admit(scenario, objective, grid_mode)
         session = Session(session_id=session_id, scenario=scenario,
                           objective=inst, grid_mode=mode)
         self.sessions.open(session)
@@ -579,6 +831,17 @@ class PlanningService:
 
     # -- observability ------------------------------------------------------
 
+    def health(self) -> HealthReport:
+        """STARTING/READY/DEGRADED/SHEDDING readiness, derived from
+        warmup state, queue depth vs the bound, breaker states, and the
+        drift re-plan backlog.  State changes land in the journal."""
+        return self.resilience.health(
+            warmed=self.warmed,
+            queue_depth=self.batcher.depth,
+            max_pending=self.config.max_pending,
+            drift_backlog=self.sessions.pending_replans(),
+            drift_backlog_limit=self.config.health_drift_backlog)
+
     def stats(self) -> ServiceStats:
         self.recorder.count("sessions_open", 0)  # ensure key exists
         snapshot = self.recorder.snapshot(queue_depth=self.batcher.depth,
@@ -586,12 +849,15 @@ class PlanningService:
         snapshot.counters["sessions_open"] = len(self.sessions)
         snapshot.counters["idle_ticks"] = self.batcher.idle_ticks
         snapshot.counters.setdefault("post_warmup_traces", 0)
+        snapshot.counters.setdefault("shed", 0)
+        snapshot.counters.setdefault("degraded", 0)
         snapshot.counters["warmup_traces"] = self.warmup_traces
         for cause, n in self.batcher.flush_causes.items():
             snapshot.counters[f"flushes_{cause}"] = n
         return dataclasses.replace(
             snapshot, phases=self.spans.totals(),
-            solve_fraction=self.spans.solve_fraction)
+            solve_fraction=self.spans.solve_fraction,
+            resilience=self.resilience.snapshot())
 
     def prometheus_text(self) -> str:
         """The full Prometheus text exposition across every source."""

@@ -154,6 +154,13 @@ class SessionTracker:
         with self._lock:
             return len(self._sessions)
 
+    def pending_replans(self) -> int:
+        """Sessions with a plan in flight (drift re-plan or first plan)
+        — the service's drift-backlog health signal."""
+        with self._lock:
+            return sum(1 for s in self._sessions.values()
+                       if s.replan_pending)
+
     def drifted(self, session: Session) -> bool:
         """True when the session's observed loss EWMA has moved more than
         ``drift_threshold`` away from its CURRENT plan's priced loss."""

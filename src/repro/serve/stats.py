@@ -67,6 +67,11 @@ class ServiceStats:
     #: serialised per-(objective, grid_mode, bucket) latency histograms,
     #: keyed "objective/grid_mode/bucket" (JSON-friendly)
     histograms: Dict[str, Dict[str, object]] = field(default_factory=dict)
+    #: resilience snapshot (ResilienceManager.snapshot()): fallback
+    #: counts by level, retry/backoff totals, breaker states, sheds,
+    #: injected-fault counts, health; empty for recorders outside a
+    #: service
+    resilience: Dict[str, object] = field(default_factory=dict)
 
 
 class StatsRecorder:

@@ -232,6 +232,37 @@ def test_event_journal_serialises_non_json_fields(tmp_path):
     assert event["kind"] == "session_open"   # default=str made it through
 
 
+def test_event_journal_rotates_by_size_and_reads_back_in_order(tmp_path):
+    import os
+    path = tmp_path / "rot.jsonl"
+    # each event line is ~60 bytes: 2-3 events per rotated file
+    with EventJournal(path=str(path), max_bytes=150, keep=2) as journal:
+        for i in range(20):
+            journal.emit("tick", i=i)
+    assert journal.rotations > 1
+    files = sorted(p.name for p in tmp_path.iterdir())
+    assert files == ["rot.jsonl", "rot.jsonl.1", "rot.jsonl.2"]
+    # keep=2 bounded the disk: older rotations were DROPPED...
+    events = read_jsonl(str(path))
+    assert len(events) < 20
+    # ... and the survivors read back as one contiguous, ordered stream
+    idx = [e["i"] for e in events]
+    assert idx == list(range(idx[0], 20))
+    assert os.path.getsize(path) < 150 + 80   # live file stays bounded
+
+
+def test_event_journal_fsync_and_validation(tmp_path):
+    path = tmp_path / "durable.jsonl"
+    with EventJournal(path=str(path), fsync=True) as journal:
+        journal.emit("decision", what="replan")
+        # durable before emit returns: visible without close()/flush()
+        assert read_jsonl(str(path)) == journal.tail(1)
+    with pytest.raises(ValueError, match="max_bytes"):
+        EventJournal(max_bytes=-1)
+    with pytest.raises(ValueError, match="keep"):
+        EventJournal(keep=0)
+
+
 # ---------------------------------------------------------------------------
 # Prometheus render / parse
 # ---------------------------------------------------------------------------
